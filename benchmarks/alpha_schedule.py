@@ -1,0 +1,27 @@
+"""Beyond-paper: the moving-rate schedule the thesis proposes (§4.1.3 — "a
+schedule for changing alpha based on training stage may be more optimal than
+a constant alpha"). Compares constant alpha against a high->low anneal."""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_STEPS, CSV_HEADER, run_config
+
+
+def main(quick: bool = True):
+    print("# alpha schedule (beyond-paper, thesis §4.1.3): constant vs annealed")
+    print(CSV_HEADER)
+    results = []
+    p = 0.125
+    for label, kw in [
+        ("EG-const-0.5", dict(alpha=0.5)),
+        ("EG-const-0.9", dict(alpha=0.9)),
+        ("EG-anneal-0.9to0.1", dict(alpha=0.9, alpha_final=0.1,
+                                    alpha_decay_steps=BENCH_STEPS)),
+    ]:
+        r = run_config("elastic_gossip", 4, p=p, label=label, task="mnist", **kw)
+        print(r.csv(), flush=True)
+        results.append(r)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Communication-cost accounting (the paper's central claim, quantified):
+expected egress bytes per worker per step for every method, at the assigned
+architectures' parameter sizes, plus the measured per-chip collective bytes
+from the dry-run artifacts when present."""
+from __future__ import annotations
+
+import glob
+import json
+
+from repro.common.config import ProtocolConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.core.protocols import comm_cost
+
+
+def main(quick: bool = True):
+    print("# Communication cost: bytes/worker/step (analytic, bf16 params)")
+    print("arch,params_B,allreduce,easgd_p=1/32,elastic_gossip_p=1/32,ratio_ar_over_eg")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        pb = cfg.param_count() * 2
+        ar = comm_cost(ProtocolConfig(method="allreduce"), pb, 8).bytes_per_step
+        ea = comm_cost(ProtocolConfig(method="easgd", comm_probability=1 / 32), pb, 8).bytes_per_step
+        eg = comm_cost(ProtocolConfig(method="elastic_gossip", comm_probability=1 / 32),
+                       pb, 8).bytes_per_step
+        print(f"{arch},{cfg.param_count()/1e9:.2f},{ar:.3e},{ea:.3e},{eg:.3e},{ar/eg:.1f}")
+
+    files = sorted(glob.glob("experiments/dryrun/pod16x16/*train*.json"))
+    if files:
+        print("\n# Measured per-chip collective bytes (dry-run HLO)")
+        print("arch,program,collective_bytes_per_chip,breakdown")
+        for f in files:
+            r = json.load(open(f))
+            if r.get("status") == "ok":
+                print(f"{r['arch']},{r['program']},{r['collective_bytes_per_chip']:.3e},"
+                      f"\"{r['collective_breakdown']}\"")
+    return []
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Shared harness for the paper-table benchmarks.
+
+Runs the exact-semantics simulation engine (Alg. 1-6 incl. NAG + communication
+probability, repro.core.gossip_sim) on synthetic MNIST-like / CIFAR-like data
+(offline container — see repro/data/synthetic.py; real IDX files are used
+automatically if present). Scale knobs default to CPU-feasible sizes; the
+paper's trends (relative ordering of methods) are what we validate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import OptimizerConfig, ProtocolConfig
+from repro.core.gossip_sim import SimTrainer
+from repro.data.partition import batches_for_step, partition_iid
+from repro.data.synthetic import Dataset, load_cifar_like, load_mnist
+from repro.models import simple
+
+BENCH_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "400"))
+BENCH_HIDDEN = int(os.environ.get("REPRO_BENCH_HIDDEN", "256"))
+EFFECTIVE_BATCH = 128          # paper: effective batch 128 across workers
+
+
+@dataclasses.dataclass
+class Result:
+    label: str
+    method: str
+    workers: int
+    p: float
+    tau: int
+    alpha: float
+    rank0_acc: float
+    aggregate_acc: float
+    final_loss: float
+    steps: int
+    seconds: float
+    comm_events: int
+
+    def csv(self) -> str:
+        return (f"{self.label},{self.method},{self.workers},{self.p},{self.tau},"
+                f"{self.alpha},{self.rank0_acc:.4f},{self.aggregate_acc:.4f},"
+                f"{self.final_loss:.4f},{self.steps},{self.seconds:.1f},{self.comm_events}")
+
+
+CSV_HEADER = ("label,method,workers,p,tau,alpha,rank0_acc,aggregate_acc,"
+              "final_loss,steps,seconds,comm_events")
+
+
+def _mnist_model(seed: int):
+    params, _ = simple.init_mlp(jax.random.PRNGKey(seed), in_dim=784,
+                                hidden=BENCH_HIDDEN, depth=3, num_classes=10)
+    return params, simple.mlp_logits
+
+
+def _cifar_model(seed: int):
+    params, _ = simple.init_cnn(jax.random.PRNGKey(seed), num_classes=10, width=16)
+    return params, simple.cnn_logits
+
+
+def run_config(method: str, workers: int, *, p: float = 0.0, tau: int = 0,
+               alpha: float = 0.5, steps: int = 0, label: str = "",
+               task: str = "mnist", seed: int = 0, lr: Optional[float] = None,
+               momentum: Optional[float] = None, alpha_final: float = -1.0,
+               alpha_decay_steps: int = 0,
+               train: Optional[Dataset] = None, test: Optional[Dataset] = None) -> Result:
+    steps = steps or BENCH_STEPS
+    if task == "mnist":
+        if train is None:
+            train, test = load_mnist(num_train=25600, num_test=4000)
+        params0, apply_fn = _mnist_model(seed)
+        lr = 1e-3 if lr is None else lr
+        momentum = 0.99 if momentum is None else momentum
+    else:
+        if train is None:
+            train, test = load_cifar_like(num_train=12800, num_test=2000)
+        params0, apply_fn = _cifar_model(seed)
+        lr = 0.01 if lr is None else lr
+        momentum = 0.9 if momentum is None else momentum
+
+    proto_kw = {}
+    if method not in ("allreduce", "none"):
+        proto_kw = {"comm_probability": p, "comm_period": tau}
+    proto = ProtocolConfig(method=method, moving_rate=alpha, topology="uniform",
+                           moving_rate_final=alpha_final,
+                           alpha_decay_steps=alpha_decay_steps, **proto_kw)
+    opt = OptimizerConfig(name="nag", learning_rate=lr, momentum=momentum)
+
+    def loss_fn(prm, x, y):
+        return simple.xent_loss(apply_fn(prm, x), y)
+
+    trainer = SimTrainer(loss_fn, workers, proto, opt)
+    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (workers,) + a.shape), params0)
+    state = trainer.init(stacked, seed)
+    shards = partition_iid(train, workers, seed)
+    per_worker = EFFECTIVE_BATCH // workers
+    t0 = time.time()
+    last_loss = float("nan")
+    for i in range(steps):
+        x, y = batches_for_step(shards, i, per_worker)
+        state, m = trainer.step(state, jnp.asarray(x), jnp.asarray(y))
+        last_loss = float(m["loss_mean"])
+    seconds = time.time() - t0
+
+    xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
+    rank0 = trainer.rank0_params(state)
+    agg = trainer.aggregate_params(state)
+    acc0 = float(simple.accuracy(apply_fn(rank0, xt), yt))
+    acca = float(simple.accuracy(apply_fn(agg, xt), yt))
+    return Result(label or f"{method}-{workers}", method, workers, p, tau, alpha,
+                  acc0, acca, last_loss, steps, seconds,
+                  int(state.proto.comm_rounds))

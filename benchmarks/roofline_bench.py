@@ -1,0 +1,47 @@
+"""Roofline table (EXPERIMENTS.md §Roofline): reads the dry-run artifacts and
+prints the three terms, dominant bottleneck, and useful-FLOPs ratio per
+(arch x shape x program x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = ("mesh,arch,shape,program,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,model_flops,useful_flops_fraction,mfu_upper_bound,"
+          "peak_mem_GB,fits_16GB")
+
+
+def rows(root: str = "experiments/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(root, "*", "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            out.append({"raw": f"{r.get('mesh')},{r.get('arch')},{r.get('shape')},"
+                               f"{r.get('program')},ERROR,,,,,,,,"})
+            continue
+        peak = (r.get("peak_memory_bytes") or 0) / 1024**3
+        out.append({
+            "raw": (f"{r['mesh']},{r['arch']},{r['shape']},{r['program']},"
+                    f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},{r['t_collective_s']:.4f},"
+                    f"{r['bottleneck']},{r['model_flops']:.3e},"
+                    f"{r['useful_flops_fraction']:.3f},{r['mfu_upper_bound']:.4f},"
+                    f"{peak:.2f},{peak < 16.0}"),
+            "rec": r,
+        })
+    return out
+
+
+def main(quick: bool = True):
+    print("# Roofline terms from dry-run artifacts")
+    print(HEADER)
+    rs = rows()
+    for r in rs:
+        print(r["raw"])
+    if not rs:
+        print("# (no dry-run artifacts found — run repro.launch.dryrun first)")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

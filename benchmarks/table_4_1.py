@@ -1,0 +1,32 @@
+"""Paper Table 4.1: All-reduce / No-Communication / Elastic Gossip /
+Gossiping SGD on the MNIST task, |W| in {4, 8}, communication-probability
+sweep. alpha = 0.5 for all Elastic Gossip rows (as in the paper)."""
+from __future__ import annotations
+
+from benchmarks.common import CSV_HEADER, run_config
+
+
+def configs(quick: bool = True):
+    ps = [0.125, 0.03125] if quick else [0.125, 0.03125, 0.0078125, 0.001953125]
+    rows = [("AR-4", "allreduce", 4, 0.0), ("NC-4", "none", 4, 0.0)]
+    for p in ps:
+        rows.append((f"EG-4-{p:.3f}", "elastic_gossip", 4, p))
+        rows.append((f"GS-4-{p:.3f}", "gossiping_pull", 4, p))
+    rows.append((f"EG-8-{ps[-1]:.3f}", "elastic_gossip", 8, ps[-1]))
+    rows.append((f"GS-8-{ps[-1]:.3f}", "gossiping_pull", 8, ps[-1]))
+    return rows
+
+
+def main(quick: bool = True):
+    print("# Table 4.1 — MNIST(-like): AR vs NC vs EG vs GS")
+    print(CSV_HEADER)
+    results = []
+    for label, method, W, p in configs(quick):
+        r = run_config(method, W, p=p, alpha=0.5, label=label, task="mnist")
+        print(r.csv(), flush=True)
+        results.append(r)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table 4.2 / Fig 4.4: the effect of moving rate alpha on Elastic
+Gossip (W=4). Paper finding: alpha=0.5 is a safe choice; extremes degrade."""
+from __future__ import annotations
+
+from benchmarks.common import CSV_HEADER, run_config
+
+ALPHAS = (0.05, 0.25, 0.5, 0.75, 0.95)
+
+
+def main(quick: bool = True):
+    print("# Table 4.2 — moving-rate sweep (Elastic Gossip, W=4)")
+    print(CSV_HEADER)
+    results = []
+    p = 0.03125
+    for a in (ALPHAS if not quick else (0.05, 0.5, 0.95)):
+        r = run_config("elastic_gossip", 4, p=p, alpha=a,
+                       label=f"EG-4-{p:.4f}-{a:.2f}", task="mnist")
+        print(r.csv(), flush=True)
+        results.append(r)
+    return results
+
+
+if __name__ == "__main__":
+    main()

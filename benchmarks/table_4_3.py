@@ -1,0 +1,25 @@
+"""Paper Table 4.3: CIFAR-10(-like) CNN comparison, W=4: All-reduce vs
+Elastic Gossip vs Gossiping SGD over communication probabilities."""
+from __future__ import annotations
+
+from benchmarks.common import CSV_HEADER, run_config
+
+
+def main(quick: bool = True):
+    print("# Table 4.3 — CIFAR-like CNN: AR vs EG vs GS (W=4)")
+    print(CSV_HEADER)
+    results = []
+    rows = [("AR-4", "allreduce", 0.0)]
+    ps = [0.125] if quick else [0.125, 0.03125, 0.0078125]
+    for p in ps:
+        rows.append((f"EG-4-{p:.3f}", "elastic_gossip", p))
+        rows.append((f"GS-4-{p:.3f}", "gossiping_pull", p))
+    for label, method, p in rows:
+        r = run_config(method, 4, p=p, alpha=0.5, label=label, task="cifar")
+        print(r.csv(), flush=True)
+        results.append(r)
+    return results
+
+
+if __name__ == "__main__":
+    main()

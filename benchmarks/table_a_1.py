@@ -1,0 +1,24 @@
+"""Paper Table A.1: Bernoulli communication probability p vs deterministic
+period tau at matched expected cost (tau_eff = 1/p), Gossiping SGD, W=4.
+Paper finding: deterministic tau slightly better."""
+from __future__ import annotations
+
+from benchmarks.common import CSV_HEADER, run_config
+
+
+def main(quick: bool = True):
+    print("# Table A.1 — p vs tau at matched expected communication")
+    print(CSV_HEADER)
+    results = []
+    taus = [8] if quick else [8, 32, 128]
+    for tau in taus:
+        r_tau = run_config("gossiping_pull", 4, tau=tau, label=f"GS-tau{tau}", task="mnist")
+        r_p = run_config("gossiping_pull", 4, p=1.0 / tau, label=f"GS-p{1.0/tau:.4f}", task="mnist")
+        print(r_tau.csv(), flush=True)
+        print(r_p.csv(), flush=True)
+        results += [r_tau, r_p]
+    return results
+
+
+if __name__ == "__main__":
+    main()

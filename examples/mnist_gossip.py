@@ -1,0 +1,22 @@
+"""The paper's core experiment, end to end: the MNIST MLP (§4.1) trained with
+Elastic Gossip vs Gossiping SGD vs All-reduce on 4 workers (exact Alg. 4/5
+semantics via the simulation engine), reporting Rank-0 and Aggregate accuracy
+like Table 4.1.
+
+    PYTHONPATH=src REPRO_BENCH_STEPS=400 python examples/mnist_gossip.py
+"""
+from benchmarks.common import CSV_HEADER, run_config
+
+
+def main():
+    print(CSV_HEADER)
+    for label, method, p in [("AR-4", "allreduce", 0.0),
+                             ("EG-4-0.125", "elastic_gossip", 0.125),
+                             ("GS-4-0.125", "gossiping_pull", 0.125),
+                             ("NC-4", "none", 0.0)]:
+        r = run_config(method, 4, p=p, alpha=0.5, label=label, task="mnist")
+        print(r.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

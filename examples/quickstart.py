@@ -1,0 +1,33 @@
+"""Quickstart: train a reduced TinyLlama with Elastic Gossip across 4
+simulated workers on CPU, compare against All-reduce, and report the
+consensus (aggregate) model's loss.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.launch.train import run  # noqa: E402
+
+
+def main():
+    print("== Elastic Gossip (p=0.25, alpha=0.5), 4 workers ==")
+    _, hist_eg = run("tinyllama_1_1b", reduced=True, steps=40, method="elastic_gossip",
+                     p=0.25, tau=0, alpha=0.5, workers=4, global_batch=8, seq=64,
+                     lr=3e-3)
+    print("\n== All-reduce SGD baseline (same data, same init) ==")
+    _, hist_ar = run("tinyllama_1_1b", reduced=True, steps=40, method="allreduce",
+                     p=0.0, tau=0, alpha=0.5, workers=4, global_batch=8, seq=64,
+                     lr=3e-3)
+    print(f"\nfinal loss: elastic_gossip={hist_eg[-1]['loss']:.4f} "
+          f"allreduce={hist_ar[-1]['loss']:.4f}")
+    print("Elastic Gossip reaches comparable loss while communicating ~1/4 "
+          "of the steps, pairwise instead of all-to-all (paper Tables 4.1/4.3).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serve a reduced model with batched decode requests: prefill a prompt batch,
+then stream tokens with the KV-cache serve engine (greedy sampling).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2_9b --tokens 16
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import MeshConfig
+from repro.configs import ARCH_IDS, get_reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tr
+from repro.serving.engine import make_serve_program
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    mesh_cfg = MeshConfig(data=1, model=1, pods=1, workers_per_pod=1)
+    mesh = make_host_mesh(1)
+    prog = make_serve_program(mesh, mesh_cfg, cfg, batch=args.batch,
+                              max_len=64, param_dtype=jnp.float32,
+                              cache_dtype=jnp.float32, with_prefill=True)
+    params, _ = tr.init_lm(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    if cfg.audio is not None:
+        prompt = jax.random.randint(key, (args.batch, cfg.audio.num_codebooks, 8), 0, cfg.vocab_size)
+        cond = jnp.zeros((args.batch, cfg.audio.num_cond_tokens, cfg.d_model))
+    else:
+        prompt = jax.random.randint(key, (args.batch, 8), 0, cfg.vocab_size)
+        cond = (jnp.zeros((args.batch, cfg.vlm.num_image_tokens, cfg.vlm.image_embed_dim))
+                if cfg.vlm is not None else None)
+
+    logits, cache = prog.prefill_fn(params, prompt, cond)
+    print(f"prefilled batch={args.batch}; decoding {args.tokens} tokens...")
+    outs = []
+    for _ in range(args.tokens):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = nxt[..., None] if cfg.audio is None else nxt[..., None]
+        if cfg.audio is not None and tok.ndim == 2:
+            tok = tok[:, :, None]
+        logits, cache = prog.decode_fn(params, cache, tok, cond)
+        outs.append(nxt)
+    stream = jnp.stack(outs, axis=-1)
+    print("decoded token ids (request 0):", stream.reshape(args.batch, -1)[0][:16])
+    print("OK — batched KV-cache decode ran end to end.")
+
+
+if __name__ == "__main__":
+    main()

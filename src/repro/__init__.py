@@ -1,0 +1,1 @@
+from repro import common  # noqa: F401

@@ -1,0 +1,242 @@
+"""Optimized-HLO cost model with while-loop trip-count accounting.
+
+``compiled.cost_analysis()`` visits each while body ONCE, which silently
+drops the x num_layers factor for scan-over-layers models (verified
+empirically — DESIGN.md §7). This module re-derives the three roofline
+inputs by walking the HLO text:
+
+- flops: dot/cdot instructions (2 * prod(result) * contracted size),
+  multiplied by enclosing while trip counts;
+- memory bytes: fusion-boundary traffic (result + operands of every
+  top-level instruction), x trip counts;
+- collective bytes: operand volume of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, x trip counts. Shapes in
+  post-SPMD HLO are per-device, so this is per-chip traffic.
+
+Conditionals (lax.switch branches, e.g. the gossip round selector) count the
+most expensive branch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INST_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(shape_str: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape_str: str
+    op: str
+    rest: str            # text after the opening paren (operands + attrs)
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.shape_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+
+    def find(self, name: str) -> Optional[Instruction]:
+        for i in self.instructions:
+            if i.name == name:
+                return i
+        return None
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Costs") -> "Costs":
+        bd = dict(self.collective_breakdown)
+        for k, v in o.collective_breakdown.items():
+            bd[k] = bd.get(k, 0.0) + v
+        return Costs(self.flops + o.flops, self.bytes_accessed + o.bytes_accessed,
+                     self.collective_bytes + o.collective_bytes, bd)
+
+    def scale(self, m: float) -> "Costs":
+        return Costs(self.flops * m, self.bytes_accessed * m, self.collective_bytes * m,
+                     {k: v * m for k, v in self.collective_breakdown.items()})
+
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "add-dependency", "copy-start", "copy-done"}
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m and ("->" in line):
+                current = Computation(m.group(1), [])
+            continue
+        if line.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INST_RE.match(line)
+        if m:
+            name, shape_str, op, rest = m.groups()
+            current.instructions.append(Instruction(name, shape_str, op, rest))
+    return comps
+
+
+def _operand_bytes(inst: Instruction, comp: Computation, comps: Dict[str, Computation]) -> int:
+    total = 0
+    # operands are %refs before any ), attrs; resolve shapes in this computation
+    body = inst.rest.split("),")[0] if ")," in inst.rest else inst.rest.rstrip(")")
+    for ref in _OPERAND_RE.findall(body):
+        target = comp.find(ref)
+        if target is not None:
+            total += target.result_bytes
+    return total
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    # contracted sizes from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    ops = _OPERAND_RE.findall(inst.rest.split("),")[0] if ")," in inst.rest else inst.rest)
+    if not ops:
+        return 0.0
+    lhs = comp.find(ops[0])
+    if lhs is None:
+        return 0.0
+    _, lhs_dims = _first_shape(lhs.shape_str)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    _, res_dims = _first_shape(inst.shape_str)
+    n = 1
+    for d in res_dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _trip_count(cond_name: str, comps: Dict[str, Computation]) -> float:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1.0
+    best = 1.0
+    for inst in cond.instructions:
+        if inst.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + inst.rest)
+            if m:
+                best = max(best, float(m.group(1)))
+    return best
+
+
+def _attr(inst: Instruction, key: str) -> Optional[str]:
+    m = re.search(key + r"=%([\w.\-]+)", inst.rest)
+    return m.group(1) if m else None
+
+
+def compute_costs(comps: Dict[str, Computation], comp_name: str,
+                  _memo: Optional[dict] = None) -> Costs:
+    if _memo is None:
+        _memo = {}
+    if comp_name in _memo:
+        return _memo[comp_name]
+    comp = comps.get(comp_name)
+    if comp is None:
+        return Costs()
+    total = Costs()
+    for inst in comp.instructions:
+        if inst.op in _SKIP_OPS or inst.op.endswith("-done"):
+            continue  # async *-done pairs would double-count their *-start
+        if inst.op == "while":
+            body = _attr(inst, "body")
+            cond = _attr(inst, "condition")
+            trips = _trip_count(cond, comps) if cond else 1.0
+            inner = compute_costs(comps, body, _memo) if body else Costs()
+            total = total + inner.scale(trips)
+            continue
+        if inst.op == "conditional":
+            branches = re.search(r"branch_computations=\{([^}]*)\}", inst.rest)
+            if branches:
+                cands = [compute_costs(comps, b.strip().lstrip("%"), _memo)
+                         for b in branches.group(1).split(",")]
+                if cands:
+                    total = total + max(cands, key=lambda c: c.flops + c.bytes_accessed
+                                        + c.collective_bytes)
+            continue
+        if inst.op in ("call", "async-start"):
+            callee = _attr(inst, "to_apply") or _attr(inst, "calls")
+            if callee:
+                total = total + compute_costs(comps, callee, _memo)
+            continue
+        opb = _operand_bytes(inst, comp, comps)
+        resb = inst.result_bytes
+        total.bytes_accessed += opb + resb
+        if inst.op in ("dot", "cudnn-dot"):
+            total.flops += _dot_flops(inst, comp)
+        elif inst.op == "fusion":
+            # dots stay top-level on CPU; fusion flops approximated by element
+            # count of the result (elementwise work), which is roofline-noise
+            total.flops += _shape_bytes(inst.shape_str) / 2
+        elif inst.op.startswith(COLLECTIVES) or any(inst.op.startswith(c) for c in COLLECTIVES):
+            kind = next(c for c in COLLECTIVES if inst.op.startswith(c))
+            total.collective_bytes += opb
+            total.collective_breakdown[kind] = total.collective_breakdown.get(kind, 0.0) + opb
+    _memo[comp_name] = total
+    return total
+
+
+def analyze(hlo_text: str) -> Costs:
+    comps = parse_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return compute_costs(comps, entry)

@@ -1,0 +1,109 @@
+"""Three-term roofline model from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs            / (chips x peak bf16 FLOP/s)
+    memory     = HLO_bytes            / (chips x HBM bandwidth)
+    collective = collective_bytes     / (chips x ICI link bandwidth)
+
+FLOPs/bytes come from the while-aware HLO walk (analysis/hlo.py) over the
+post-SPMD module; since those shapes are already per-device, the per-chip
+terms divide by 1 (the 'chips' factor is only applied to the MODEL_FLOPS
+comparison, which is a global count).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis import hlo as hlo_mod
+from repro.common.config import InputShape, ModelConfig
+from repro.common.hardware import TPU_V5E, ChipSpec
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    program: str
+    chips: int
+    # per-chip quantities (from post-SPMD HLO)
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, float]
+    model_flops: float          # 6*N(_active)*D, global
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / TPU_V5E.peak_bf16_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / TPU_V5E.hbm_bandwidth
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / TPU_V5E.ici_link_bandwidth
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """model FLOPs / (chips x peak x step-time lower bound)."""
+        denom = self.chips * TPU_V5E.peak_bf16_flops * self.step_time_lower_bound
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "program": self.program,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_upper_bound": self.mfu_upper_bound,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D for training; 2*N*D_tokens for inference (per program invocation)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch * 1   # decode: one token per request
+
+
+def analyze_program(arch: str, shape: InputShape, program: str, hlo_text: str,
+                    cfg: ModelConfig, chips: int,
+                    peak_memory: Optional[float] = None) -> Roofline:
+    costs = hlo_mod.analyze(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape.name, program=program, chips=chips,
+        flops_per_chip=costs.flops, bytes_per_chip=costs.bytes_accessed,
+        collective_bytes_per_chip=costs.collective_bytes,
+        collective_breakdown=costs.collective_breakdown,
+        model_flops=model_flops(cfg, shape),
+        peak_memory_bytes=peak_memory)

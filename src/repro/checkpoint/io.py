@@ -1,0 +1,74 @@
+"""Checkpointing: flat-key npz for pytrees + json metadata.
+
+Handles the trainer's full state (stacked replicas, velocity, EASGD center,
+step) and the gossip scheduler's host-side state, so a run can resume with
+bit-identical protocol behavior (same PRNG stream position).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+SEP = "::"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path)
+        flat[key or "_root"] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp.removesuffix(".npz"), **_flatten(tree))
+    os.replace(tmp, path)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, ref in paths:
+        key = SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path_keys) or "_root"
+        arr = flat[key]
+        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+        leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> Optional[dict]:
+    mp = path + ".meta.json"
+    if os.path.exists(mp):
+        with open(mp) as f:
+            return json.load(f)
+    return None
+
+
+def latest_step_path(ckpt_dir: str) -> Optional[Tuple[int, str]]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".npz"):
+            step = int(name[len("step_"):-len(".npz")])
+            if best is None or step > best[0]:
+                best = (step, os.path.join(ckpt_dir, name))
+    return best

@@ -1,0 +1,10 @@
+from repro.common import config, hardware, pytree  # noqa: F401
+from repro.common.config import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    ProtocolConfig,
+    TrainConfig,
+)

@@ -1,0 +1,306 @@
+"""Configuration system.
+
+Frozen dataclasses describing models, meshes, the gossip protocol, training,
+and the assignment's four canonical input shapes. Arch configs in
+:mod:`repro.configs` instantiate :class:`ModelConfig`; the launcher resolves
+(arch, shape, mesh) triples into concrete lowered programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0           # per-expert hidden size (0 -> use model d_ff)
+    capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.01
+    # which layers are MoE (deepseek keeps layer 0 dense)
+    first_dense_layers: int = 0
+    # local dispatch: tokens are routed independently within this many shards
+    # (aligned with the batch sharding), each with capacity C/shards — keeps
+    # the sort/scatter local to the data shards (MaxText-style). 1 = global.
+    dispatch_shards: int = 1
+    # mesh axes the dispatch-shard dim lives on (train steps vmap over the
+    # worker dim, so only 'fsdp' remains available there; serving uses all
+    # data axes) — set by launch.specs.cfg_for_mesh
+    dispatch_axes: tuple = ("pod", "worker", "fsdp")
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0           # 0 -> full-rank q projection (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block parameters."""
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_dim: int = 4
+    chunk_size: int = 256
+    ngroups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    # indices i with (i % slstm_every == slstm_offset) are sLSTM blocks
+    slstm_every: int = 6
+    slstm_offset: int = 5
+    proj_factor: float = 2.0       # up-projection inside m/sLSTM blocks
+    conv_dim: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: Mamba2 backbone + shared (reused-weights) attention blocks."""
+    shared_attn_every: int = 6     # insert a shared attn+mlp block every N ssm layers
+    num_shared_blocks: int = 2     # distinct shared blocks, used alternately
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    """Llama-3.2-Vision-style cross-attention decoder."""
+    cross_attn_layers: Tuple[int, ...] = (3, 8, 13, 18, 23, 28, 33, 38)
+    num_image_tokens: int = 1601   # stubbed patch embeddings per image
+    image_embed_dim: int = 4096    # dim of the (stubbed) projected patch embeds
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioConfig:
+    """MusicGen-style decoder over EnCodec tokens."""
+    num_codebooks: int = 4
+    num_cond_tokens: int = 64      # stubbed conditioning frame embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # gemma2-style extras
+    local_window: int = 0          # >0 -> alternating local/global attention
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    post_norms: bool = False       # gemma2 post-attn/post-ffn norms
+    # activation: swiglu (llama) | gelu (gpt) | geglu (gemma) | relu
+    activation: str = "swiglu"
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    vlm: Optional[VLMConfig] = None
+    audio: Optional[AudioConfig] = None
+    # serving: archs without sub-quadratic path use a bounded-window decode
+    # variant for long_500k (DESIGN.md §4)
+    sw_decode_window: int = 8192
+    # rematerialize per-layer activations in the training forward (scan body)
+    remat: bool = True
+    source: str = ""               # citation bracket from the assignment
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs and sanity checks)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = V * d  # embed
+        if not self.tie_embeddings:
+            total += d * V
+        if self.audio is not None:
+            total += (self.audio.num_codebooks - 1) * V * d      # extra codebook embeds
+            total += (self.audio.num_codebooks - 1) * d * V      # extra heads
+        per_layer_attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+        if self.mla is not None:
+            m = self.mla
+            q_in = m.q_lora_rank or d
+            per_layer_attn = (
+                (d * m.q_lora_rank if m.q_lora_rank else 0)
+                + q_in * n_q * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * n_q * (m.qk_nope_head_dim + m.v_head_dim)
+                + n_q * m.v_head_dim * d
+            )
+        if self.activation in ("swiglu", "geglu"):
+            per_layer_ffn = 3 * d * self.d_ff
+        else:
+            per_layer_ffn = 2 * d * self.d_ff
+        n_attn_layers = L
+        n_ffn_layers = L
+        if self.arch_type == "ssm" and self.xlstm is not None:
+            # xLSTM: no separate FFN; blocks have their own projections
+            x = self.xlstm
+            d_in = int(d * x.proj_factor)
+            per_layer = 2 * d * d_in + 3 * d_in * d_in // 4 + d_in * d  # rough qkv/gates
+            total += L * per_layer + L * 2 * d
+            return total
+        if self.arch_type in ("ssm", "hybrid") and self.ssm is not None:
+            s = self.ssm
+            d_inner = s.expand * d
+            nheads = d_inner // s.head_dim
+            per_ssm = (
+                d * (2 * d_inner + 2 * s.ngroups * s.state_dim + nheads)  # in_proj
+                + s.conv_dim * (d_inner + 2 * s.ngroups * s.state_dim)    # conv
+                + nheads * 2                                               # A, D
+                + d_inner * d                                              # out_proj
+            )
+            if self.arch_type == "ssm":
+                total += L * (per_ssm + 2 * d)
+                return total
+            # hybrid: ssm layers + shared attn blocks (counted once)
+            h = self.hybrid
+            n_shared = h.num_shared_blocks if h else 0
+            total += L * (per_ssm + 2 * d)
+            total += n_shared * (per_layer_attn + per_layer_ffn + 2 * d)
+            return total
+        if self.moe is not None:
+            m = self.moe
+            dff_e = m.d_ff_expert or self.d_ff
+            n_moe = L - m.first_dense_layers
+            mult = 3 if self.activation in ("swiglu", "geglu") else 2
+            per_moe = m.num_experts * mult * d * dff_e + m.num_shared_experts * mult * d * dff_e + d * m.num_experts
+            total += m.first_dense_layers * per_layer_ffn + n_moe * per_moe
+            total += n_attn_layers * per_layer_attn + L * 2 * d
+            return total
+        total += n_attn_layers * per_layer_attn + n_ffn_layers * per_layer_ffn + L * 2 * d
+        if self.vlm is not None:
+            total += len(self.vlm.cross_attn_layers) * (per_layer_attn + per_layer_ffn + 2 * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed top-k only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        dff_e = m.d_ff_expert or self.d_ff
+        mult = 3 if self.activation in ("swiglu", "geglu") else 2
+        n_moe = self.num_layers - m.first_dense_layers
+        inactive = n_moe * (m.num_experts - m.top_k) * mult * self.d_model * dff_e
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assignment-fixed)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+    workers_per_pod: int = 4       # gossip replicas per pod; fsdp = data // workers_per_pod
+
+    @property
+    def fsdp(self) -> int:
+        assert self.data % self.workers_per_pod == 0, (self.data, self.workers_per_pod)
+        return self.data // self.workers_per_pod
+
+    @property
+    def num_workers(self) -> int:
+        return self.pods * self.workers_per_pod
+
+    @property
+    def num_chips(self) -> int:
+        return self.pods * self.data * self.model
+
+
+# ---------------------------------------------------------------------------
+# Protocol / training
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolConfig:
+    """The paper's knobs (Alg. 1-6)."""
+    method: str = "elastic_gossip"   # elastic_gossip | gossiping_pull | gossiping_push
+    #                                 | allreduce | easgd | none
+    moving_rate: float = 0.5         # alpha (EG, EASGD)
+    comm_probability: float = 0.0    # p  (Bernoulli participation, Alg. 5 / GoSGD)
+    comm_period: int = 0             # tau (deterministic period, Alg. 2/3/4/6)
+    topology: str = "matching"       # matching (TPU-native) | uniform (sim oracle)
+    # beyond-paper (thesis §4.1.3 proposes scheduling alpha): anneal the
+    # moving rate from moving_rate to moving_rate_final over alpha_decay_steps
+    moving_rate_final: float = -1.0  # <0 -> constant alpha
+    alpha_decay_steps: int = 0
+
+    def __post_init__(self):
+        if self.method in ("elastic_gossip", "gossiping_pull", "gossiping_push", "easgd"):
+            assert (self.comm_probability > 0) != (self.comm_period > 0), (
+                "set exactly one of comm_probability / comm_period")
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "nag"                # sgd | nag | adamw  (paper uses NAG, Alg. 5)
+    learning_rate: float = 1e-3
+    momentum: float = 0.99
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 0.0
+    schedule: str = "constant"       # constant | step | cosine
+    warmup_steps: int = 0
+    decay_steps: int = 0
+    step_anneal_at: Tuple[int, ...] = ()
+    step_anneal_factor: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    protocol: ProtocolConfig = ProtocolConfig(comm_probability=0.03125)
+    optimizer: OptimizerConfig = OptimizerConfig()
+    steps: int = 100
+    seed: int = 0
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+    log_every: int = 10
+    data_skew: float = 0.0           # Dirichlet label-skew strength (0 = iid)

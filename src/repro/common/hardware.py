@@ -1,0 +1,46 @@
+"""Hardware constants for the roofline model (TPU v5e, the target platform).
+
+The container runs on CPU; these constants are only used to *derive* roofline
+terms from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float     # FLOP/s per chip
+    hbm_bandwidth: float       # bytes/s per chip
+    hbm_capacity: float        # bytes per chip
+    ici_link_bandwidth: float  # bytes/s per link (one direction)
+    ici_links: int             # links per chip participating in a collective
+    dcn_bandwidth: float       # bytes/s per chip across pods (approx.)
+    vmem_bytes: int
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    hbm_capacity=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    dcn_bandwidth=6.25e9,  # ~50 Gbit/s effective per-chip DCN share
+    vmem_bytes=128 * 1024 * 1024,
+)
+
+
+def compute_time_s(flops: float, chips: int, spec: ChipSpec = TPU_V5E) -> float:
+    return flops / (chips * spec.peak_bf16_flops)
+
+
+def memory_time_s(bytes_: float, chips: int, spec: ChipSpec = TPU_V5E) -> float:
+    return bytes_ / (chips * spec.hbm_bandwidth)
+
+
+def collective_time_s(bytes_: float, chips: int, spec: ChipSpec = TPU_V5E) -> float:
+    # bytes_ is the summed operand volume across the program; a chip moves its
+    # shard over its ICI links.
+    return bytes_ / (chips * spec.ici_link_bandwidth)

@@ -1,0 +1,110 @@
+"""Pytree utilities shared across the framework.
+
+All protocol math in :mod:`repro.core` operates on arbitrary parameter pytrees;
+these helpers keep that code free of tree-walking boilerplate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leaf-wise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_lerp(a: PyTree, b: PyTree, t) -> PyTree:
+    """a + t * (b - a), leaf-wise (the elastic move toward a peer)."""
+    return jax.tree.map(lambda ai, bi: ai + t * (bi - ai), a, b)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def global_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(a: PyTree) -> int:
+    """Total number of elements across all leaves (static)."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """tree_map where fn also receives a '/'-joined key-path string."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_name(p), x), tree)
+
+
+def tree_stack(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_mean_leading(tree: PyTree) -> PyTree:
+    """Mean over the leading (worker) axis of every leaf — the consensus/aggregate
+    model of the paper (Table 4.1 'Aggregate Accuracy')."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_take_leading(tree: PyTree, i) -> PyTree:
+    """Select worker ``i``'s replica from stacked params (paper 'Rank-0')."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_allclose(a: PyTree, b: PyTree, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(lambda x, y: np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol), a, b)
+    return all(jax.tree.leaves(oks))
+
+
+def tree_max_abs_diff(a: PyTree, b: PyTree) -> float:
+    ds = jax.tree.map(lambda x, y: float(np.max(np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64)))) if np.size(x) else 0.0, a, b)
+    leaves = jax.tree.leaves(ds)
+    return max(leaves) if leaves else 0.0

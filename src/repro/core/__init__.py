@@ -1,0 +1,7 @@
+# The paper's primary contribution: Elastic Gossip and the baselines it is
+# evaluated against (Algorithms 1-6), as protocol math (protocols.py,
+# topology.py), an exact simulation engine (gossip_sim.py), and the
+# TPU-native distributed engine (gossip_dist.py).
+from repro.core import consensus, gossip_dist, gossip_sim, protocols, topology  # noqa: F401
+from repro.core.gossip_sim import SimState, SimTrainer  # noqa: F401
+from repro.core.protocols import CommCost, ProtocolState, comm_cost  # noqa: F401

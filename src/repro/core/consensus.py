@@ -1,0 +1,40 @@
+"""Consensus / divergence diagnostics across worker replicas."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def aggregate(params_stack: PyTree) -> PyTree:
+    """Parameter average over the worker axis (paper 'Aggregate Accuracy' model)."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), params_stack)
+
+
+def divergence_metrics(params_stack: PyTree) -> Dict[str, jax.Array]:
+    """How far replicas have drifted apart — the 'strain' on the elastic
+    (paper §3.3's elastic-modulus analogy).
+
+    consensus_dist: mean_i ||theta_i - mean||; rel_dist normalizes by ||mean||.
+    """
+    flat = [x.reshape(x.shape[0], -1).astype(jnp.float32) for x in jax.tree.leaves(params_stack)]
+    theta = jnp.concatenate(flat, axis=1)                       # [W, P]
+    center = jnp.mean(theta, axis=0, keepdims=True)
+    dists = jnp.linalg.norm(theta - center, axis=1)
+    center_norm = jnp.linalg.norm(center)
+    return {
+        "consensus_dist_mean": jnp.mean(dists),
+        "consensus_dist_max": jnp.max(dists),
+        "consensus_rel": jnp.mean(dists) / (center_norm + 1e-12),
+        "param_norm": center_norm,
+    }
+
+
+def total_sum(params_stack: PyTree) -> jax.Array:
+    """sum_i sum(theta_i) in f64-ish accumulation — conserved exactly by any
+    elastic-symmetric communication update (tests rely on this invariant)."""
+    leaves = [jnp.sum(x.astype(jnp.float32)) for x in jax.tree.leaves(params_stack)]
+    return sum(leaves)

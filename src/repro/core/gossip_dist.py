@@ -1,0 +1,154 @@
+"""Distributed gossip engine: shard_map + collective-permute matchings.
+
+TPU-native realization of the communication-related component (DESIGN.md §3).
+Replica parameters are stacked on a leading worker dim sharded over the
+('pod', 'worker') mesh axes; one gossip round is ONE collective-permute of the
+replica shard along a matching, followed by the (fusable) elastic update:
+
+    theta <- theta - coef * gate * (theta - theta_peer)
+
+Matching schedules decompose over the mesh's gossip axes (hypercube dims on
+'worker' then 'pod' — so cross-pod/DCN rounds are a distinct, less frequent
+schedule entry, matching the bandwidth hierarchy). The round index and the
+per-worker participation mask are *inputs*, so one compiled program serves
+every round (lax.switch selects the static ppermute permutation).
+
+Semantics vs. the simulation engine: restricted to perfect matchings, a round
+here is EXACTLY Alg. 4 with peers given by the matching (tests assert
+bit-equality against gossip_sim fed the same matching).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.config import MeshConfig, ProtocolConfig
+from repro.core import topology
+
+PyTree = Any
+
+GOSSIP_AXES = ("pod", "worker")
+
+
+def build_schedule(mesh_cfg: MeshConfig, kind: str = "hypercube", num_random_rounds: int = 16,
+                   seed: int = 0) -> List[Tuple[str, List[Tuple[int, int]]]]:
+    """List of (mesh_axis, ppermute_pairs) rounds, cycled by round index.
+
+    hypercube: log2(workers_per_pod) rounds on 'worker' + log2(pods) on 'pod'.
+    random: precomputed random matchings on 'worker' (+ the pod hypercube
+    rounds appended, so cross-pod mixing still happens).
+    """
+    rounds: List[Tuple[str, List[Tuple[int, int]]]] = []
+    if kind == "hypercube":
+        if mesh_cfg.workers_per_pod > 1:
+            rounds += [("worker", m) for m in topology.hypercube_schedule(mesh_cfg.workers_per_pod)]
+        if mesh_cfg.pods > 1:
+            rounds += [("pod", m) for m in topology.hypercube_schedule(mesh_cfg.pods)]
+    elif kind == "random":
+        if mesh_cfg.workers_per_pod > 1:
+            rounds += [("worker", m) for m in
+                       topology.random_matching_schedule(mesh_cfg.workers_per_pod, num_random_rounds, seed)]
+        if mesh_cfg.pods > 1:
+            rounds += [("pod", m) for m in topology.hypercube_schedule(mesh_cfg.pods)]
+    else:
+        raise ValueError(kind)
+    assert rounds, "need at least 2 gossip workers"
+    return rounds
+
+
+def _gate_and_coef(cfg: ProtocolConfig, my_active, peer_active):
+    """Per-method gate/coefficient for a matched pair (DESIGN.md §3):
+    EG: fires if either endpoint selected the pair (passive peers respond),
+    coefficient alpha, symmetric. pull: own gate, 1/2. push: peer's gate, 1/2.
+    """
+    if cfg.method == "elastic_gossip":
+        return jnp.maximum(my_active, peer_active), cfg.moving_rate
+    if cfg.method == "gossiping_pull":
+        return my_active, 0.5
+    if cfg.method == "gossiping_push":
+        return peer_active, 0.5
+    raise ValueError(f"method {cfg.method} is not a pairwise-gossip method")
+
+
+def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
+                     param_specs: PyTree, schedule_kind: str = "hypercube"):
+    """Build gossip_step(params_stack, active[Wtot], round_idx) -> params_stack.
+
+    params_stack leaves: [Wtot_local..., ...] sharded per param_specs (leading
+    dim over ('pod','worker')). active: float32 [num_workers] participation.
+    """
+    schedule = build_schedule(mesh_cfg, schedule_kind)
+    n_rounds = len(schedule)
+    manual = set(GOSSIP_AXES) & set(mesh.axis_names)
+
+    def filter_spec(spec: P) -> P:
+        # partial-manual shard_map: in/out specs may only reference the
+        # manual (gossip) axes; fsdp/model stay auto (GSPMD).
+        def keep(entry):
+            if entry is None:
+                return None
+            if isinstance(entry, (tuple, list)):
+                kept = tuple(a for a in entry if a in manual)
+                return kept if kept else None
+            return entry if entry in manual else None
+        return P(*(keep(e) for e in spec))
+
+    param_specs = jax.tree.map(filter_spec, param_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+
+    def local_update(params, active_scalar, round_idx):
+        # params: local replica shard, leading dim 1; active_scalar: [1] float32
+        def branch(axis_name, pairs):
+            def fn(theta, act):
+                peer = jax.tree.map(lambda x: jax.lax.ppermute(x, axis_name, pairs), theta)
+                peer_act = jax.lax.ppermute(act, axis_name, pairs)
+                gate, coef = _gate_and_coef(cfg, act, peer_act)
+
+                def upd(t, pr):
+                    # compute in the storage dtype: f32 upcasts would
+                    # materialize two full f32 copies of the replica shard
+                    # (grok: +12 GB/chip). On TPU the Pallas fused_update
+                    # kernel does the f32 math per-tile in VMEM instead
+                    # (repro/kernels/fused_update.py).
+                    g = (gate * coef).astype(t.dtype).reshape((1,) * t.ndim)
+                    return t - g * (t - pr)
+
+                return jax.tree.map(upd, theta, peer)
+            return fn
+
+        branches = [functools.partial(branch(ax, pairs)) for ax, pairs in schedule]
+        return jax.lax.switch(round_idx % n_rounds, branches, params, active_scalar)
+
+    active_spec = P(tuple(a for a in GOSSIP_AXES if a in manual))
+
+    @jax.jit
+    def gossip_step(params_stack, active, round_idx):
+        fn = jax.shard_map(
+            lambda p, a: local_update(p, a[0], round_idx),
+            mesh=mesh,
+            in_specs=(param_specs, active_spec),
+            out_specs=param_specs,
+            axis_names=manual,
+            check_vma=False,
+        )
+        return fn(params_stack, active)
+
+    gossip_step.num_rounds = n_rounds
+    gossip_step.schedule = schedule
+    return gossip_step
+
+
+def partner_of(schedule, round_idx: int, worker: int, mesh_cfg: MeshConfig) -> int:
+    """Host-side: global worker index of `worker`'s partner in round_idx
+    (for logging / parity tests vs. the simulation engine)."""
+    axis, pairs = schedule[round_idx % len(schedule)]
+    wpp = mesh_cfg.workers_per_pod
+    pod, w = divmod(worker, wpp)
+    part = dict(pairs)
+    if axis == "worker":
+        return pod * wpp + part[w]
+    return part[pod] * wpp + w

@@ -1,0 +1,55 @@
+"""Host-side communication scheduler.
+
+The single-controller driver decides, per step, whether the communication
+component fires and with which per-worker participation mask — from a shared
+seed, so every process in a real multi-controller deployment derives the same
+schedule (the paper's synchronous setting). Bernoulli(p) gives Alg. 5 / GoSGD
+semantics; period tau gives Alg. 2/3/4/6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.common.config import ProtocolConfig
+
+
+@dataclasses.dataclass
+class GossipSchedule:
+    cfg: ProtocolConfig
+    num_workers: int
+    seed: int = 0
+    round_counter: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed)
+
+    def poll(self, step: int) -> Tuple[bool, Optional[np.ndarray], int]:
+        """-> (fire, active mask [W] float32, round_idx). Advances PRNG every
+        step regardless of firing (keeps multi-controller replicas aligned)."""
+        cfg = self.cfg
+        if cfg.method in ("allreduce", "none"):
+            return False, None, 0
+        if cfg.method == "easgd":
+            if cfg.comm_period:
+                fire = step % cfg.comm_period == 0
+            else:
+                fire = bool(self._rng.rand() < cfg.comm_probability)
+            return fire, np.full((self.num_workers,), float(fire), np.float32), 0
+        if cfg.comm_period:
+            fire = step % cfg.comm_period == 0
+            active = np.full((self.num_workers,), float(fire), np.float32)
+        else:
+            active = (self._rng.rand(self.num_workers) < cfg.comm_probability).astype(np.float32)
+            fire = bool(active.any())
+        rnd = self.round_counter
+        if fire:
+            self.round_counter += 1
+        return fire, active, rnd
+
+    def state(self) -> dict:
+        return {"round_counter": self.round_counter,
+                "rng_state": self._rng.get_state()[1].tolist(),
+                "rng_pos": int(self._rng.get_state()[2])}

@@ -1,0 +1,140 @@
+"""Peer selection topologies and mixing matrices.
+
+The communication-related component of every protocol in the paper can be
+written as a *mixing matrix* applied across the worker axis:
+
+    theta_new = M @ theta        (stacked theta: [W, ...])
+
+- Elastic Gossip (Alg. 4):  M = I - alpha * L(A), L the graph Laplacian of the
+  symmetric selection graph A (A[i,k]=1 iff i selected k or k selected i).
+  M is symmetric & rows sum to 1  =>  the update conserves sum_i theta_i
+  exactly (elastic symmetry). alpha=0.5 on a perfect matching = pairwise
+  averaging.
+- Gossiping SGD pull (Alg. 3):  M row i = (e_i + e_{k'(i)})/2 for active i.
+  Row-stochastic, NOT symmetric (does not conserve the sum).
+- Gossiping SGD push (Alg. 6):  M row i = mean of {e_i} U {e_j : k'(j)=i}.
+- EASGD (Alg. 2): handled with an explicit center variable, see protocols.py.
+
+The distributed engine restricts selection to perfect matchings (DESIGN.md §3)
+realized with collective-permute; this module also provides the matching
+schedules (hypercube dims / precomputed random matchings).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Traced (dynamic) peer sampling — used by the simulation engine
+# ---------------------------------------------------------------------------
+
+def sample_uniform_peers(key: jax.Array, num_workers: int) -> jax.Array:
+    """k'(i) ~ Uniform(W \\ {i}) for every worker (paper Alg. 4 line 5)."""
+    draw = jax.random.randint(key, (num_workers,), 0, num_workers - 1)
+    idx = jnp.arange(num_workers)
+    return jnp.where(draw >= idx, draw + 1, draw)
+
+
+def sample_matching(key: jax.Array, num_workers: int) -> jax.Array:
+    """Uniform random perfect matching: partner[i] (odd W: one self-partner)."""
+    perm = jax.random.permutation(key, num_workers)
+    partner_of_pos = jnp.arange(num_workers) ^ 1        # 0<->1, 2<->3, ...
+    if num_workers % 2 == 1:
+        partner_of_pos = partner_of_pos.at[num_workers - 1].set(num_workers - 1)
+    partner = jnp.zeros((num_workers,), jnp.int32)
+    partner = partner.at[perm].set(perm[partner_of_pos])
+    return partner
+
+
+def participation(key: jax.Array, num_workers: int, p: float) -> jax.Array:
+    """Bernoulli(p) per worker (Alg. 5 line 4 / GoSGD)."""
+    return jax.random.bernoulli(key, p, (num_workers,))
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices (dynamic, [W, W]) — simulation engine
+# ---------------------------------------------------------------------------
+
+def selection_graph(peers: jax.Array, active: jax.Array) -> jax.Array:
+    """Symmetric 0/1 adjacency: A[i,k] = 1 iff (active_i and peers[i]==k) or
+    (active_k and peers[k]==i). Set semantics (no double counting), no
+    self-loops."""
+    W = peers.shape[0]
+    sel = jax.nn.one_hot(peers, W, dtype=jnp.float32) * active[:, None].astype(jnp.float32)
+    a = jnp.maximum(sel, sel.T)
+    return a * (1.0 - jnp.eye(W))
+
+
+def elastic_gossip_mix(peers: jax.Array, active: jax.Array, alpha: float) -> jax.Array:
+    """M = I - alpha * (D - A): Elastic Gossip, exact Alg. 4 incl. fan-in K_i."""
+    a = selection_graph(peers, active)
+    lap = jnp.diag(jnp.sum(a, axis=1)) - a
+    W = peers.shape[0]
+    return jnp.eye(W) - alpha * lap
+
+
+def gossip_pull_mix(peers: jax.Array, active: jax.Array) -> jax.Array:
+    """Pull-Gossiping SGD (Alg. 3): theta_i <- (theta_i + theta_k')/2."""
+    W = peers.shape[0]
+    act = active.astype(jnp.float32)[:, None]
+    sel = jax.nn.one_hot(peers, W, dtype=jnp.float32)
+    return (1 - act) * jnp.eye(W) + act * 0.5 * (jnp.eye(W) + sel)
+
+
+def gossip_push_mix(peers: jax.Array, active: jax.Array) -> jax.Array:
+    """Push-Gossiping SGD (Alg. 6): theta_i <- mean({theta_i} U pushers)."""
+    W = peers.shape[0]
+    inbound = (jax.nn.one_hot(peers, W, dtype=jnp.float32) * active[:, None].astype(jnp.float32)).T
+    counts = 1.0 + jnp.sum(inbound, axis=1, keepdims=True)
+    return (jnp.eye(W) + inbound) / counts
+
+
+def apply_mix(mix: jax.Array, theta_stack):
+    """theta'[w] = sum_v mix[w,v] theta[v], leaf-wise over a stacked pytree."""
+    def one(x):
+        flat = x.reshape(x.shape[0], -1)
+        out = jnp.einsum("wv,vp->wp", mix, flat.astype(jnp.float32))
+        return out.reshape(x.shape).astype(x.dtype)
+    return jax.tree.map(one, theta_stack)
+
+
+# ---------------------------------------------------------------------------
+# Static matching schedules — distributed engine (collective-permute)
+# ---------------------------------------------------------------------------
+
+def hypercube_schedule(num_workers: int) -> List[List[Tuple[int, int]]]:
+    """log2(W) perfect matchings: round r pairs i <-> i XOR 2^r. Cycling
+    through rounds gives full mixing in log2(W) gossip rounds."""
+    assert num_workers & (num_workers - 1) == 0 and num_workers >= 2, num_workers
+    rounds = []
+    r = 0
+    while (1 << r) < num_workers:
+        rounds.append([(i, i ^ (1 << r)) for i in range(num_workers)])
+        r += 1
+    return rounds
+
+
+def random_matching_schedule(num_workers: int, num_rounds: int, seed: int = 0) -> List[List[Tuple[int, int]]]:
+    """Precomputed random perfect matchings (static at trace time)."""
+    rng = np.random.RandomState(seed)
+    rounds = []
+    for _ in range(num_rounds):
+        perm = rng.permutation(num_workers)
+        partner = np.empty(num_workers, np.int64)
+        for j in range(0, num_workers - 1, 2):
+            partner[perm[j]], partner[perm[j + 1]] = perm[j + 1], perm[j]
+        if num_workers % 2 == 1:
+            partner[perm[-1]] = perm[-1]
+        rounds.append([(i, int(partner[i])) for i in range(num_workers)])
+    return rounds
+
+
+def matching_partner_array(pairs: List[Tuple[int, int]]) -> np.ndarray:
+    partner = np.empty(len(pairs), np.int64)
+    for i, k in pairs:
+        partner[i] = k
+    return partner

@@ -1,0 +1,8 @@
+from repro.data.partition import batches_for_step, partition_dirichlet, partition_iid  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    Dataset,
+    load_cifar_like,
+    load_mnist,
+    make_classification,
+    make_lm_tokens,
+)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+Targets the MXU: (block_q x block_k) score tiles with f32 accumulators in
+VMEM scratch, persisted across the innermost (kv) grid dimension — the
+canonical TPU flash schedule (grid is executed sequentially on a core, so
+scratch carries m/l/acc between kv steps).
+
+Supports the variants the assigned archs need: causal masking with a query
+offset (decode), sliding window (gemma2 local / sw-decode), logit softcap
+(gemma2), GQA head grouping, and a dynamic kv_len (ring-buffer decode).
+
+Block sizes default to (128 q x 512 kv) — MXU-aligned multiples of 128; VMEM
+working set per step ~= block_q*hd + 2*block_k*hd + block_q*block_k floats,
+< 1 MiB at hd=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            q_offset: int, block_q: int, block_k: int, num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)                    # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [bq, bk]
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kv_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kv_pos < kvlen_ref[0]
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, kv_len=None, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 512, interpret: bool = False):
+    """q: [B, H, Sq, hd]; k, v: [B, Hkv, Skv, hd]. Returns [B, H, Sq, hd].
+
+    kv_len: optional scalar int32 — number of valid kv rows (ring decode).
+    Sq/Skv are padded to block multiples internally.
+    """
+    B, H, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, Skv)
+    pq = (block_q - Sq % block_q) % block_q
+    pk = (block_k - Skv % block_k) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+    kvl = jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32).reshape(1)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=hd ** -0.5, causal=causal, window=window,
+            softcap=softcap, q_offset=q_offset, block_q=block_q, block_k=block_k,
+            num_kv_blocks=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),        # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),        # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, kvl)
+    return out[:, :, :Sq]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fused elastic-gossip + NAG parameter update.
+
+A gossip round touches every parameter byte of the replica shard. Unfused,
+XLA emits separate sweeps for the velocity update, the elastic move, and the
+parameter update — >=5 HBM reads + 2 writes per element. This kernel does one
+pass: read theta/peer/v/g once, write theta'/v' once (6 streams total), at
+arithmetic intensity ~0.5 flop/byte — pure bandwidth, so fusion is the whole
+game (DESIGN.md §6).
+
+Tiling: params are flattened and padded to 1-D tiles of ``block`` elements
+(default 65536 = 256 KiB f32 per stream; 6 streams -> 1.5 MiB VMEM working
+set, lane-aligned multiples of 128). The dynamic participation gate is folded
+into coef on the host, so the kernel body is branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536  # elements per tile; multiple of 128*8 for lane/sublane alignment
+
+
+def _kernel(theta_ref, peer_ref, v_ref, g_ref, coef_ref,
+            theta_out_ref, v_out_ref, *, eta: float, mu: float):
+    t = theta_ref[...].astype(jnp.float32)
+    p = peer_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    coef = coef_ref[0, 0]
+    v_new = mu * v - eta * g
+    t_new = t - coef * (t - p) - eta * g + mu * v_new
+    theta_out_ref[...] = t_new.astype(theta_out_ref.dtype)
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "mu", "block", "interpret"))
+def fused_elastic_nag_update(theta, peer, v, g, coef_gate, *, eta: float, mu: float,
+                             block: int = BLOCK, interpret: bool = False):
+    """theta/peer/v/g: same-shape arrays (any rank); coef_gate: scalar f32
+    (= alpha * participation gate). Returns (theta', v')."""
+    shape, dtype = theta.shape, theta.dtype
+    n = theta.size
+    nblocks = max(1, (n + block - 1) // block)
+    pad = nblocks * block - n
+
+    def prep(x):
+        flat = x.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(nblocks, block)
+
+    tf, pf, vf, gf = prep(theta), prep(peer), prep(v), prep(g)
+    coef = jnp.asarray(coef_gate, jnp.float32).reshape(1, 1)
+
+    spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    coef_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    t_new, v_new = pl.pallas_call(
+        functools.partial(_kernel, eta=eta, mu=mu),
+        grid=(nblocks,),
+        in_specs=[spec, spec, spec, spec, coef_spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((nblocks, block), dtype),
+                   jax.ShapeDtypeStruct((nblocks, block), v.dtype)],
+        interpret=interpret,
+    )(tf, pf, vf, gf, coef)
+    return (t_new.reshape(-1)[:n].reshape(shape),
+            v_new.reshape(-1)[:n].reshape(shape))

@@ -1,0 +1,55 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container, unit
+tests) they execute in interpret mode, which runs the kernel body in Python
+per grid step — bit-faithful to the TPU schedule, slow, so callers that just
+need the math (training loops on CPU) should use the ref path via
+``use_kernel=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_update as _fu
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_elastic_nag_update(theta, peer, v, g, coef_gate, *, eta: float, mu: float,
+                             use_kernel: Optional[bool] = None, interpret: Optional[bool] = None):
+    """Tree-ready fused update; see kernels/ref.py for the math."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if not use_kernel:
+        return ref.fused_elastic_nag_update(
+            theta, peer, v, g,
+            coef_gate=coef_gate, eta=eta, mu=mu)
+    return _fu.fused_elastic_nag_update(
+        theta, peer, v, g, coef_gate, eta=eta, mu=mu,
+        interpret=(not on_tpu()) if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, kv_len=None, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0,
+                    use_kernel: Optional[bool] = None, interpret: Optional[bool] = None,
+                    block_q: int = 128, block_k: int = 512):
+    """q: [B, H, Sq, hd]; k, v: [B, Hkv, Skv, hd] (BHSD layout)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if not use_kernel:
+        # ref takes BSHD layout
+        o = ref.attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+                          causal=causal, window=window, logit_softcap=softcap,
+                          q_offset=q_offset, kv_len=kv_len)
+        return jnp.swapaxes(o, 1, 2)
+    return _fa.flash_attention(
+        q, k, v, kv_len, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=(not on_tpu()) if interpret is None else interpret)

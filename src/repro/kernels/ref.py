@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_elastic_nag_update(theta, peer, v, g, *, coef_gate: float, eta: float, mu: float):
+    """The paper's per-parameter hot loop (Alg. 5 lines 3/7/9, simultaneous):
+
+        v'     = mu * v - eta * g
+        theta' = theta - coef_gate * (theta - peer) - eta * g + mu * v'
+
+    coef_gate = alpha * gate folds the participation gate into the moving rate.
+    Returns (theta', v').
+    """
+    tf, pf = theta.astype(jnp.float32), peer.astype(jnp.float32)
+    vf, gf = v.astype(jnp.float32), g.astype(jnp.float32)
+    v_new = mu * vf - eta * gf
+    theta_new = tf - coef_gate * (tf - pf) - eta * gf + mu * v_new
+    return theta_new.astype(theta.dtype), v_new.astype(v.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              logit_softcap: float = 0.0, q_offset: int = 0, kv_len=None):
+    """Naive full-softmax attention oracle.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, Hkv, d*]. Materializes [B,H,Sq,Skv] —
+    small test shapes only.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * hd ** -0.5
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= (q_pos - kv_pos) < window
+    if kv_len is not None:
+        mask &= kv_pos < kv_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,102 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model init functions return a parallel tree of *logical axis tuples* (one
+entry per array dim, e.g. ``("embed", "ffn")`` for an MLP kernel). This module
+maps logical names onto mesh axes, dropping any assignment that is not
+divisible or whose mesh axis is already consumed by an earlier dim of the same
+leaf (a leaf may use each mesh axis at most once).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# default rule table: logical axis -> mesh axis (worker mesh axes)
+DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
+    "worker": ("pod", "worker"),   # leading replica dim of stacked params
+    "embed": ("fsdp",),            # d_model dims (FSDP shards these)
+    "ffn": ("model",),             # hidden/ffn dims (tensor parallel)
+    "heads": ("model",),           # attention head dims
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    # expert-parallel over 'model' (experts x TP was tried and REFUTED —
+    # §Perf iteration 5a: expert->fsdp tripled collective volume because the
+    # dispatch scatter then fights the token sharding on the same axis)
+    "expert": ("model",),
+    "dispatch": ("pod", "worker", "fsdp"),   # local-dispatch shard dim (MoE)
+    "inner": ("model",),           # ssm/xlstm inner dims
+    "batch": ("pod", "worker", "fsdp"),
+    "act_embed": (),               # activation d_model: replicated
+    "seq": (),
+    None: (),
+}
+
+
+def _mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(mesh.shape)   # works for Mesh and AbstractMesh alike
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh,
+             rules: Optional[dict] = None) -> P:
+    """Build a PartitionSpec for one leaf, honoring divisibility and
+    one-use-per-mesh-axis constraints."""
+    rules = rules or DEFAULT_RULES
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    out = []
+    assert len(shape) == len(axes), (shape, axes)
+    for dim, name in zip(shape, axes):
+        cand = rules.get(name, ())
+        picked: Tuple[str, ...] = ()
+        total = 1
+        for m in cand:
+            if m not in sizes or m in used:
+                continue
+            if dim % (total * sizes[m]) != 0:
+                continue
+            picked = picked + (m,)
+            used.add(m)
+            total *= sizes[m]
+        if len(picked) == 0:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    # trailing Nones can be dropped but keeping them is harmless/explicit
+    return P(*out)
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x)
+
+
+def tree_specs(shapes: PyTree, axes: PyTree, mesh: Mesh, rules: Optional[dict] = None) -> PyTree:
+    """Map :func:`spec_for` over parallel (shape, logical-axes) trees.
+
+    ``shapes`` leaves may be arrays or ShapeDtypeStructs; ``axes`` leaves are
+    tuples of logical axis names (possibly None entries). The two trees share
+    an outer structure but axes-leaf tuples would be traversed as pytrees, so
+    we flatten each side with its own is_leaf and zip.
+    """
+    shape_leaves, treedef = jax.tree.flatten(shapes)
+    axes_leaves = jax.tree.flatten(axes, is_leaf=is_axes_leaf)[0]
+    assert len(shape_leaves) == len(axes_leaves), (len(shape_leaves), len(axes_leaves))
+    specs = [spec_for(tuple(x.shape), a, mesh, rules) for x, a in zip(shape_leaves, axes_leaves)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def tree_shardings(shapes: PyTree, axes: PyTree, mesh: Mesh, rules: Optional[dict] = None) -> PyTree:
+    specs = tree_specs(shapes, axes, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_worker_dim(axes: PyTree) -> PyTree:
+    """Prepend the 'worker' logical axis to every leaf's axis tuple (stacked
+    per-replica params)."""
+    return jax.tree.map(lambda a: ("worker",) + tuple(a), axes, is_leaf=is_axes_leaf)

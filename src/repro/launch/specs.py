@@ -1,0 +1,162 @@
+"""Program builders + input_specs for the dry-run and launchers.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step function that (arch, shape) lowers — weak-type-correct,
+shardable, no device allocation. ``build_programs`` pairs them with the jitted
+step functions so dryrun.py just calls ``.lower(*args).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import (INPUT_SHAPES, MeshConfig, ModelConfig, OptimizerConfig,
+                                 ProtocolConfig, TrainConfig)
+from repro.configs import get_config
+from repro.launch import plans as plans_mod
+from repro.launch.mesh import make_abstract_worker_mesh, make_worker_mesh
+from repro.models import transformer as tr
+from repro.serving import engine as serve
+from repro.train.step import DistTrainer
+
+PyTree = Any
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def cfg_for_mesh(cfg: ModelConfig, mesh_cfg: MeshConfig, *, kind: str,
+                 tokens_per_program: int) -> ModelConfig:
+    """Mesh-dependent config tweaks: MoE local-dispatch shard count = the
+    number of token shards the batch actually splits into (train: fsdp within
+    a replica group; serving: all data axes), clamped to divide T."""
+    if cfg.moe is None:
+        return cfg
+    import math
+    if kind == "train":
+        # measured (§Perf iter. 5d): local dispatch does NOT pay off inside the
+        # per-worker vmap + accumulation scan — global dispatch wins there
+        shards, axes = 1, ("fsdp",)
+    else:
+        shards = mesh_cfg.pods * mesh_cfg.workers_per_pod * mesh_cfg.fsdp
+        axes = ("pod", "worker", "fsdp")
+    ds = math.gcd(tokens_per_program, shards)
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, dispatch_shards=ds, dispatch_axes=axes))
+
+
+def default_train_config() -> TrainConfig:
+    return TrainConfig(
+        protocol=ProtocolConfig(method="elastic_gossip", comm_probability=1 / 32,
+                                moving_rate=0.5),
+        optimizer=OptimizerConfig(name="nag", learning_rate=1e-3, momentum=0.9))
+
+
+def make_trainer(mesh, mesh_cfg: MeshConfig, cfg: ModelConfig, grad_accum: int,
+                 train_cfg: TrainConfig = None) -> DistTrainer:
+    param_shapes, param_axes = tr.abstract_lm(cfg, PARAM_DTYPE)
+
+    def init_fn(key):
+        p, _ = tr.init_lm(key, cfg, PARAM_DTYPE)
+        return p
+
+    return DistTrainer(mesh, mesh_cfg, cfg, train_cfg or default_train_config(),
+                       init_fn, param_axes, grad_accum=grad_accum)
+
+
+def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False) -> Dict[str, PyTree]:
+    """ShapeDtypeStructs for every input of the (arch, shape) step program."""
+    plan = plans_mod.make_plan(arch, shape_name)
+    mesh_cfg = plans_mod.mesh_config(plan, multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = plan.shape
+    if shape.kind == "train":
+        mesh = make_abstract_worker_mesh(mesh_cfg)   # shapes only - no devices
+        trainer = make_trainer(mesh, mesh_cfg, cfg, plan.grad_accum)
+        trainer.set_shape(shape.global_batch, shape.seq_len)
+        return {
+            "state": trainer.state_shapes(),
+            "batch": trainer.batch_shapes(shape.global_batch, shape.seq_len),
+            "active": jax.ShapeDtypeStruct((mesh_cfg.num_workers,), jnp.float32),
+            "round_idx": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    # serving shapes
+    batch = shape.global_batch
+    max_len = min(shape.seq_len, plan.decode_window) if plan.decode_window else shape.seq_len
+    cache_shapes, _ = tr.abstract_cache(cfg, batch, max_len, dtype=jnp.bfloat16,
+                                        window=plan.decode_window)
+    params_sds, _ = tr.abstract_lm(cfg, PARAM_DTYPE)
+    out = {"params": params_sds}
+    if shape.kind == "decode":
+        out["cache"] = cache_shapes
+        if cfg.audio is not None:
+            out["tokens"] = jax.ShapeDtypeStruct((batch, cfg.audio.num_codebooks, 1), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    else:  # prefill
+        if cfg.audio is not None:
+            out["tokens"] = jax.ShapeDtypeStruct((batch, cfg.audio.num_codebooks, shape.seq_len), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((batch, shape.seq_len), jnp.int32)
+    if cfg.audio is not None:
+        out["cond"] = jax.ShapeDtypeStruct((batch, cfg.audio.num_cond_tokens, cfg.d_model), jnp.bfloat16)
+    elif cfg.vlm is not None:
+        out["cond"] = jax.ShapeDtypeStruct((batch, cfg.vlm.num_image_tokens,
+                                            cfg.vlm.image_embed_dim), jnp.bfloat16)
+    else:
+        out["cond"] = None
+    return out
+
+
+@dataclasses.dataclass
+class Program:
+    name: str                    # e.g. "train", "train_gossip", "decode", "prefill"
+    jitted: Callable
+    args: tuple                  # SDS args in call order
+    mesh: Any = None             # ambient mesh for with_sharding_constraint hints
+
+
+def build_programs(arch: str, shape_name: str, *, multi_pod: bool = False,
+                   gossip_variant: bool = True) -> list:
+    """All lowered programs for one (arch x shape x mesh) cell."""
+    plan = plans_mod.make_plan(arch, shape_name)
+    mesh_cfg = plans_mod.mesh_config(plan, multi_pod=multi_pod)
+    mesh = make_worker_mesh(mesh_cfg)
+    cfg = get_config(arch)
+    shape = plan.shape
+    # per-worker microbatch tokens (train) / per-step tokens (serve)
+    if shape.kind == "train":
+        tokens = (shape.global_batch // mesh_cfg.num_workers // plan.grad_accum) * shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch
+    cfg = cfg_for_mesh(cfg, mesh_cfg, kind=shape.kind, tokens_per_program=tokens)
+    specs = input_specs(arch, shape_name, multi_pod=multi_pod)
+    progs = []
+    if shape.kind == "train":
+        trainer = make_trainer(mesh, mesh_cfg, cfg, plan.grad_accum)
+        trainer.set_shape(shape.global_batch, shape.seq_len)
+        progs.append(Program("train", trainer.jit_train_step(),
+                             (specs["state"], specs["batch"], jax.ShapeDtypeStruct((), jnp.float32)),
+                             mesh))
+        if gossip_variant:
+            progs.append(Program("train_gossip", trainer.jit_train_gossip_step(),
+                                 (specs["state"], specs["batch"], specs["active"],
+                                  specs["round_idx"]), mesh))
+        return progs
+    max_len = min(shape.seq_len, plan.decode_window) if plan.decode_window else shape.seq_len
+    prog = serve.make_serve_program(
+        mesh, mesh_cfg, cfg, batch=shape.global_batch, max_len=max_len,
+        window=plan.decode_window, with_prefill=(shape.kind == "prefill"))
+    if shape.kind == "decode":
+        progs.append(Program("decode", prog.decode_fn,
+                             (specs["params"], specs["cache"], specs["tokens"], specs["cond"]),
+                             mesh))
+    else:
+        progs.append(Program("prefill", prog.prefill_fn,
+                             (specs["params"], specs["tokens"], specs["cond"]), mesh))
+    return progs

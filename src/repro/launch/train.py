@@ -1,0 +1,143 @@
+"""End-to-end training driver (single-controller).
+
+Runs the paper's protocol (or any baseline) on an assigned architecture with
+the synthetic LM data pipeline, host-side gossip scheduling, checkpointing,
+and consensus metrics. On this CPU container it is exercised with reduced
+configs (examples/quickstart.py, tests); on a real cluster the same driver
+drives the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --reduced --steps 50 --method elastic_gossip --p 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig, TrainConfig
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core.consensus import divergence_metrics
+from repro.core.scheduler import GossipSchedule
+from repro.checkpoint import io as ckpt_io
+from repro.data.synthetic import make_lm_tokens
+from repro.launch.mesh import make_host_mesh, make_worker_mesh
+from repro.models import transformer as tr
+from repro.train.step import DistTrainer
+
+
+def lm_batches(cfg, num_workers: int, per_worker: int, seq: int, seed: int = 0):
+    """Worker-partitioned synthetic token stream (each worker gets a disjoint
+    slice, the paper's data-parallel partitioning)."""
+    stream = make_lm_tokens(num_workers * 4_000_000 // max(1, num_workers // 8), cfg.vocab_size, seed)
+    shard_len = len(stream) // num_workers
+    step = 0
+    while True:
+        xs = []
+        for w in range(num_workers):
+            base = w * shard_len + (step * per_worker * (seq + 1)) % (shard_len - per_worker * (seq + 1))
+            chunk = stream[base: base + per_worker * (seq + 1)].reshape(per_worker, seq + 1)
+            xs.append(chunk)
+        arr = np.stack(xs)
+        batch = {"tokens": jnp.asarray(arr[..., :-1]), "labels": jnp.asarray(arr[..., 1:])}
+        if cfg.audio is not None:
+            batch["tokens"] = jnp.repeat(batch["tokens"][:, :, None], cfg.audio.num_codebooks, 2)
+            batch["labels"] = jnp.repeat(batch["labels"][:, :, None], cfg.audio.num_codebooks, 2)
+            batch["cond"] = jnp.zeros((num_workers, per_worker, cfg.audio.num_cond_tokens,
+                                       cfg.d_model), jnp.float32)
+        elif cfg.vlm is not None:
+            batch["cond"] = jnp.zeros((num_workers, per_worker, cfg.vlm.num_image_tokens,
+                                       cfg.vlm.image_embed_dim), jnp.float32)
+        yield batch
+        step += 1
+
+
+def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int,
+        alpha: float, workers: int, global_batch: int, seq: int, lr: float,
+        seed: int = 0, checkpoint_dir: str = "", log_every: int = 10,
+        production_mesh: bool = False, multi_pod: bool = False):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    proto = ProtocolConfig(method=method, moving_rate=alpha,
+                           comm_probability=p if not tau else 0.0,
+                           comm_period=tau)
+    tcfg = TrainConfig(protocol=proto,
+                       optimizer=OptimizerConfig(name="nag", learning_rate=lr, momentum=0.9))
+    if production_mesh:
+        mesh_cfg = MeshConfig(data=16, model=16, pods=2 if multi_pod else 1,
+                              workers_per_pod=workers)
+        mesh = make_worker_mesh(mesh_cfg)
+    else:
+        mesh_cfg = MeshConfig(data=len(jax.devices()), model=1, pods=1,
+                              workers_per_pod=workers)
+        mesh = make_host_mesh(workers)
+
+    def init_fn(key):
+        params, _ = tr.init_lm(key, cfg)
+        return params
+
+    _, axes = tr.abstract_lm(cfg)
+    trainer = DistTrainer(mesh, mesh_cfg, cfg, tcfg, init_fn, axes)
+    trainer.set_shape(global_batch, seq)
+    state = trainer.init_state(jax.random.PRNGKey(seed))
+    ts, tg = trainer.jit_train_step(), trainer.jit_train_gossip_step()
+    sched = GossipSchedule(proto, mesh_cfg.num_workers, seed=seed + 1)
+    batches = lm_batches(cfg, mesh_cfg.num_workers, global_batch // mesh_cfg.num_workers,
+                         seq, seed)
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(batches)
+        fire, active, rnd = sched.poll(i)
+        if fire and proto.method not in ("easgd",):
+            state, m = tg(state, batch, jnp.asarray(active), jnp.int32(rnd))
+        elif proto.method == "easgd":
+            state, m = ts(state, batch, jnp.float32(fire))
+        else:
+            state, m = ts(state, batch, jnp.zeros(()))
+        if i % log_every == 0 or i == steps - 1:
+            div = divergence_metrics(state.params)
+            rec = {"step": i, "loss": float(m["loss"]),
+                   "consensus_rel": float(div["consensus_rel"]),
+                   "fired": bool(fire)}
+            history.append(rec)
+            print(json.dumps(rec))
+        if checkpoint_dir and (i + 1) % 50 == 0:
+            ckpt_io.save(f"{checkpoint_dir}/step_{i+1}.npz", state._asdict(),
+                         meta={"arch": arch, "step": i + 1, "protocol": dataclasses.asdict(proto)})
+    print(f"trained {steps} steps in {time.time()-t0:.1f}s; "
+          f"final loss {history[-1]['loss']:.4f}")
+    return state, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--method", default="elastic_gossip",
+                    choices=("elastic_gossip", "gossiping_pull", "gossiping_push",
+                             "allreduce", "easgd", "none"))
+    ap.add_argument("--p", type=float, default=0.25)
+    ap.add_argument("--tau", type=int, default=0)
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    run(a.arch, reduced=a.reduced, steps=a.steps, method=a.method, p=a.p, tau=a.tau,
+        alpha=a.alpha, workers=a.workers, global_batch=a.global_batch, seq=a.seq,
+        lr=a.lr, checkpoint_dir=a.checkpoint_dir,
+        production_mesh=a.production_mesh, multi_pod=a.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, blocks, common, mlp, moe, simple, ssm, transformer  # noqa: F401

@@ -1,0 +1,306 @@
+"""Block assembly: one residual block per architecture family, with a uniform
+(init / forward / prefill / decode / cache) interface so the Transformer can
+scan homogeneous segments of stacked layers.
+
+Kinds:
+  attn        self-attention (GQA or MLA) + FFN (dense or MoE)
+  attn_cross  self-attention + cross-attention (conditioning) + FFN (MusicGen)
+  mamba       Mamba2 SSD block
+  mlstm/slstm xLSTM blocks
+  cross_blk   standalone gated cross-attention block (Llama-3.2-V insertions)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.common import init_rmsnorm, rmsnorm, split_tree
+from repro.models.mlp import ffn_forward, init_ffn_cfg
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig, *, use_moe: bool = False,
+               dtype=jnp.float32) -> Tuple[PyTree, PyTree]:
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_cross"):
+        attn_init = attn.init_mla if cfg.mla is not None else attn.init_gqa
+        tree = {
+            "ln1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn_init(ks[0], cfg, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": (moe_mod.init_moe(ks[1], cfg, dtype) if use_moe
+                    else init_ffn_cfg(ks[1], cfg, dtype)),
+        }
+        if cfg.post_norms:
+            tree["post_ln1"] = init_rmsnorm(cfg.d_model, dtype)
+            tree["post_ln2"] = init_rmsnorm(cfg.d_model, dtype)
+        if kind == "attn_cross":
+            tree["ln_x"] = init_rmsnorm(cfg.d_model, dtype)
+            tree["xattn"] = attn.init_cross_attn(ks[2], cfg, cfg.d_model, dtype)
+        return split_tree(tree)
+    if kind == "mamba":
+        p, a = ssm.init_mamba2(ks[0], cfg, dtype)
+        n, na = init_rmsnorm(cfg.d_model, dtype)
+        return {"ln": n, "mixer": p}, {"ln": na, "mixer": a}
+    if kind == "mlstm":
+        p, a = ssm.init_mlstm(ks[0], cfg, dtype)
+        n, na = init_rmsnorm(cfg.d_model, dtype)
+        return {"ln": n, "mixer": p}, {"ln": na, "mixer": a}
+    if kind == "slstm":
+        p, a = ssm.init_slstm(ks[0], cfg, dtype)
+        n, na = init_rmsnorm(cfg.d_model, dtype)
+        return {"ln": n, "mixer": p}, {"ln": na, "mixer": a}
+    if kind == "cross_blk":
+        tree = {
+            "ln1": init_rmsnorm(cfg.d_model, dtype),
+            "xattn": attn.init_cross_attn(ks[0], cfg, cfg.vlm.image_embed_dim if cfg.vlm else cfg.d_model, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": init_ffn_cfg(ks[1], cfg, dtype),
+            "ffn_gate": (jnp.zeros((1,), dtype), (None,)),
+        }
+        return split_tree(tree)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# forward (training, full sequence, no cache)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(p_ffn, x, cfg: ModelConfig, use_moe: bool):
+    if use_moe:
+        return moe_mod.moe_forward(p_ffn, x, cfg)
+    return ffn_forward(p_ffn, x, cfg.activation), jnp.zeros((), jnp.float32)
+
+
+def block_forward(kind: str, p, x, cfg: ModelConfig, *, use_moe: bool = False,
+                  window=0, cond=None):
+    """Returns (x, aux_loss)."""
+    if kind in ("attn", "attn_cross"):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.mla is not None:
+            y, _ = attn.mla_forward(p["attn"], h, cfg)
+        else:
+            y, _ = attn.gqa_forward(p["attn"], h, cfg, window=window)
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln1"], y, cfg.norm_eps)
+        x = x + y
+        if kind == "attn_cross":
+            x = x + attn.cross_attn_forward(p["xattn"], rmsnorm(p["ln_x"], x, cfg.norm_eps), cond, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, aux = _ffn_apply(p["ffn"], h, cfg, use_moe)
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln2"], y, cfg.norm_eps)
+        return x + y, aux
+    if kind in ("mamba", "mlstm", "slstm"):
+        h = rmsnorm(p["ln"], x, cfg.norm_eps)
+        fwd = {"mamba": ssm.mamba2_forward, "mlstm": ssm.mlstm_forward, "slstm": ssm.slstm_forward}[kind]
+        return x + fwd(p["mixer"], h, cfg), jnp.zeros((), jnp.float32)
+    if kind == "cross_blk":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_forward(p["xattn"], h, cond, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        g = jnp.tanh(p["ffn_gate"].astype(jnp.float32))[0].astype(x.dtype)
+        return x + g * ffn_forward(p["ffn"], h, cfg.activation), jnp.zeros((), jnp.float32)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     *, dtype=jnp.float32, window: int = 0):
+    """Returns (cache, axes). window > 0 -> bounded ring buffer (sw decode)."""
+    if kind in ("attn", "attn_cross"):
+        size = min(window, max_len) if window else max_len
+        if cfg.mla is not None:
+            m = cfg.mla
+            cache = {"c_kv": jnp.zeros((batch, size, m.kv_lora_rank), dtype),
+                     "k_rope": jnp.zeros((batch, size, m.qk_rope_head_dim), dtype)}
+            axes = {"c_kv": ("batch", "seq_kv", None), "k_rope": ("batch", "seq_kv", None)}
+        else:
+            hd, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+            cache = {"k": jnp.zeros((batch, size, hkv, hd), dtype),
+                     "v": jnp.zeros((batch, size, hkv, hd), dtype)}
+            axes = {"k": ("batch", "seq_kv", "kv_heads", None),
+                    "v": ("batch", "seq_kv", "kv_heads", None)}
+        return cache, axes
+    if kind == "mamba":
+        return ssm.mamba2_init_cache(cfg, batch, jnp.float32)
+    if kind == "mlstm":
+        return ssm.mlstm_init_cache(cfg, batch, jnp.float32)
+    if kind == "slstm":
+        return ssm.slstm_init_cache(cfg, batch, jnp.float32)
+    if kind == "cross_blk":
+        return {}, {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, functional cache update)
+# ---------------------------------------------------------------------------
+
+def _attn_decode(p_attn, h, cache, pos, cfg: ModelConfig, window: int, window_mask=0):
+    """window (static python int): 0 = full cache at max_len; >0 = ring buffer
+    of that size (keys already roped at absolute positions; every live entry
+    is within the window by construction). window_mask (may be traced): extra
+    local-attention mask in full-cache mode (gemma2 local layers)."""
+    if cfg.mla is not None:
+        y, cc, ckr = attn.mla_decode(p_attn, h, cache["c_kv"], cache["k_rope"], pos, cfg)
+        return y, {"c_kv": cc, "k_rope": ckr}
+    if window:
+        size = cache["k"].shape[1]
+        slot = pos % size
+        positions = pos + jnp.zeros((1,), jnp.int32)
+        q, k, v = attn.gqa_qkv(p_attn, h, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        valid = jnp.minimum(pos + 1, size)
+        o = attn.chunked_attention(q, ck, cv, causal=False, kv_len=valid,
+                                   logit_softcap=cfg.attn_logit_softcap, chunk=min(1024, size))
+        y = jnp.einsum("bshk,hkd->bsd", o, p_attn["wo"].astype(h.dtype))
+        return y, {"k": ck, "v": cv}
+    y, ck, cv = attn.gqa_decode(p_attn, h, cache["k"], cache["v"], pos, cfg,
+                                window=window_mask, chunk=2048)
+    return y, {"k": ck, "v": cv}
+
+
+def block_decode(kind: str, p, x, cache, pos, cfg: ModelConfig, *, use_moe: bool = False,
+                 window: int = 0, window_mask=0, cond=None):
+    """x: [B, 1, d]. Returns (x, new_cache)."""
+    if kind in ("attn", "attn_cross"):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, new_cache = _attn_decode(p["attn"], h, cache, pos, cfg, window, window_mask)
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln1"], y, cfg.norm_eps)
+        x = x + y
+        if kind == "attn_cross":
+            x = x + attn.cross_attn_forward(p["xattn"], rmsnorm(p["ln_x"], x, cfg.norm_eps), cond, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, _ = _ffn_apply(p["ffn"], h, cfg, use_moe)
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln2"], y, cfg.norm_eps)
+        return x + y, new_cache
+    if kind in ("mamba", "mlstm", "slstm"):
+        h = rmsnorm(p["ln"], x, cfg.norm_eps)
+        step = {"mamba": ssm.mamba2_decode, "mlstm": ssm.mlstm_decode, "slstm": ssm.slstm_decode}[kind]
+        y, new_cache = step(p["mixer"], h, cache, cfg)
+        return x + y, new_cache
+    if kind == "cross_blk":
+        y, _ = block_forward(kind, p, x, cfg, cond=cond)
+        return y, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence, returns cache of length == seq)
+# ---------------------------------------------------------------------------
+
+def block_prefill(kind: str, p, x, cfg: ModelConfig, *, use_moe: bool = False,
+                  window=0, cond=None, cache_dtype=jnp.float32, max_len: int = 0):
+    """Returns (x, cache) covering positions [0, S), padded to max_len rows."""
+    def pad_seq(c, S):
+        if max_len and max_len > S:
+            return jax.tree.map(
+                lambda t: jnp.pad(t, [(0, 0), (0, max_len - S)] + [(0, 0)] * (t.ndim - 2)), c)
+        return c
+
+    if kind in ("attn", "attn_cross"):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.mla is not None:
+            y, (c_kv, k_rope) = attn.mla_forward(p["attn"], h, cfg)
+            cache = {"c_kv": c_kv.astype(cache_dtype), "k_rope": k_rope.astype(cache_dtype)}
+        else:
+            y, (k, v) = attn.gqa_forward(p["attn"], h, cfg, window=window)
+            cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+        cache = pad_seq(cache, x.shape[1])
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln1"], y, cfg.norm_eps)
+        x = x + y
+        if kind == "attn_cross":
+            x = x + attn.cross_attn_forward(p["xattn"], rmsnorm(p["ln_x"], x, cfg.norm_eps), cond, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, _ = _ffn_apply(p["ffn"], h, cfg, use_moe)
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln2"], y, cfg.norm_eps)
+        return x + y, cache
+    if kind in ("mamba", "mlstm", "slstm"):
+        # recurrent blocks: run forward and rebuild the terminal state
+        h = rmsnorm(p["ln"], x, cfg.norm_eps)
+        if kind == "mamba":
+            y, cache = _mamba2_prefill(p["mixer"], h, cfg)
+        elif kind == "mlstm":
+            y, cache = _mlstm_prefill(p["mixer"], h, cfg)
+        else:
+            y, cache = _slstm_prefill(p["mixer"], h, cfg)
+        return x + y, cache
+    if kind == "cross_blk":
+        y, _ = block_forward(kind, p, x, cfg, cond=cond)
+        return y, {}
+    raise ValueError(kind)
+
+
+def _mamba2_prefill(p, x, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    z, xbc, dt_pre = ssm._mamba2_split(p, x, s, d_inner, nheads)
+    xbc_c = ssm.causal_conv(p["conv_w"].astype(x.dtype), xbc)
+    q, k, v_dt, log_g, v, dt = ssm._mamba2_qkvg(p, xbc_c, dt_pre, s, d_inner, nheads)
+    y, state = ssm.gla_chunked(q, k, v_dt, log_g, chunk=min(s.chunk_size, x.shape[1]))
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * v.astype(jnp.float32)
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = ssm.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    conv_buf = xbc[:, -(s.conv_dim - 1):, :].astype(jnp.float32)
+    return y @ p["out_proj"].astype(x.dtype), {"state": state, "conv": conv_buf}
+
+
+def _mlstm_prefill(p, x, cfg: ModelConfig):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    up = x @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = ssm.causal_conv(p["conv_w"].astype(x.dtype), xi)
+    q, k, v_aug, log_f = ssm._mlstm_qkvg(p, xc, H, dh)
+    y_aug, state = ssm.gla_chunked(q, k, v_aug, log_f, chunk=min(256, x.shape[1]))
+    y = ssm._mlstm_out(y_aug.astype(jnp.float32))
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = ssm.rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    conv_buf = xi[:, -(xl.conv_dim - 1):, :].astype(jnp.float32)
+    return y @ p["down"].astype(x.dtype), {"state": state, "conv": conv_buf}
+
+
+def _slstm_prefill(p, x, cfg: ModelConfig):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    B, S, _ = x.shape
+    xi = x @ p["up"].astype(x.dtype)
+    xg = xi @ p["w_gates"].astype(x.dtype)
+    state = {k: jnp.zeros((B, d_in), jnp.float32) for k in ("c", "n", "h")}
+    state["m"] = jnp.full((B, d_in), -1e30, jnp.float32)
+
+    def body(st, xg_t):
+        st2 = ssm._slstm_cell(p, xg_t, st, H, dh)
+        return st2, st2["h"]
+
+    state, hs = jax.lax.scan(body, state, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = ssm.rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["down"].astype(x.dtype), state

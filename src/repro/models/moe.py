@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with capacity-based sort/scatter dispatch.
+
+Expert weights are stacked [E, d, f] and sharded expert-parallel over the
+'model' mesh axis. Dispatch is the production-standard capacity scheme:
+tokens are routed top-k, sorted by expert, placed into an [E, C, d] buffer
+(overflow dropped), processed with batched einsums, and combined back with
+router weights. Active-FLOPs = T * k * expert_ffn — no dense all-experts
+blow-up, so roofline compute terms reflect 6*N_active*D.
+
+DeepSeek-style shared experts are a plain always-on FFN added to the routed
+output. The load-balance auxiliary loss follows Switch/DeepSeek (mean over
+experts of fraction_dispatched * mean_router_prob * E).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, MoEConfig
+from repro.models.common import activation_fn, dense_init, maybe_shard, split_tree
+from repro.models.mlp import ffn_forward, init_ffn
+
+PyTree = Any
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[PyTree, PyTree]:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    dff = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 6)
+    gated = cfg.activation in ("swiglu", "geglu")
+    tree = {
+        "router": dense_init(ks[0], (d, m.num_experts), ("embed", "expert"), dtype),
+        "w_up": dense_init(ks[2], (m.num_experts, d, dff), ("expert", "embed", "ffn"), dtype, fan_in=d),
+        "w_down": dense_init(ks[3], (m.num_experts, dff, d), ("expert", "ffn", "embed"), dtype, fan_in=dff),
+    }
+    if gated:
+        tree["w_gate"] = dense_init(ks[1], (m.num_experts, d, dff), ("expert", "embed", "ffn"), dtype, fan_in=d)
+    if m.num_shared_experts:
+        tree["shared"] = init_ffn(ks[4], d, m.num_shared_experts * dff, cfg.activation, dtype)
+    return split_tree(tree)
+
+
+def _route(logits, top_k: int):
+    """softmax -> top-k -> renormalize (DeepSeek/Mixtral convention)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return probs, weights, ids
+
+
+
+
+def _build_buffer(xt, ids, weights, E: int, k: int, C: int):
+    """Route one token shard into its [E, C, d] buffer. Returns
+    (buffer, dest, s_tok, s_w, keep) — combine happens after expert compute."""
+    T, d = xt.shape
+    flat_ids = ids.reshape(-1)                                   # [T*k]
+    flat_tok = jnp.repeat(jnp.arange(T), k)                      # source token of each slot
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_ids, stable=True)                   # group by expert
+    s_ids, s_tok, s_w = flat_ids[order], flat_tok[order], flat_w[order]
+    # rank within expert = position - first position of that expert
+    counts = jnp.sum(jax.nn.one_hot(flat_ids, E, dtype=jnp.int32), axis=0)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k) - starts[s_ids]
+    keep = rank < C                                              # capacity drop
+    dest = jnp.where(keep, s_ids * C + rank, E * C)              # overflow -> scratch row
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dest].set(xt[s_tok])
+    return buf[:-1].reshape(E, C, d), dest, s_tok, s_w, keep
+
+
+def _expert_ffn(h, p, cfg: ModelConfig):
+    """h: [ds, E, C, d] -> [ds, E, C, d]. Layout pinned so GSPMD gathers the
+    (small) fsdp-sharded expert weights instead of all-reducing the (huge)
+    hidden activations (§Perf iteration 5c): ds on the dispatch axes, C on
+    nothing, expert-ffn dim on 'model'."""
+    axes = tuple(cfg.moe.dispatch_axes)
+    pin = (lambda t, *spec: maybe_shard(t, *spec)) if cfg.moe.dispatch_shards > 1 \
+        else (lambda t, *spec: t)    # pins only pay off with real local dispatch
+    act = activation_fn(cfg.activation)
+    up = jnp.einsum("secd,edf->secf", h, p["w_up"].astype(h.dtype))
+    up = pin(up, axes, None, None, "model")
+    if "w_gate" in p:
+        gate = jnp.einsum("secd,edf->secf", h, p["w_gate"].astype(h.dtype))
+        gate = pin(gate, axes, None, None, "model")
+        hidden = act(gate) * up
+    else:
+        hidden = act(up)
+    out = jnp.einsum("secf,efd->secd", hidden, p["w_down"].astype(h.dtype))
+    return pin(out, axes, None, None, None)
+
+
+def _combine_one(out, dest, s_tok, s_w, keep, T: int):
+    E, C, d = out.shape
+    out_flat = jnp.concatenate([out.reshape(E * C, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    gathered = out_flat[dest] * (s_w * keep).astype(out.dtype)[:, None]   # [T*k, d]
+    return jnp.zeros((T, d), out.dtype).at[s_tok].add(gathered)
+
+
+def moe_forward(p, x, cfg: ModelConfig, capacity_factor: float = 0.0):
+    """x: [B, S, d] -> (y, aux_loss).
+
+    With ``moe.dispatch_shards = n > 1`` tokens are routed independently in n
+    shards (vmap over a leading dim aligned with the batch sharding), each
+    with capacity C/n: the sort/scatter stays local to the data shards and
+    only the compact [E, C/n, d] expert buffers cross the mesh (§Perf
+    iteration 5b).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    cf = capacity_factor or m.capacity_factor
+    ds = max(1, m.dispatch_shards)
+    assert T % ds == 0, (T, ds)
+    C = max(int(T * k / (E * ds) * cf), 1)
+
+    xt = x.reshape(T, d)
+    probs, weights, ids = _route(xt @ p["router"].astype(x.dtype), k)   # [T,E],[T,k],[T,k]
+
+    Tl = T // ds
+    xs = xt.reshape(ds, Tl, d)
+    h, dest, s_tok, s_w, keep = jax.vmap(
+        lambda a, b, c: _build_buffer(a, b, c, E, k, C))(
+        xs, ids.reshape(ds, Tl, k), weights.reshape(ds, Tl, k))
+    if ds > 1:
+        h = maybe_shard(h, tuple(cfg.moe.dispatch_axes), None, None, None)   # [ds, E, C, d]
+    out = _expert_ffn(h, p, cfg)
+    y = jax.vmap(lambda o, de, st, sw, kp: _combine_one(o, de, st, sw, kp, Tl))(
+        out, dest, s_tok, s_w, keep)
+    y = y.reshape(T, d).astype(x.dtype)
+
+    if m.num_shared_experts:
+        y = y + ffn_forward(p["shared"], xt, cfg.activation)
+
+    # ---- load-balance aux (Switch eq. 4) ---------------------------------
+    frac_tokens = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(B, S, d), aux
+
+
+def router_stats(p, x, cfg: ModelConfig):
+    """Router diagnostics (used by consensus metrics to measure how far
+    gossiping replicas' routers have drifted apart)."""
+    m = cfg.moe
+    logits = x.reshape(-1, x.shape[-1]) @ p["router"].astype(x.dtype)
+    probs, _, ids = _route(logits, m.top_k)
+    load = jnp.bincount(ids.reshape(-1), length=m.num_experts) / ids.size
+    return {"expert_load": load, "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1))}

@@ -1,0 +1,107 @@
+"""The paper's own models: the MNIST MLP (§4.1) and a CIFAR-style CNN (§4.2).
+
+MLP exactly as §4.1: 3 dense layers of 1024 ReLU units, Kaiming init,
+dropout p=0.2 at input / 0.5 at hidden, 10-way softmax. (Dropout is applied
+only when a PRNG key is supplied.)
+
+The CNN is a small residual conv net in the spirit of the paper's
+(pre-activation ResNet-18) CIFAR model — depth is reduced so the CPU-only
+reproduction benchmarks finish; the paper's protocol comparisons are about
+*relative* behavior of the training methods, which this preserves.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_tree
+
+PyTree = Any
+
+
+def init_mlp(key, in_dim: int = 784, hidden: int = 1024, depth: int = 3,
+             num_classes: int = 10, dtype=jnp.float32):
+    ks = jax.random.split(key, depth + 1)
+    tree = {}
+    d = in_dim
+    for i in range(depth):
+        tree[f"w{i}"] = dense_init(ks[i], (d, hidden), ("embed", "ffn"), dtype)
+        tree[f"b{i}"] = (jnp.zeros((hidden,), dtype), (None,))
+        d = hidden
+    tree["w_out"] = dense_init(ks[-1], (d, num_classes), ("ffn", None), dtype)
+    tree["b_out"] = (jnp.zeros((num_classes,), dtype), (None,))
+    return split_tree(tree)
+
+
+def mlp_logits(params, x, *, dropout_key: Optional[jax.Array] = None,
+               p_in: float = 0.2, p_hidden: float = 0.5):
+    depth = sum(1 for k in params if k.startswith("w") and k != "w_out")
+    h = x
+    if dropout_key is not None:
+        dropout_key, sub = jax.random.split(dropout_key)
+        h = h * jax.random.bernoulli(sub, 1 - p_in, h.shape) / (1 - p_in)
+    for i in range(depth):
+        h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+        if dropout_key is not None:
+            dropout_key, sub = jax.random.split(dropout_key)
+            h = h * jax.random.bernoulli(sub, 1 - p_hidden, h.shape) / (1 - p_hidden)
+    return h @ params["w_out"] + params["b_out"]
+
+
+def init_cnn(key, num_classes: int = 10, width: int = 32, dtype=jnp.float32):
+    """Pre-activation residual CNN: stem + 3 stages x 1 residual block."""
+    ks = jax.random.split(key, 16)
+    i = 0
+
+    def conv(kk, cin, cout, k=3):
+        return dense_init(kk, (k, k, cin, cout), (None, None, None, "ffn"), dtype, fan_in=k * k * cin)
+
+    tree = {"stem": conv(ks[i], 3, width)}
+    i += 1
+    c = width
+    for s in range(3):
+        cout = width * (2 ** s)
+        tree[f"s{s}_c1"] = conv(ks[i], c, cout); i += 1
+        tree[f"s{s}_c2"] = conv(ks[i], cout, cout); i += 1
+        if c != cout:
+            tree[f"s{s}_proj"] = conv(ks[i], c, cout, k=1); i += 1
+        c = cout
+    tree["head"] = dense_init(ks[i], (c, num_classes), ("ffn", None), dtype)
+    tree["head_b"] = (jnp.zeros((num_classes,), dtype), (None,))
+    return split_tree(tree)
+
+
+def _conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _norm(x):
+    # parameter-free norm (batch-statistics-free, replica-local): groupnorm-ish
+    mu = jnp.mean(x, axis=(1, 2, 3), keepdims=True)
+    sd = jnp.std(x, axis=(1, 2, 3), keepdims=True) + 1e-5
+    return (x - mu) / sd
+
+
+def cnn_logits(params, x, **_):
+    h = _conv2d(x, params["stem"])
+    for s in range(3):
+        stride = 1 if s == 0 else 2
+        r = jax.nn.relu(_norm(h))
+        y = _conv2d(r, params[f"s{s}_c1"], stride)
+        y = _conv2d(jax.nn.relu(_norm(y)), params[f"s{s}_c2"])
+        skip = _conv2d(r, params[f"s{s}_proj"], stride) if f"s{s}_proj" in params else h
+        h = skip + y
+    h = jnp.mean(jax.nn.relu(_norm(h)), axis=(1, 2))
+    return h @ params["head"] + params["head_b"]
+
+
+def xent_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

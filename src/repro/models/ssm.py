@@ -1,0 +1,380 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM, sLSTM).
+
+Both Mamba2's SSD and the mLSTM are instances of *gated linear attention*:
+
+    S_t = g_t * S_{t-1} + k_t v_t^T        (per head; g_t in (0,1])
+    y_t = q_t^T S_t
+
+so one chunked core (:func:`gla_chunked`) serves both: intra-chunk terms via
+masked matmuls (MXU-friendly), inter-chunk via a lax.scan over chunk states.
+Decode is the O(1) recurrence (:func:`gla_step`) — this is what makes the
+long_500k shape native for ssm/hybrid archs (DESIGN.md §4).
+
+Gating variants vs. the source papers (noted per DESIGN.md hardware-adaptation
+policy): mLSTM uses sigmoid input gates + the shared GLA core instead of the
+exp-gate running-max stabilizer; Mamba2 applies rmsnorm after (not fused with)
+the z-gate. Structure, state shapes, and asymptotics match the papers.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, SSMConfig, XLSTMConfig
+from repro.models.common import dense_init, ones_init, rmsnorm, split_tree, zeros_init
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear attention core
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q, k, v, log_g, *, chunk: int = 256, initial_state=None):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_g: [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,dv], final_state [B,H,dk,dv]).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    N = S // Q
+
+    qc = q.reshape(B, N, Q, H, dk)
+    kc = k.reshape(B, N, Q, H, dk)
+    vc = v.reshape(B, N, Q, H, dv)
+    gc = log_g.reshape(B, N, Q, H).astype(jnp.float32)
+    a = jnp.cumsum(gc, axis=2)                                   # inclusive cum log decay
+    a_tot = a[:, :, -1]                                          # [B,N,H]
+
+    # intra-chunk: coeff exp(a_t - a_s) for s <= t
+    # keep operands in their storage dtype; accumulate in f32 (avoids
+    # materializing full f32 copies of q/k — §Perf iteration 4)
+    att = jnp.einsum("bnqhk,bnshk->bnhqs", qc, kc, preferred_element_type=jnp.float32)
+    # a: [B,N,Q,H] -> [B,N,H,Q(t),Q(s)] coefficient exp(a_t - a_s). Mask the
+    # exponent BEFORE exp: for s > t the difference is positive and exp would
+    # overflow to inf, poisoning gradients through the later where().
+    a_t = jnp.moveaxis(a, 3, 2)                                  # [B,N,H,Q]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask, a_t[..., :, None] - a_t[..., None, :], 0.0)
+    att = jnp.where(mask, att * jnp.exp(diff), 0.0)
+    y_intra = jnp.einsum("bnhqs,bnshv->bnqhv", att, vc.astype(jnp.float32))
+
+    # chunk state contribution: sum_s exp(a_tot - a_s) k_s v_s^T
+    k_scaled = kc * jnp.exp(a_tot[:, :, None] - a)[..., None].astype(kc.dtype)
+    chunk_states = jnp.einsum("bnshk,bnshv->bnhkv", k_scaled, vc,
+                              preferred_element_type=jnp.float32)
+    q_scaled = qc * jnp.exp(a)[..., None].astype(qc.dtype)       # [B,N,Q,H,dk]
+
+    # Compute y_inter INSIDE the scan so the per-chunk entering states are
+    # never stacked: stacking [B,N,H,dk,dv] f32 was the dominant live buffer
+    # for mamba2-scale dims (EXPERIMENTS.md §Perf iteration 1: 73 GB -> fits).
+    def scan_body(S_in, xs):
+        cs, atot, qs = xs                                        # per-chunk slices
+        y_int = jnp.einsum("bqhk,bhkv->bqhv", qs, S_in.astype(qs.dtype),
+                           preferred_element_type=jnp.float32)
+        S_out = jnp.exp(atot)[..., None, None] * S_in + cs
+        return S_out, y_int
+
+    S0 = (jnp.zeros((B, H, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    S_fin, y_inter = jax.lax.scan(
+        scan_body, S0,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(a_tot, 1, 0),
+         jnp.moveaxis(q_scaled, 1, 0)))
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                        # [B,N,Q,H,dv]
+    y = (y_intra + y_inter).reshape(B, S, H, dv)
+    return y.astype(q.dtype), S_fin
+
+
+def gla_step(q, k, v, log_g, state):
+    """One-token recurrence. q,k: [B,H,dk]; v: [B,H,dv]; log_g: [B,H];
+    state: [B,H,dk,dv]. Returns (y [B,H,dv], new_state)."""
+    g = jnp.exp(log_g.astype(jnp.float32))[..., None, None]
+    new_state = g * state.astype(jnp.float32) + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), new_state)
+    return y.astype(q.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width w), with decode buffer
+# ---------------------------------------------------------------------------
+
+def causal_conv(w, x):
+    """w: [cw, C]; x: [B, S, C] -> [B, S, C]."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(cw))
+    return jax.nn.silu(out)
+
+
+def causal_conv_step(w, buf, x1):
+    """buf: [B, cw-1, C] previous inputs; x1: [B, C]. Returns (y [B,C], new buf)."""
+    cw = w.shape[0]
+    window = jnp.concatenate([buf, x1[:, None]], axis=1)          # [B, cw, C]
+    y = jnp.einsum("bwc,wc->bc", window, w)
+    return jax.nn.silu(y), window[:, 1:] if cw > 1 else buf
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[PyTree, PyTree]:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.ngroups * s.state_dim
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+    tree = {
+        "in_proj": dense_init(ks[0], (d, proj_out), ("embed", "inner"), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_dim, conv_ch), (None, "inner"), dtype, fan_in=s.conv_dim),
+        "a_log": (jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype), (None,)),
+        "dt_bias": zeros_init((nheads,), (None,), dtype),
+        "d_skip": ones_init((nheads,), (None,), dtype),
+        "norm": ones_init((d_inner,), ("act_embed",), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), ("inner", "embed"), dtype, fan_in=d_inner),
+    }
+    return split_tree(tree)
+
+
+def _mamba2_split(p, x, s: SSMConfig, d_inner, nheads):
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt_pre = jnp.split(xbc_dt, [d_inner + 2 * s.ngroups * s.state_dim], axis=-1)
+    return z, xbc, dt_pre
+
+
+def _mamba2_qkvg(p, xbc, dt_pre, s: SSMConfig, d_inner, nheads):
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + s.ngroups * s.state_dim], axis=-1)
+    shape = xs.shape[:-1]
+    heads_per_group = nheads // s.ngroups
+    v = xs.reshape(shape + (nheads, s.head_dim))
+    k = jnp.repeat(B_.reshape(shape + (s.ngroups, s.state_dim)), heads_per_group, axis=-2)
+    q = jnp.repeat(C_.reshape(shape + (s.ngroups, s.state_dim)), heads_per_group, axis=-2)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    log_g = dt * A                                               # [.., H]
+    v_dt = v.astype(jnp.float32) * dt[..., None]
+    return q, k, v_dt.astype(v.dtype), log_g, v, dt
+
+
+def mamba2_forward(p, x, cfg: ModelConfig):
+    """x: [B, S, d] -> [B, S, d]."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    z, xbc, dt_pre = _mamba2_split(p, x, s, d_inner, nheads)
+    xbc = causal_conv(p["conv_w"].astype(x.dtype), xbc)
+    q, k, v_dt, log_g, v, dt = _mamba2_qkvg(p, xbc, dt_pre, s, d_inner, nheads)
+    y, _ = gla_chunked(q, k, v_dt, log_g, chunk=s.chunk_size)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * v.astype(jnp.float32)
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.ngroups * s.state_dim
+    cache = {"state": jnp.zeros((batch, nheads, s.state_dim, s.head_dim), dtype),
+             "conv": jnp.zeros((batch, s.conv_dim - 1, conv_ch), dtype)}
+    axes = {"state": ("batch", "inner", None, None), "conv": ("batch", None, "inner")}
+    return cache, axes
+
+
+def mamba2_decode(p, x, cache, cfg: ModelConfig):
+    """x: [B, 1, d]."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    z, xbc, dt_pre = _mamba2_split(p, x[:, 0], s, d_inner, nheads)
+    xbc, conv_new = causal_conv_step(p["conv_w"].astype(x.dtype), cache["conv"], xbc)
+    q, k, v_dt, log_g, v, dt = _mamba2_qkvg(p, xbc, dt_pre, s, d_inner, nheads)
+    y, state_new = gla_step(q, k, v_dt, log_g, cache["state"])
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * v.astype(jnp.float32)
+    y = y.reshape(x.shape[0], d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"state": state_new, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory via the GLA core
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[PyTree, PyTree]:
+    x: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(d * x.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    ks = jax.random.split(key, 8)
+    tree = {
+        "up": dense_init(ks[0], (d, 2 * d_in), ("embed", "inner"), dtype),
+        "conv_w": dense_init(ks[1], (x.conv_dim, d_in), (None, "inner"), dtype, fan_in=x.conv_dim),
+        "wq": dense_init(ks[2], (d_in, H, dh), ("inner", "heads", None), dtype, fan_in=d_in),
+        "wk": dense_init(ks[3], (d_in, H, dh), ("inner", "heads", None), dtype, fan_in=d_in),
+        "wv": dense_init(ks[4], (d_in, H, dh), ("inner", "heads", None), dtype, fan_in=d_in),
+        "w_if": dense_init(ks[5], (d_in, 2 * H), ("inner", None), dtype, fan_in=d_in),
+        "f_bias": (3.0 * jnp.ones((H,), dtype), (None,)),        # forget bias -> long memory
+        "norm": ones_init((d_in,), ("act_embed",), dtype),
+        "down": dense_init(ks[6], (d_in, d), ("inner", "embed"), dtype, fan_in=d_in),
+    }
+    return split_tree(tree)
+
+
+def _mlstm_qkvg(p, xc, H, dh):
+    q = jnp.einsum("...c,chk->...hk", xc, p["wq"].astype(xc.dtype)) * dh ** -0.5
+    k = jnp.einsum("...c,chk->...hk", xc, p["wk"].astype(xc.dtype))
+    v = jnp.einsum("...c,chk->...hk", xc, p["wv"].astype(xc.dtype))
+    if_pre = xc @ p["w_if"].astype(xc.dtype)
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+    i_gate = jax.nn.sigmoid(i_pre.astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32) + p["f_bias"].astype(jnp.float32))
+    k = k * i_gate[..., None].astype(k.dtype)                    # fold input gate into k
+    # augment v with a ones column for the normalizer n_t
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    return q, k, v_aug, log_f
+
+
+def _mlstm_out(y_aug):
+    y, den = y_aug[..., :-1], y_aug[..., -1:]
+    return y / jnp.maximum(jnp.abs(den), 1.0)
+
+
+def mlstm_forward(p, x, cfg: ModelConfig):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    up = x @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = causal_conv(p["conv_w"].astype(x.dtype), xi)
+    q, k, v_aug, log_f = _mlstm_qkvg(p, xc, H, dh)
+    y_aug, _ = gla_chunked(q, k, v_aug, log_f, chunk=min(256, x.shape[1]))
+    y = _mlstm_out(y_aug.astype(jnp.float32))
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["down"].astype(x.dtype)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    cache = {"state": jnp.zeros((batch, H, dh, dh + 1), dtype),
+             "conv": jnp.zeros((batch, xl.conv_dim - 1, d_in), dtype)}
+    axes = {"state": ("batch", "heads", None, None), "conv": ("batch", None, "inner")}
+    return cache, axes
+
+
+def mlstm_decode(p, x, cache, cfg: ModelConfig):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    up = x[:, 0] @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, conv_new = causal_conv_step(p["conv_w"].astype(x.dtype), cache["conv"], xi)
+    q, k, v_aug, log_f = _mlstm_qkvg(p, xc, H, dh)
+    y_aug, state_new = gla_step(q, k, v_aug, log_f, cache["state"])
+    y = _mlstm_out(y_aug.astype(jnp.float32)).reshape(x.shape[0], d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return (y @ p["down"].astype(x.dtype))[:, None], {"state": state_new, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, sequential scan, exp-gate stabilizer
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32) -> Tuple[PyTree, PyTree]:
+    x: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(d * x.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    ks = jax.random.split(key, 4)
+    tree = {
+        "up": dense_init(ks[0], (d, d_in), ("embed", "inner"), dtype),
+        "w_gates": dense_init(ks[1], (d_in, 4 * d_in), ("inner", "inner"), dtype, fan_in=d_in),
+        "r_gates": dense_init(ks[2], (H, dh, 4 * dh), ("heads", None, None), dtype,
+                              fan_in=dh, scale=0.5),
+        "g_bias": zeros_init((4 * d_in,), (None,), dtype),
+        "norm": ones_init((d_in,), ("act_embed",), dtype),
+        "down": dense_init(ks[3], (d_in, d), ("inner", "embed"), dtype, fan_in=d_in),
+    }
+    return split_tree(tree)
+
+
+def _slstm_cell(p, xg, state, H, dh):
+    """xg: [B, 4*d_in] pre-computed input contribution; state: dict of [B, d_in]."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    B = h.shape[0]
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"].astype(h.dtype)).reshape(B, 4 * H * dh)
+    z_pre, i_pre, f_pre, o_pre = jnp.split(
+        (xg + rec + p["g_bias"].astype(xg.dtype)).astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_i = i_pre
+    log_f = jax.nn.log_sigmoid(f_pre)                            # sigmoid forget variant
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(p, x, cfg: ModelConfig):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    B, S, _ = x.shape
+    xi = x @ p["up"].astype(x.dtype)
+    xg = xi @ p["w_gates"].astype(x.dtype)                       # [B,S,4*d_in]
+    state = {k: jnp.zeros((B, d_in), jnp.float32) for k in ("c", "n", "h", "m")}
+    state["m"] = jnp.full((B, d_in), -1e30, jnp.float32)
+
+    def body(st, xg_t):
+        st2 = _slstm_cell(p, xg_t, st, H, dh)
+        return st2, st2["h"]
+
+    _, hs = jax.lax.scan(body, state, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                   # [B,S,d_in]
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["down"].astype(x.dtype)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor)
+    cache = {k: jnp.zeros((batch, d_in), jnp.float32) for k in ("c", "n", "h")}
+    cache["m"] = jnp.full((batch, d_in), -1e30, jnp.float32)
+    axes = {k: ("batch", "inner") for k in ("c", "n", "h", "m")}
+    return cache, axes
+
+
+def slstm_decode(p, x, cache, cfg: ModelConfig):
+    xl = cfg.xlstm
+    d_in = int(cfg.d_model * xl.proj_factor)
+    H = cfg.num_heads
+    dh = d_in // H
+    xi = x[:, 0] @ p["up"].astype(x.dtype)
+    xg = xi @ p["w_gates"].astype(x.dtype)
+    st = _slstm_cell(p, xg, cache, H, dh)
+    y = rmsnorm(p["norm"], st["h"].astype(x.dtype), cfg.norm_eps)
+    return (y @ p["down"].astype(x.dtype))[:, None], st

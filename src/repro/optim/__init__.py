@@ -1,0 +1,2 @@
+from repro.optim.optimizers import OptState, Optimizer, make_optimizer, param_update, velocity_update  # noqa: F401
+from repro.optim.schedule import lr_at  # noqa: F401

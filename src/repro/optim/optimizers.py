@@ -1,0 +1,119 @@
+"""Optimizers as pure functions over pytrees.
+
+``nag`` implements exactly the velocity form of the paper's Algorithm 5
+(Sutskever et al. 2013 Nesterov):
+
+    v   <- mu * v - eta * g          (line 3)
+    theta <- theta - eta*g + mu*v    (line 9, with the *updated* v)
+
+so the communication-related (elastic/gossip) component can be interleaved
+between the velocity update and the parameter update, matching the algorithm's
+line ordering. The optimizer state and params may carry a leading worker dim —
+everything here is elementwise, so it is oblivious to stacking/sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import OptimizerConfig
+from repro.common.pytree import tree_zeros_like
+from repro.optim.schedule import lr_at
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree            # velocity (sgd/nag) or first moment (adamw)
+    nu: PyTree            # second moment (adamw) or empty dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+    cfg: OptimizerConfig
+
+
+def _clip(cfg: OptimizerConfig, grads: PyTree) -> PyTree:
+    if cfg.grad_clip <= 0:
+        return grads
+    from repro.common.pytree import global_norm
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "sgd":
+        def init(params):
+            return OptState(jnp.zeros((), jnp.int32), {}, {})
+
+        def update(grads, state, params):
+            grads = _clip(cfg, grads)
+            eta = lr_at(cfg, state.step)
+            new = jax.tree.map(lambda p, g: p - eta * g.astype(p.dtype), params, grads)
+            if cfg.weight_decay:
+                new = jax.tree.map(lambda n, p: n - eta * cfg.weight_decay * p, new, params)
+            return new, OptState(state.step + 1, {}, {})
+
+    elif cfg.name == "nag":
+        def init(params):
+            return OptState(jnp.zeros((), jnp.int32), tree_zeros_like(params), {})
+
+        def update(grads, state, params):
+            grads = _clip(cfg, grads)
+            eta = lr_at(cfg, state.step)
+            mu = cfg.momentum
+            v_new = jax.tree.map(lambda v, g: mu * v - eta * g.astype(v.dtype), state.mu, grads)
+            new = jax.tree.map(lambda p, g, v: p - eta * g.astype(p.dtype) + mu * v.astype(p.dtype),
+                               params, grads, v_new)
+            return new, OptState(state.step + 1, v_new, {})
+
+    elif cfg.name == "adamw":
+        def init(params):
+            return OptState(jnp.zeros((), jnp.int32), tree_zeros_like(params), tree_zeros_like(params))
+
+        def update(grads, state, params):
+            grads = _clip(cfg, grads)
+            eta = lr_at(cfg, state.step)
+            t = state.step + 1
+            b1, b2 = cfg.beta1, cfg.beta2
+            mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+            nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(n.dtype)), state.nu, grads)
+            c1 = 1 - b1 ** t.astype(jnp.float32)
+            c2 = 1 - b2 ** t.astype(jnp.float32)
+
+            def upd(p, m, n):
+                step = (m / c1) / (jnp.sqrt(n / c2) + cfg.eps)
+                return p - eta * (step.astype(p.dtype) + cfg.weight_decay * p)
+
+            new = jax.tree.map(upd, params, mu, nu)
+            return new, OptState(t, mu, nu)
+
+    else:
+        raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+    return Optimizer(init=init, update=update, cfg=cfg)
+
+
+def velocity_update(cfg: OptimizerConfig, state: OptState, grads: PyTree) -> tuple[PyTree, OptState]:
+    """Split-phase NAG (paper Alg. 5): compute the new velocity only (line 3).
+    The caller interleaves the gossip/elastic move, then applies
+    :func:`param_update` (line 9)."""
+    assert cfg.name == "nag"
+    grads = _clip(cfg, grads)
+    eta = lr_at(cfg, state.step)
+    v_new = jax.tree.map(lambda v, g: cfg.momentum * v - eta * g.astype(v.dtype), state.mu, grads)
+    return v_new, OptState(state.step + 1, v_new, {})
+
+
+def param_update(cfg: OptimizerConfig, step, params: PyTree, grads: PyTree, v_new: PyTree) -> PyTree:
+    """Line 9 of Alg. 5: theta <- theta - eta*g + mu*v_new."""
+    eta = lr_at(cfg, step)
+    return jax.tree.map(lambda p, g, v: p - eta * g.astype(p.dtype) + cfg.momentum * v.astype(p.dtype),
+                        params, grads, v_new)

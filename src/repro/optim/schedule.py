@@ -1,0 +1,33 @@
+"""Learning-rate schedules.
+
+The paper uses a constant LR for MNIST (§4.1) and a step-anneal for CIFAR-10
+(§4.2: initial 0.01, halved after epochs 15/30/40). Cosine+warmup is provided
+for the modern arch configs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.config import OptimizerConfig
+
+
+def lr_at(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    base = jnp.asarray(cfg.learning_rate, jnp.float32)
+    if cfg.schedule == "constant":
+        lr = base
+    elif cfg.schedule == "step":
+        factor = jnp.ones((), jnp.float32)
+        for boundary in cfg.step_anneal_at:
+            factor = factor * jnp.where(step >= boundary, cfg.step_anneal_factor, 1.0)
+        lr = base * factor
+    elif cfg.schedule == "cosine":
+        decay = max(cfg.decay_steps, 1)
+        frac = jnp.clip((step - cfg.warmup_steps) / decay, 0.0, 1.0)
+        lr = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    if cfg.warmup_steps > 0:
+        warm = jnp.clip((step + 1) / cfg.warmup_steps, 0.0, 1.0)
+        lr = lr * warm
+    return lr

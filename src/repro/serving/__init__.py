@@ -1,0 +1,1 @@
+from repro.serving.engine import ServeProgram, consensus_params, make_serve_program  # noqa: F401

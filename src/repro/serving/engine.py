@@ -1,0 +1,124 @@
+"""Serving engine: consensus-parameter prefill + batched single-token decode.
+
+Inference uses the consensus (worker-averaged) parameters — gossip is a
+training-time protocol, so serving is the standard path of the framework:
+params without the replica dim, batch sharded over all data axes
+('pod','worker','fsdp'), weights sharded ('fsdp','model') 2-D (big replicas
+must spread beyond the model axis; the per-layer all-gather this implies is a
+measured roofline term and a §Perf hillclimb subject).
+
+KV-cache sharding adapts per arch (DESIGN.md §4): kv-head-sharded over
+'model' when the head count divides, else sequence-sharded over 'model'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import MeshConfig, ModelConfig
+from repro.launch import sharding as shr
+from repro.models import transformer as tr
+
+PyTree = Any
+
+
+def serve_rules(cfg: ModelConfig, mesh: Mesh) -> dict:
+    rules = dict(shr.DEFAULT_RULES)
+    rules.update({
+        "batch": ("pod", "worker", "fsdp"),
+        "kv_heads": ("model",),
+        "seq_kv": ("model",),
+    })
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.mla is None and cfg.num_kv_heads % model_size == 0:
+        rules["seq_kv"] = ()    # prefer head sharding; keep 'model' free for it
+    return rules
+
+
+@dataclasses.dataclass
+class ServeProgram:
+    model_cfg: ModelConfig
+    mesh: Mesh
+    param_specs: PyTree          # PartitionSpec tree (single replica)
+    param_shapes: PyTree         # ShapeDtypeStruct tree
+    cache_specs: PyTree
+    cache_shapes: PyTree
+    decode_fn: Callable          # jit'd (params, cache, tokens[, cond]) -> (logits, cache)
+    prefill_fn: Optional[Callable]
+    batch: int
+    max_len: int
+    window: int
+
+    def token_shapes(self, seq: int = 1):
+        cfg = self.model_cfg
+        if cfg.audio is not None:
+            return jax.ShapeDtypeStruct((self.batch, cfg.audio.num_codebooks, seq), jnp.int32)
+        return jax.ShapeDtypeStruct((self.batch, seq), jnp.int32)
+
+    def cond_shapes(self):
+        cfg = self.model_cfg
+        if cfg.audio is not None:
+            return jax.ShapeDtypeStruct((self.batch, cfg.audio.num_cond_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        if cfg.vlm is not None:
+            return jax.ShapeDtypeStruct((self.batch, cfg.vlm.num_image_tokens,
+                                         cfg.vlm.image_embed_dim), jnp.bfloat16)
+        return None
+
+
+def make_serve_program(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ModelConfig, *,
+                       batch: int, max_len: int, window: int = 0,
+                       param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                       with_prefill: bool = False, prefill_len: int = 0) -> ServeProgram:
+    rules = serve_rules(cfg, mesh)
+    param_shapes, param_axes = tr.abstract_lm(cfg, param_dtype)
+    param_specs = shr.tree_specs(param_shapes, param_axes, mesh, rules)
+    cache_shapes, cache_axes = tr.abstract_cache(cfg, batch, max_len,
+                                                 dtype=cache_dtype, window=window)
+    cache_specs = shr.tree_specs(cache_shapes, cache_axes, mesh, rules)
+    data_axes = tuple(a for a in ("pod", "worker", "fsdp") if a in mesh.axis_names)
+    n_data = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a in data_axes:
+            n_data *= s
+    # batch must divide across the data axes to shard it; else replicate (long_500k B=1)
+    bshard = NamedSharding(mesh, P(data_axes) if batch % n_data == 0 else P())
+    rep = NamedSharding(mesh, P())
+
+    def shard(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def decode(params, cache, tokens, cond):
+        logits, new_cache = tr.decode_step(params, cfg, cache, tokens, cond, window=window)
+        return logits, new_cache
+
+    decode_fn = jax.jit(
+        decode,
+        in_shardings=(shard(param_specs), shard(cache_specs), bshard, bshard),
+        out_shardings=(bshard, shard(cache_specs)),
+        donate_argnums=(1,))
+
+    prefill_fn = None
+    if with_prefill:
+        def pf(params, tokens, cond):
+            return tr.prefill(params, cfg, tokens, cond, cache_dtype=cache_dtype,
+                              max_len=max_len)
+
+        prefill_fn = jax.jit(
+            pf,
+            in_shardings=(shard(param_specs), bshard, bshard),
+            out_shardings=(bshard, shard(cache_specs)))
+
+    return ServeProgram(cfg, mesh, param_specs, param_shapes, cache_specs, cache_shapes,
+                        decode_fn, prefill_fn, batch, max_len, window)
+
+
+def consensus_params(params_stacked: PyTree) -> PyTree:
+    """Average the worker replicas -> serving params (paper 'Aggregate')."""
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+                        params_stacked)

@@ -1,0 +1,2 @@
+from repro.train import losses, step  # noqa: F401
+from repro.train.step import DistTrainer, TrainState  # noqa: F401

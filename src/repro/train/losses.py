@@ -1,0 +1,50 @@
+"""Per-architecture loss closures for the distributed trainer."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import transformer as tr
+
+PyTree = Any
+
+
+def lm_loss_fn(cfg: ModelConfig):
+    """Returns loss(params, batch) -> scalar. batch keys: tokens, labels,
+    optionally cond (stubbed modality embeddings)."""
+
+    def loss(params, batch: Dict[str, jnp.ndarray]):
+        total, _ = tr.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                              batch.get("cond"))
+        return total
+
+    return loss
+
+
+def batch_shapes(cfg: ModelConfig, per_worker_batch: int, seq_len: int) -> Dict[str, tuple]:
+    """Shapes of ONE worker's batch (no worker dim), with dtypes."""
+    if cfg.audio is not None:
+        K = cfg.audio.num_codebooks
+        out = {"tokens": ((per_worker_batch, K, seq_len), jnp.int32),
+               "labels": ((per_worker_batch, K, seq_len), jnp.int32),
+               "cond": ((per_worker_batch, cfg.audio.num_cond_tokens, cfg.d_model), jnp.bfloat16)}
+        return out
+    out = {"tokens": ((per_worker_batch, seq_len), jnp.int32),
+           "labels": ((per_worker_batch, seq_len), jnp.int32)}
+    if cfg.vlm is not None:
+        out["cond"] = ((per_worker_batch, cfg.vlm.num_image_tokens, cfg.vlm.image_embed_dim),
+                       jnp.bfloat16)
+    return out
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Logical axes of one worker's batch arrays (leading dim = batch)."""
+    if cfg.audio is not None:
+        return {"tokens": ("batch", None, "seq"), "labels": ("batch", None, "seq"),
+                "cond": ("batch", "seq", "act_embed")}
+    out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.vlm is not None:
+        out["cond"] = ("batch", "seq", "act_embed")
+    return out

@@ -1,0 +1,207 @@
+"""Distributed training step: per-worker replicas on the production mesh.
+
+Parameters are stacked on a leading worker dim (replica index) sharded over
+('pod','worker'); inside a replica group the usual FSDP ('fsdp') + tensor
+('model') sharding applies — GSPMD propagates from the parameter shardings.
+
+Two compiled programs (DESIGN.md §4):
+
+- ``train_step``      gradient-related component only. For ``allreduce`` the
+                      gradient mean over the worker axis happens here (Alg. 1);
+                      for ``easgd`` the center exchange (psum) happens here,
+                      gated by the host-scheduled ``active`` scalar.
+- ``train_gossip_step``  gradient + ONE matching-gossip round, composed
+                      simultaneously from the step-t state, exactly like the
+                      simulation engine (gossip_sim.py). The host driver calls
+                      it on steps where the communication schedule fires.
+
+Keeping them separate keeps gossip collectives out of the steady-state HLO, so
+the dry-run roofline can amortize gossip cost by its true expected frequency
+(p or 1/tau) instead of baking it into every step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import MeshConfig, ModelConfig, ProtocolConfig, TrainConfig
+from repro.core import gossip_dist
+from repro.launch import sharding as shr
+from repro.optim.schedule import lr_at
+from repro.train import losses
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree            # [W, ...] stacked replicas
+    velocity: PyTree          # NAG velocity, same structure
+    center: Optional[PyTree]  # EASGD center (no W dim) or None
+    step: jax.Array
+
+
+class DistTrainer:
+    def __init__(self, mesh: Mesh, mesh_cfg: MeshConfig, model_cfg: ModelConfig,
+                 train_cfg: TrainConfig, init_fn: Callable, params_axes: PyTree,
+                 loss_fn: Optional[Callable] = None, grad_accum: int = 1):
+        """init_fn(key) -> single-replica params (no W dim)."""
+        self.mesh, self.mesh_cfg, self.model_cfg, self.train_cfg = mesh, mesh_cfg, model_cfg, train_cfg
+        self.loss_fn = loss_fn or losses.lm_loss_fn(model_cfg)
+        self.init_fn = init_fn
+        self.grad_accum = grad_accum
+        self.W = mesh_cfg.num_workers
+        self.opt = train_cfg.optimizer
+        self.protocol = train_cfg.protocol
+        assert self.opt.name == "nag", "distributed trainer implements the paper's NAG (Alg. 5)"
+
+        stacked_axes = shr.with_worker_dim(params_axes)
+        single_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        self.param_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.W,) + s.shape, s.dtype), single_shapes)
+        self.param_specs = shr.tree_specs(self.param_shapes, stacked_axes, mesh)
+        self.center_specs = shr.tree_specs(single_shapes, params_axes, mesh)
+        self.state_specs = TrainState(
+            params=self.param_specs, velocity=self.param_specs,
+            center=self.center_specs if self.protocol.method == "easgd" else None,
+            step=P())
+        self._gossip_exchange = None
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, key) -> TrainState:
+        single = self.init_fn(key)
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (self.W,) + x.shape), single)
+        stacked = jax.lax.with_sharding_constraint(
+            stacked, jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.param_specs,
+                                  is_leaf=lambda x: isinstance(x, P)))
+        vel = jax.tree.map(jnp.zeros_like, stacked)
+        center = (jax.tree.map(lambda x: x.copy(), single)
+                  if self.protocol.method == "easgd" else None)
+        return TrainState(stacked, vel, center, jnp.zeros((), jnp.int32))
+
+    def state_shapes(self) -> TrainState:
+        """ShapeDtypeStructs for the dry-run (no allocation)."""
+        single = jax.eval_shape(self.init_fn, jax.random.PRNGKey(0))
+        center = single if self.protocol.method == "easgd" else None
+        return TrainState(self.param_shapes, self.param_shapes, center,
+                          jax.ShapeDtypeStruct((), jnp.int32))
+
+    # --------------------------------------------------------------- batches
+    def batch_specs(self):
+        ax = losses.batch_axes(self.model_cfg)
+        ax = {k: (("worker",) + tuple(a)) for k, a in ax.items()}
+        shapes = self.batch_shapes()
+        return shr.tree_specs(shapes, ax, self.mesh)
+
+    def batch_shapes(self, global_batch: Optional[int] = None, seq_len: int = 4096):
+        gb = global_batch or getattr(self, "_gb", None)
+        assert gb is not None
+        per_worker = gb // self.W
+        shapes = losses.batch_shapes(self.model_cfg, per_worker, seq_len)
+        return {k: jax.ShapeDtypeStruct((self.W,) + s, dt) for k, (s, dt) in shapes.items()}
+
+    def set_shape(self, global_batch: int, seq_len: int):
+        self._gb, self._seq = global_batch, seq_len
+
+    # ------------------------------------------------------- gradient engine
+    def _grads_and_loss(self, params, batch):
+        """Per-worker grads via vmap over the replica dim, with microbatch
+        accumulation (jax.checkpoint'ed model already limits live activations)."""
+        A = self.grad_accum
+
+        def one_worker(p, b):
+            if A == 1:
+                return jax.value_and_grad(self.loss_fn)(p, b)
+
+            def micro(carry, mb):
+                tot, acc = carry
+                l, g = jax.value_and_grad(self.loss_fn)(p, mb)
+                return (tot + l, jax.tree.map(jnp.add, acc, g)), None
+
+            micro_b = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), b)
+            zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+            (tot, acc), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), micro_b)
+            return tot / A, jax.tree.map(lambda g_: g_ / A, acc)
+
+        return jax.vmap(one_worker)(params, batch)
+
+    def _nag(self, params, velocity, grads, step):
+        eta = lr_at(self.opt, step)
+        mu = self.opt.momentum
+        v_new = jax.tree.map(lambda v, g: mu * v - eta * g.astype(v.dtype), velocity, grads)
+        p_new = jax.tree.map(lambda p, g, v: p - eta * g.astype(p.dtype) + mu * v.astype(p.dtype),
+                             params, grads, v_new)
+        return p_new, v_new
+
+    # ------------------------------------------------------------- programs
+    def _train_step(self, state: TrainState, batch, active):
+        cfg = self.protocol
+        loss, grads = self._grads_and_loss(state.params, batch)
+        if cfg.method == "allreduce":
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape), grads)
+        center_new = state.center
+        comm_delta = None
+        if cfg.method == "easgd":
+            a = cfg.moving_rate
+
+            def upd(x, c):
+                z = a * active * (x.astype(jnp.float32) - c.astype(jnp.float32)[None])
+                return (-z).astype(x.dtype), (c + jnp.sum(z, axis=0).astype(c.dtype))
+
+            pairs = jax.tree.map(upd, state.params, state.center)
+            comm_delta = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            center_new = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
+        if comm_delta is not None:
+            p_new = jax.tree.map(jnp.add, p_new, comm_delta)
+        metrics = {"loss": jnp.mean(loss)}
+        return TrainState(p_new, v_new, center_new, state.step + 1), metrics
+
+    def _train_gossip_step(self, state: TrainState, batch, active, round_idx):
+        """Simultaneous composition: grads and the elastic move both read the
+        step-t params (paper §2.3)."""
+        loss, grads = self._grads_and_loss(state.params, batch)
+        exchanged = self.gossip_exchange(state.params, active, round_idx)
+        comm_delta = jax.tree.map(lambda a, b: a - b, exchanged, state.params)
+        p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
+        p_new = jax.tree.map(lambda p, d: p + d.astype(p.dtype), p_new, comm_delta)
+        metrics = {"loss": jnp.mean(loss)}
+        return TrainState(p_new, v_new, state.center, state.step + 1), metrics
+
+    @property
+    def gossip_exchange(self):
+        if self._gossip_exchange is None:
+            self._gossip_exchange = gossip_dist.make_gossip_step(
+                self.mesh, self.mesh_cfg, self.protocol, self.param_specs,
+                schedule_kind="hypercube" if self.protocol.topology == "matching" else "random")
+        return self._gossip_exchange
+
+    # jit entry points ------------------------------------------------------
+    def _shard(self, tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def jit_train_step(self):
+        bspec = self.batch_specs()
+        return jax.jit(
+            self._train_step,
+            in_shardings=(self._shard(self.state_specs), self._shard(bspec),
+                          NamedSharding(self.mesh, P())),
+            out_shardings=(self._shard(self.state_specs), NamedSharding(self.mesh, P())),
+            donate_argnums=(0,))
+
+    def jit_train_gossip_step(self):
+        bspec = self.batch_specs()
+        rep = NamedSharding(self.mesh, P())
+        return jax.jit(
+            self._train_gossip_step,
+            in_shardings=(self._shard(self.state_specs), self._shard(bspec),
+                          NamedSharding(self.mesh, P(tuple(a for a in ("pod", "worker")
+                                                           if a in self.mesh.axis_names))), rep),
+            out_shardings=(self._shard(self.state_specs), rep),
+            donate_argnums=(0,))

@@ -1,0 +1,10 @@
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (assignment requirement). Multi-device tests spawn
+# subprocesses (see tests/test_dist_parity.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

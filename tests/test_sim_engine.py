@@ -1,0 +1,130 @@
+"""Integration tests for the simulation engine (exact Alg. 1-6 semantics)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import OptimizerConfig, ProtocolConfig
+from repro.core.gossip_sim import SimTrainer
+from repro.models import simple
+
+
+def make_problem(W=4, n=64, d=10, classes=3, seed=0):
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(classes, d) * 2
+    y = rng.randint(0, classes, (W, n)).astype(np.int32)
+    x = protos[y] + rng.randn(W, n, d).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def mlp_loss(params, x, y):
+    return simple.xent_loss(simple.mlp_logits(params, x), y)
+
+
+def tiny_mlp(key):
+    params, _ = simple.init_mlp(key, in_dim=10, hidden=16, depth=2, num_classes=3)
+    return params
+
+
+def stacked(key, W):
+    p = tiny_mlp(key)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (W,) + a.shape), p)
+
+
+OPT = OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9)
+
+
+def run(method, steps=60, W=4, seed=0, **proto_kw):
+    cfg = ProtocolConfig(method=method, **proto_kw)
+    t = SimTrainer(mlp_loss, W, cfg, OPT)
+    state = t.init(stacked(jax.random.PRNGKey(seed), W), seed)
+    x, y = make_problem(W)
+    losses = []
+    for _ in range(steps):
+        state, m = t.step(state, x, y)
+        losses.append(float(m["loss_mean"]))
+    return t, state, losses
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("allreduce", {}),
+    ("none", {}),
+    ("elastic_gossip", dict(comm_probability=0.25, moving_rate=0.5)),
+    ("gossiping_pull", dict(comm_probability=0.25)),
+    ("gossiping_push", dict(comm_period=4)),
+    ("easgd", dict(comm_period=4, moving_rate=0.1)),
+])
+def test_all_methods_train(method, kw):
+    _, state, losses = run(method, **kw)
+    assert losses[-1] < losses[0] * 0.7, (method, losses[0], losses[-1])
+    assert np.isfinite(losses[-1])
+
+
+def test_allreduce_equals_large_batch_sgd():
+    """Paper §2.1.1: All-reduce SGD == minibatch SGD at the effective batch
+    size (identical data, same init)."""
+    W = 4
+    x, y = make_problem(W)
+    _, state_ar, _ = run("allreduce", steps=20)
+
+    # single worker on the concatenated batch
+    t1 = SimTrainer(mlp_loss, 1, ProtocolConfig(method="none"), OPT)
+    s1 = t1.init(stacked(jax.random.PRNGKey(0), 1), 0)
+    xs = x.reshape(1, -1, x.shape[-1])
+    ys = y.reshape(1, -1)
+    for _ in range(20):
+        s1, _ = t1.step(s1, xs, ys)
+
+    a = jax.tree.leaves(jax.tree.map(lambda p: p[0], state_ar.params))
+    b = jax.tree.leaves(jax.tree.map(lambda p: p[0], s1.params))
+    for ai, bi in zip(a, b):
+        np.testing.assert_allclose(np.asarray(ai), np.asarray(bi), rtol=2e-4, atol=2e-5)
+
+
+def test_no_comm_workers_diverge_elastic_gossip_workers_agree():
+    _, st_nc, _ = run("none", steps=40)
+    _, st_eg, _ = run("elastic_gossip", steps=40, comm_probability=0.5, moving_rate=0.5)
+
+    def spread(state):
+        flat = jnp.concatenate([p.reshape(p.shape[0], -1) for p in jax.tree.leaves(state.params)], 1)
+        return float(jnp.linalg.norm(flat - flat.mean(0, keepdims=True), axis=1).mean())
+
+    assert spread(st_eg) < 0.2 * spread(st_nc)
+
+
+def test_gossip_sum_conserved_modulo_gradients():
+    """Over a full run, sum_i theta_i of elastic gossip equals that of
+    no-communication (grad updates identical in expectation? no — identical
+    because comm is additive & conserves the sum only per-exchange; here we
+    zero the learning rate to isolate the communication component)."""
+    W = 4
+    opt0 = dataclasses.replace(OPT, learning_rate=0.0, momentum=0.0)
+    cfg = ProtocolConfig(method="elastic_gossip", comm_probability=1.0, moving_rate=0.5)
+    t = SimTrainer(mlp_loss, W, cfg, opt0)
+    st = t.init(jax.tree.map(lambda a: a + jax.random.normal(jax.random.PRNGKey(9), a.shape),
+                             stacked(jax.random.PRNGKey(0), W)), 0)
+    x, y = make_problem(W)
+    from repro.core.consensus import total_sum
+    s0 = float(total_sum(st.params))
+    for _ in range(10):
+        st, _ = t.step(st, x, y)
+    assert np.isclose(float(total_sum(st.params)), s0, rtol=1e-5, atol=1e-3)
+
+
+def test_alpha_zero_equals_no_communication():
+    _, st_a0, l_a0 = run("elastic_gossip", steps=30, comm_probability=1.0, moving_rate=0.0)
+    _, st_nc, l_nc = run("none", steps=30)
+    np.testing.assert_allclose(np.asarray(l_a0), np.asarray(l_nc), rtol=1e-6)
+
+
+def test_aggregate_accuracy_beats_worst_worker():
+    t, state, _ = run("elastic_gossip", steps=60, comm_probability=0.25, moving_rate=0.5)
+    x, y = make_problem(4)
+    agg = t.aggregate_params(state)
+    acc_agg = float(simple.accuracy(simple.mlp_logits(agg, x.reshape(-1, 10)), y.reshape(-1)))
+    accs = [float(simple.accuracy(
+        simple.mlp_logits(jax.tree.map(lambda p, i=i: p[i], state.params), x.reshape(-1, 10)),
+        y.reshape(-1))) for i in range(4)]
+    assert acc_agg >= min(accs) - 1e-6

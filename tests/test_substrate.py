@@ -1,0 +1,249 @@
+"""Substrate tests: optimizers, schedules, data pipeline, checkpointing,
+sharding rules, scheduler, HLO analysis."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import OptimizerConfig, ProtocolConfig
+from repro.optim import make_optimizer, param_update, velocity_update
+from repro.optim.schedule import lr_at
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_nag_matches_sutskever_formulation():
+    cfg = OptimizerConfig(name="nag", learning_rate=0.1, momentum=0.9)
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -0.5])}
+    state = opt.init(p)
+    new, state = opt.update(g, state, p)
+    v1 = 0.9 * 0.0 - 0.1 * np.array([0.5, -0.5])
+    expect = np.array([1.0, 2.0]) - 0.1 * np.array([0.5, -0.5]) + 0.9 * v1
+    np.testing.assert_allclose(np.asarray(new["w"]), expect, rtol=1e-6)
+
+
+def test_split_phase_nag_equals_fused():
+    cfg = OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.8)
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.arange(4.0)}
+    state = opt.init(p)
+    for s in range(3):
+        g = {"w": jnp.full((4,), 0.1 * (s + 1))}
+        fused, state_f = opt.update(g, state, p)
+        v_new, state_s = velocity_update(cfg, state, g)
+        split = param_update(cfg, state.step, p, g, v_new)
+        np.testing.assert_allclose(np.asarray(fused["w"]), np.asarray(split["w"]), rtol=1e-6)
+        p, state = fused, state_f
+
+
+def test_adamw_and_sgd_decrease_quadratic():
+    for name in ("adamw", "sgd"):
+        cfg = OptimizerConfig(name=name, learning_rate=0.1)
+        opt = make_optimizer(cfg)
+        p = {"w": jnp.array([5.0])}
+        state = opt.init(p)
+        for _ in range(120):
+            g = {"w": 2 * p["w"]}
+            p, state = opt.update(g, state, p)
+        assert abs(float(p["w"][0])) < 0.5, name
+
+
+def test_schedules():
+    c = OptimizerConfig(schedule="constant", learning_rate=1.0)
+    assert float(lr_at(c, 100)) == 1.0
+    s = OptimizerConfig(schedule="step", learning_rate=1.0,
+                        step_anneal_at=(10, 20), step_anneal_factor=0.5)
+    assert float(lr_at(s, 5)) == 1.0
+    assert float(lr_at(s, 15)) == 0.5
+    assert float(lr_at(s, 25)) == 0.25
+    w = OptimizerConfig(schedule="cosine", learning_rate=1.0, warmup_steps=10, decay_steps=100)
+    assert float(lr_at(w, 0)) < 0.2
+    assert float(lr_at(w, 10)) > 0.9
+    assert float(lr_at(w, 110)) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_partition_iid_disjoint_and_complete():
+    from repro.data import make_classification, partition_iid
+    tr, _ = make_classification("t", 1000, 10, (8,), 4, seed=0)
+    shards = partition_iid(tr, 4, seed=1)
+    assert sum(len(s.y) for s in shards) == 1000
+    assert abs(len(shards[0].y) - 250) <= 1
+
+
+def test_partition_dirichlet_skews_labels():
+    from repro.data import make_classification, partition_dirichlet
+    tr, _ = make_classification("t", 4000, 10, (8,), 4, seed=0)
+    skewed = partition_dirichlet(tr, 4, alpha=0.1, seed=1)
+    iid = partition_dirichlet(tr, 4, alpha=1000.0, seed=1)
+
+    def max_frac(shards):
+        out = []
+        for s in shards:
+            counts = np.bincount(s.y, minlength=4)
+            out.append(counts.max() / max(counts.sum(), 1))
+        return np.mean(out)
+
+    assert max_frac(skewed) > max_frac(iid) + 0.1
+
+
+def test_batches_cycle_deterministically():
+    from repro.data import make_classification, partition_iid
+    from repro.data.partition import batches_for_step
+    tr, _ = make_classification("t", 256, 10, (8,), 4, seed=0)
+    shards = partition_iid(tr, 2, seed=1)
+    x1, y1 = batches_for_step(shards, 0, 16)
+    x2, y2 = batches_for_step(shards, 0, 16)
+    np.testing.assert_array_equal(x1, x2)
+    assert x1.shape == (2, 16, 8)
+
+
+def test_lm_tokens_learnable_structure():
+    from repro.data import make_lm_tokens
+    toks = make_lm_tokens(50_000, 256, seed=0)
+    assert toks.min() >= 0 and toks.max() < 256
+    # shifted-copy structure: P(next == prev+7 mod V) ~ 0.25 >> 1/256 baseline
+    hit = np.mean((toks[1:] - toks[:-1]) % 256 == 7)
+    assert hit > 0.15
+
+
+# ---------------------------------------------------------------------------
+# checkpoint io
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import io
+    tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3)}, "c": jnp.int32(7),
+            "d": [jnp.ones(2), jnp.zeros(3)]}
+    path = str(tmp_path / "ck.npz")
+    io.save(path, tree, meta={"step": 7})
+    back = io.restore(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert io.load_meta(path)["step"] == 7
+
+
+def test_latest_step_path(tmp_path):
+    from repro.checkpoint import io
+    for s in (50, 100, 150):
+        io.save(str(tmp_path / f"step_{s}.npz"), {"x": jnp.zeros(1)})
+    step, path = io.latest_step_path(str(tmp_path))
+    assert step == 150 and path.endswith("step_150.npz")
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_for_divisibility_and_axis_reuse():
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import spec_for
+    mesh = _jax.make_mesh((1, 1), ("fsdp", "model"),
+                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    # single-device mesh: everything divisible, axis sizes 1
+    s = spec_for((8, 16), ("embed", "ffn"), mesh)
+    assert s == P("fsdp", "model")
+    # same mesh axis twice in one leaf -> second drops to None
+    s = spec_for((8, 16), ("ffn", "ffn"), mesh)
+    assert s == P("model", None)
+
+
+def test_spec_for_indivisible_falls_back_to_none():
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import spec_for
+    # need >1-sized axis; skip if the runtime only has 1 device — construct
+    # an abstract mesh instead
+    mesh = _jax.sharding.AbstractMesh((4, 2), ("fsdp", "model"))
+    s = spec_for((6, 16), ("embed", "ffn"), mesh)   # 6 % 4 != 0
+    assert s == P(None, "model")
+
+
+def test_with_worker_dim():
+    from repro.launch.sharding import with_worker_dim
+    axes = {"w": ("embed", "ffn"), "b": (None,)}
+    out = with_worker_dim(axes)
+    assert out["w"] == ("worker", "embed", "ffn")
+    assert out["b"] == ("worker", None)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_period_and_probability():
+    from repro.core.scheduler import GossipSchedule
+    s = GossipSchedule(ProtocolConfig(method="elastic_gossip", comm_period=4), 4, seed=0)
+    fires = [s.poll(i)[0] for i in range(8)]
+    assert fires == [True, False, False, False, True, False, False, False]
+
+    s2 = GossipSchedule(ProtocolConfig(method="elastic_gossip", comm_probability=0.5), 8, seed=0)
+    rates = np.mean([s2.poll(i)[1] for i in range(200)])
+    assert 0.42 < rates < 0.58
+    # round counter advances once per FIRING step
+    s3 = GossipSchedule(ProtocolConfig(method="elastic_gossip", comm_period=2), 2, seed=0)
+    fired_rounds = [r for i in range(6) for f, _, r in [s3.poll(i)] if f]
+    assert fired_rounds == [0, 1, 2]
+
+
+def test_scheduler_deterministic_across_replicas():
+    from repro.core.scheduler import GossipSchedule
+    cfg = ProtocolConfig(method="elastic_gossip", comm_probability=0.3)
+    a = GossipSchedule(cfg, 8, seed=42)
+    b = GossipSchedule(cfg, 8, seed=42)
+    for i in range(50):
+        fa, ma, ra = a.poll(i)
+        fb, mb, rb = b.poll(i)
+        assert fa == fb and ra == rb
+        np.testing.assert_array_equal(ma, mb)
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis (while-aware cost model)
+# ---------------------------------------------------------------------------
+
+def test_hlo_while_trip_count_scaling():
+    from repro.analysis import hlo
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    costs = hlo.analyze(txt)
+    # 10 iterations x 2*64^3 flops
+    expect = 10 * 2 * 64 ** 3
+    assert 0.9 * expect <= costs.flops <= 1.3 * expect
+
+    txt1 = jax.jit(lambda a, b: a @ b).lower(x, w).compile().as_text()
+    c1 = hlo.analyze(txt1)
+    assert 0.9 * 2 * 64 ** 3 <= c1.flops <= 1.2 * 2 * 64 ** 3
+
+
+def test_hlo_conditional_takes_max_branch():
+    from repro.analysis import hlo
+
+    def f(i, x, w):
+        return jax.lax.switch(i, [lambda a: a, lambda a: jnp.tanh(a @ w) @ w], x)
+
+    args = (jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    txt = jax.jit(f).lower(*args).compile().as_text()
+    costs = hlo.analyze(txt)
+    assert costs.flops >= 2 * 2 * 32 ** 3 * 0.9   # the expensive branch, twice
