@@ -1,10 +1,11 @@
 """Shared harness for the paper-table benchmarks.
 
 Runs the exact-semantics simulation engine (Alg. 1-6 incl. NAG + communication
-probability, repro.core.gossip_sim) on synthetic MNIST-like / CIFAR-like data
-(offline container — see repro/data/synthetic.py; real IDX files are used
-automatically if present). Scale knobs default to CPU-feasible sizes; the
-paper's trends (relative ordering of methods) are what we validate.
+probability) through the ``repro.api.GossipTrainer`` facade on synthetic
+MNIST-like / CIFAR-like data (offline container — see repro/data/synthetic.py;
+real IDX files are used automatically if present). Scale knobs default to
+CPU-feasible sizes; the paper's trends (relative ordering of methods) are what
+we validate. Any registry-registered protocol name is benchmarkable directly.
 """
 from __future__ import annotations
 
@@ -17,8 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import GossipTrainer
 from repro.common.config import OptimizerConfig, ProtocolConfig
-from repro.core.gossip_sim import SimTrainer
 from repro.data.partition import batches_for_step, partition_iid
 from repro.data.synthetic import Dataset, load_cifar_like, load_mnist
 from repro.models import simple
@@ -42,15 +43,17 @@ class Result:
     steps: int
     seconds: float
     comm_events: int
+    comm_mb: float = 0.0     # measured cumulative egress per worker (MB)
 
     def csv(self) -> str:
         return (f"{self.label},{self.method},{self.workers},{self.p},{self.tau},"
                 f"{self.alpha},{self.rank0_acc:.4f},{self.aggregate_acc:.4f},"
-                f"{self.final_loss:.4f},{self.steps},{self.seconds:.1f},{self.comm_events}")
+                f"{self.final_loss:.4f},{self.steps},{self.seconds:.1f},"
+                f"{self.comm_events},{self.comm_mb:.2f}")
 
 
 CSV_HEADER = ("label,method,workers,p,tau,alpha,rank0_acc,aggregate_acc,"
-              "final_loss,steps,seconds,comm_events")
+              "final_loss,steps,seconds,comm_events,comm_mb")
 
 
 def _mnist_model(seed: int):
@@ -95,24 +98,25 @@ def run_config(method: str, workers: int, *, p: float = 0.0, tau: int = 0,
     def loss_fn(prm, x, y):
         return simple.xent_loss(apply_fn(prm, x), y)
 
-    trainer = SimTrainer(loss_fn, workers, proto, opt)
-    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (workers,) + a.shape), params0)
-    state = trainer.init(stacked, seed)
+    trainer = GossipTrainer(engine="sim", protocol=proto, optimizer=opt,
+                            loss_fn=loss_fn, num_workers=workers)
+    state = trainer.init_state(seed, params=params0)
     shards = partition_iid(train, workers, seed)
     per_worker = EFFECTIVE_BATCH // workers
     t0 = time.time()
-    last_loss = float("nan")
+    last_loss, comm_bytes = float("nan"), 0.0
     for i in range(steps):
         x, y = batches_for_step(shards, i, per_worker)
-        state, m = trainer.step(state, jnp.asarray(x), jnp.asarray(y))
-        last_loss = float(m["loss_mean"])
+        state, m = trainer.step(state, (jnp.asarray(x), jnp.asarray(y)))
+        last_loss = float(m["loss"])
+        comm_bytes = float(m["comm_bytes"])
     seconds = time.time() - t0
 
     xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
     rank0 = trainer.rank0_params(state)
-    agg = trainer.aggregate_params(state)
+    agg = trainer.consensus_params(state)
     acc0 = float(simple.accuracy(apply_fn(rank0, xt), yt))
     acca = float(simple.accuracy(apply_fn(agg, xt), yt))
     return Result(label or f"{method}-{workers}", method, workers, p, tau, alpha,
                   acc0, acca, last_loss, steps, seconds,
-                  int(state.proto.comm_rounds))
+                  int(state.proto.comm_rounds), comm_bytes / 1e6)

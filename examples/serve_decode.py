@@ -8,11 +8,11 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.api import make_serve_program
 from repro.common.config import MeshConfig
 from repro.configs import ARCH_IDS, get_reduced
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tr
-from repro.serving.engine import make_serve_program
 
 
 def main():

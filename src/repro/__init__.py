@@ -1,1 +1,1 @@
-from repro import common  # noqa: F401
+from repro import api, common  # noqa: F401

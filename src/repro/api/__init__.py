@@ -1,0 +1,69 @@
+"""repro.api — the public surface of the reproduction.
+
+Three pieces (DESIGN: ISSUE 1):
+
+- the **protocol registry** (:mod:`repro.api.registry`): every algorithm is a
+  :class:`Protocol` class registered under a name; ``available_protocols()``
+  replaces the old ``METHODS`` tuple and ``@register_protocol`` is the one-file
+  extension point for new algorithms;
+- the **protocol classes** (:mod:`repro.api.protocols`): Alg. 1-6 with their
+  gradient transform, comm update, gate/coefficient rule and comm-cost
+  accounting in one object each;
+- the **GossipTrainer facade** (:mod:`repro.api.trainer`): engine-agnostic
+  ``.step(state, batch)`` over the simulation ("sim") and the production
+  shard_map ("dist") engines, owning scheduling, byte accounting and
+  checkpointing.
+
+Typical use::
+
+    from repro.api import GossipTrainer, available_protocols
+    from repro.common.config import ProtocolConfig
+
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=0.25)
+    trainer = GossipTrainer(engine="sim", protocol=proto, loss_fn=loss_fn,
+                            num_workers=4, init_fn=init_fn)
+    state = trainer.init_state(seed=0)
+    state, metrics = trainer.step(state, (x, y))
+"""
+from repro.api.registry import (  # noqa: F401
+    available_protocols,
+    get_protocol,
+    register_protocol,
+    resolve,
+    unregister_protocol,
+)
+from repro.api.protocols import (  # noqa: F401
+    CommCost,
+    PairwiseGossip,
+    Protocol,
+    ProtocolState,
+    comm_cost,
+    stacked_param_bytes,
+)
+
+# Heavier symbols (they pull in the engines) load lazily so importing
+# repro.api from core modules stays cycle-free and cheap.
+_LAZY = {
+    "GossipTrainer": ("repro.api.trainer", "GossipTrainer"),
+    "ENGINES": ("repro.api.trainer", "ENGINES"),
+    "GossipSchedule": ("repro.core.scheduler", "GossipSchedule"),
+    "SimTrainer": ("repro.core.gossip_sim", "SimTrainer"),
+    "DistTrainer": ("repro.train.step", "DistTrainer"),
+    "make_serve_program": ("repro.serving.engine", "make_serve_program"),
+    "consensus_params": ("repro.serving.engine", "consensus_params"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,338 @@
+"""The paper's Algorithms 1-6 as first-class Protocol objects.
+
+Each protocol encapsulates the paper's two orthogonal components (§2.2) plus
+everything the engines and the host scheduler need to drive it:
+
+- ``gradient_transform``  the gradient-related component (only All-reduce SGD
+  is non-trivial: it averages gradients across workers);
+- ``comm_gate`` / ``comm_update``  the communication-related component on the
+  stacked parameters (gossip/elastic/EASGD mixing), gated by the schedule
+  (period tau or Bernoulli probability p);
+- ``pair_gate_coef`` / ``mix_matrix``  the pairwise realization used by the
+  distributed collective-permute engine and the simulation oracle;
+- ``comm_cost``  analytic egress accounting (the paper's headline claim), also
+  accumulated live into ``ProtocolState.comm_bytes`` by ``comm_update``;
+- capability flags (``communicates``, ``pairwise``, ``uses_center``,
+  ``per_worker_gate``) that replace every ``if cfg.method == ...`` chain the
+  engines and scheduler used to carry.
+
+Both components are computed from the step-t state simultaneously (the paper
+modifies Alg. 3/6 the same way, §2.3), so gradient and communication updates
+commute and the engines can compose them additively.
+
+Protocols register themselves with :mod:`repro.api.registry`; new algorithms
+subclass :class:`Protocol` and register under a new name — no engine changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import register_protocol
+from repro.common.config import ProtocolConfig
+
+PyTree = Any
+
+
+def _topology():
+    # imported lazily: repro.core pulls in the engines, which (via their
+    # registry use) import this module — deferring to call time keeps
+    # `import repro.api` and `import repro.core` both cycle-free.
+    from repro.core import topology
+    return topology
+
+
+class ProtocolState(NamedTuple):
+    center: Optional[PyTree]      # EASGD center variable (else None)
+    comm_rounds: jax.Array        # number of gossip rounds executed
+    comm_bytes: jax.Array         # cumulative expected egress bytes per worker
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCost:
+    bytes_per_event: float     # bytes one worker transmits per communication event
+    events_per_step: float     # expected events per training step
+
+    @property
+    def bytes_per_step(self) -> float:
+        return self.bytes_per_event * self.events_per_step
+
+
+def stacked_param_bytes(theta_stack: PyTree) -> int:
+    """Bytes of ONE replica of a [W, ...]-stacked parameter pytree."""
+    total = 0
+    for leaf in jax.tree.leaves(theta_stack):
+        n = 1
+        for d in leaf.shape[1:]:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _bytes_dtype():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+class Protocol:
+    """Base class: one distributed-training algorithm, fully self-describing.
+
+    Instances are immutable views over a frozen :class:`ProtocolConfig`; all
+    evolving quantities live in :class:`ProtocolState` or engine state.
+    """
+
+    name: ClassVar[str] = ""          # set by @register_protocol
+    # capability flags consumed by the engines / scheduler / facade:
+    communicates: ClassVar[bool] = True    # has a gated communication component
+    pairwise: ClassVar[bool] = False       # pairwise gossip (ppermute-able)
+    uses_center: ClassVar[bool] = False    # EASGD-style center variable
+    per_worker_gate: ClassVar[bool] = True  # Bernoulli per worker (vs one draw)
+
+    def __init__(self, cfg: ProtocolConfig):
+        self.cfg = cfg
+        if self.communicates:
+            assert (cfg.comm_probability > 0) != (cfg.comm_period > 0), (
+                f"protocol {cfg.method!r} is gated: set exactly one of "
+                "comm_probability / comm_period")
+
+    # ---------------------------------------------------------------- state
+    def init_state(self, params_stack: PyTree) -> ProtocolState:
+        return ProtocolState(self.init_center(params_stack),
+                             jnp.zeros((), jnp.int32),
+                             jnp.zeros((), _bytes_dtype()))
+
+    def init_center(self, params_stack: PyTree) -> Optional[PyTree]:
+        return None
+
+    # ----------------------------------------------------- gradient component
+    def gradient_transform(self, grads_stack: PyTree) -> PyTree:
+        return grads_stack
+
+    # ------------------------------------------------------------ scheduling
+    def alpha_at(self, step) -> jnp.ndarray:
+        """Moving rate at ``step`` — constant (the paper) or linearly annealed
+        to moving_rate_final (thesis §4.1.3: high alpha helps early, hurts
+        late)."""
+        cfg = self.cfg
+        a0 = jnp.asarray(cfg.moving_rate, jnp.float32)
+        if cfg.moving_rate_final < 0 or cfg.alpha_decay_steps <= 0:
+            return a0
+        frac = jnp.clip(jnp.asarray(step, jnp.float32) / cfg.alpha_decay_steps, 0.0, 1.0)
+        return a0 + (cfg.moving_rate_final - a0) * frac
+
+    def comm_gate(self, key: jax.Array, step: jax.Array, num_workers: int) -> jax.Array:
+        """Per-worker participation for this step: bool[W].
+
+        period tau  -> all workers together every tau steps (Alg. 2/3/4/6);
+        probability p -> independent Bernoulli per worker (Alg. 5 / GoSGD).
+        """
+        cfg = self.cfg
+        if not self.communicates:
+            return jnp.zeros((num_workers,), bool)
+        if cfg.comm_period:
+            fire = (step % cfg.comm_period) == 0
+            return jnp.broadcast_to(fire, (num_workers,))
+        return _topology().participation(key, num_workers, cfg.comm_probability)
+
+    # ------------------------------------------------- communication component
+    def sample_peers(self, key: jax.Array, num_workers: int) -> jax.Array:
+        """Peer selection k'(i) for pairwise protocols (matching or uniform)."""
+        if self.cfg.topology == "matching":
+            return _topology().sample_matching(key, num_workers)
+        return _topology().sample_uniform_peers(key, num_workers)
+
+    def comm_update(self, key: jax.Array, active: jax.Array, theta_stack: PyTree,
+                    state: ProtocolState, step=None) -> tuple[PyTree, ProtocolState]:
+        """Communication-related component on stacked params [W, ...].
+
+        ``active`` is the participation mask from :meth:`comm_gate`; ``step``
+        (optional) enables the alpha schedule (beyond-paper). The default
+        honors the ``pairwise`` capability flag: pairwise protocols mix via
+        :meth:`mix_matrix` over :meth:`sample_peers` (so a registered subclass
+        only needs the matrix + gate/coef rule); everything else is the
+        no-communication identity.
+        """
+        if not self.pairwise:
+            return theta_stack, state
+        peers = self.sample_peers(key, active.shape[0])
+        theta_new = _topology().apply_mix(self.mix_matrix(peers, active, step=step),
+                                          theta_stack)
+        rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
+        return theta_new, ProtocolState(state.center, rounds,
+                                        self._accrue_bytes(state, active, theta_stack))
+
+    # ------------------------------------- pairwise (dist-engine) realization
+    def pair_gate_coef(self, my_active, peer_active):
+        """Gate/coefficient for a matched pair in the collective-permute
+        engine (DESIGN.md §3): theta <- theta - coef*gate*(theta - peer)."""
+        raise ValueError(f"protocol {self.name!r} is not a pairwise-gossip method")
+
+    def mix_matrix(self, peers: jax.Array, active: jax.Array, step=None) -> jax.Array:
+        """[W, W] mixing matrix over the worker axis for the given peer
+        selection — the simulation engine / parity-oracle realization."""
+        raise ValueError(f"protocol {self.name!r} is not a pairwise-gossip method")
+
+    # ------------------------------------------------------------- accounting
+    def events_per_step(self) -> float:
+        cfg = self.cfg
+        if cfg.comm_probability:
+            return cfg.comm_probability
+        return 1.0 / cfg.comm_period if cfg.comm_period else 0.0
+
+    def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
+        """Expected egress bytes per worker per step (analytic)."""
+        raise NotImplementedError
+
+    def _accrue_bytes(self, state: ProtocolState, active: jax.Array,
+                      theta_stack: PyTree) -> jax.Array:
+        """comm_bytes + this event's expected per-worker egress: one full
+        replica per participating worker, averaged over workers."""
+        pb = stacked_param_bytes(theta_stack)
+        W = active.shape[0]
+        per_event = self.comm_cost(pb, W).bytes_per_event
+        frac = jnp.mean(jnp.asarray(active, _bytes_dtype()))
+        return state.comm_bytes + per_event * frac
+
+
+# ---------------------------------------------------------------------------
+# Baselines without a gated communication component
+# ---------------------------------------------------------------------------
+
+@register_protocol("none")
+class NoCommunication(Protocol):
+    """Independent workers (paper §2.1): the divergence baseline."""
+    communicates = False
+
+    def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
+        return CommCost(0.0, 0.0)
+
+
+@register_protocol("allreduce")
+class AllReduceSGD(Protocol):
+    """Alg. 1: gradient averaging every step (ring all-reduce accounting)."""
+    communicates = False   # comm lives in the gradient transform, ungated
+
+    def gradient_transform(self, grads_stack: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
+            grads_stack)
+
+    def comm_update(self, key, active, theta_stack, state, step=None):
+        # parameters untouched, but the every-step ring all-reduce egress is
+        # accounted so live runs expose the paper's communication-cost gap.
+        pb = stacked_param_bytes(theta_stack)
+        cost = self.comm_cost(pb, active.shape[0])
+        return theta_stack, state._replace(
+            comm_bytes=state.comm_bytes + jnp.asarray(cost.bytes_per_step, _bytes_dtype()))
+
+    def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
+        # ring all-reduce: 2 * (W-1)/W * P per step, every step
+        return CommCost(2.0 * (num_workers - 1) / num_workers * param_bytes, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# EASGD (center variable)
+# ---------------------------------------------------------------------------
+
+@register_protocol("easgd")
+class EASGD(Protocol):
+    """Alg. 2: elastic averaging against an explicit center variable."""
+    uses_center = True
+    per_worker_gate = False   # all workers exchange with the center together
+
+    def init_center(self, params_stack: PyTree) -> PyTree:
+        # center initialized to the common init (= worker 0's replica)
+        return jax.tree.map(lambda x: x[0], params_stack)
+
+    def center_step(self, theta_stack: PyTree, center: PyTree, active,
+                    step=None) -> tuple[PyTree, PyTree]:
+        """Alg. 2 lines 5-7, gated: z_i = alpha gate_i (theta_i - center).
+
+        Returns (delta, center') with delta = -z per worker, so callers apply
+        ``theta + delta``; ``active`` may be a scalar (dist engine, one shared
+        gate) or a [W] mask (sim engine).
+        """
+        a = self.cfg.moving_rate if step is None else self.alpha_at(step)
+        W = jax.tree.leaves(theta_stack)[0].shape[0]
+        act = jnp.broadcast_to(jnp.asarray(active, jnp.float32), (W,))
+
+        def upd(x, c):
+            gate = act.reshape((W,) + (1,) * (x.ndim - 1))
+            z = a * gate * (x.astype(jnp.float32) - c.astype(jnp.float32)[None])
+            return (-z).astype(x.dtype), (c + jnp.sum(z, axis=0).astype(c.dtype))
+
+        pairs = jax.tree.map(upd, theta_stack, center)
+        delta = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        center_new = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return delta, center_new
+
+    def comm_update(self, key, active, theta_stack, state, step=None):
+        delta, center_new = self.center_step(theta_stack, state.center, active, step=step)
+        theta_new = jax.tree.map(lambda x, d: x + d, theta_stack, delta)
+        rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
+        return theta_new, ProtocolState(center_new, rounds,
+                                        self._accrue_bytes(state, active, theta_stack))
+
+    def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
+        # send local, receive center (center egress excluded: worker-side view)
+        return CommCost(2.0 * param_bytes, self.events_per_step())
+
+
+# ---------------------------------------------------------------------------
+# Pairwise gossip family (collective-permute-able)
+# ---------------------------------------------------------------------------
+
+class PairwiseGossip(Protocol):
+    """Convenience base for peer-exchange protocols: the ``pairwise`` flag
+    activates the base comm_update (mix over sampled peers) and the default
+    cost is one replica to/from one peer per participating event."""
+    pairwise = True
+
+    def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
+        return CommCost(float(param_bytes), self.events_per_step())
+
+
+@register_protocol("elastic_gossip")
+class ElasticGossip(PairwiseGossip):
+    """Alg. 4/5: symmetric elastic pairwise exchange — the paper's method.
+
+    The mixing matrix I - alpha*L is symmetric and row-stochastic, so the
+    global parameter sum is conserved exactly (elastic symmetry)."""
+
+    def mix_matrix(self, peers, active, step=None):
+        a = self.cfg.moving_rate if step is None else self.alpha_at(step)
+        return _topology().elastic_gossip_mix(peers, active, a)
+
+    def pair_gate_coef(self, my_active, peer_active):
+        # fires if either endpoint selected the pair (passive peers respond)
+        return jnp.maximum(my_active, peer_active), self.cfg.moving_rate
+
+
+@register_protocol("gossiping_pull")
+class GossipingPull(PairwiseGossip):
+    """Alg. 3: pull-Gossiping SGD — theta_i <- (theta_i + theta_k')/2."""
+
+    def mix_matrix(self, peers, active, step=None):
+        return _topology().gossip_pull_mix(peers, active)
+
+    def pair_gate_coef(self, my_active, peer_active):
+        return my_active, 0.5
+
+
+@register_protocol("gossiping_push")
+class GossipingPush(PairwiseGossip):
+    """Alg. 6: push-Gossiping SGD — theta_i <- mean({theta_i} U pushers)."""
+
+    def mix_matrix(self, peers, active, step=None):
+        return _topology().gossip_push_mix(peers, active)
+
+    def pair_gate_coef(self, my_active, peer_active):
+        return peer_active, 0.5
+
+
+def comm_cost(cfg: ProtocolConfig, param_bytes: int, num_workers: int) -> CommCost:
+    """Functional form of :meth:`Protocol.comm_cost` (registry-dispatched)."""
+    from repro.api import registry
+    return registry.resolve(cfg).comm_cost(param_bytes, num_workers)

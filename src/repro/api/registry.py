@@ -1,0 +1,82 @@
+"""Protocol registry: the single place protocol *names* resolve to code.
+
+Every training algorithm (the paper's Alg. 1-6 and any beyond-paper addition)
+is a :class:`repro.api.protocols.Protocol` subclass registered under a string
+name. Everything that used to switch on ``cfg.method`` — the sim engine, the
+distributed engine's gate/coefficient rule, the host scheduler, the launcher's
+argparse choices, the comm-cost accounting — now asks the registry instead, so
+adding a protocol is ONE new class in one file:
+
+    from repro.api import Protocol, register_protocol
+
+    @register_protocol("my_gossip")
+    class MyGossip(Protocol):
+        ...
+
+    ProtocolConfig(method="my_gossip", ...)   # usable everywhere immediately
+
+This module is deliberately import-light (no jax, no engines) so core modules
+can depend on it without cycles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple, Type
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_protocol(name: str) -> Callable[[type], type]:
+    """Class decorator: register a Protocol subclass under ``name``."""
+    def deco(cls: type) -> type:
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"protocol {name!r} already registered "
+                             f"({_REGISTRY[name].__qualname__})")
+        cls.name = name
+        _REGISTRY[name] = cls
+        _resolve_cached.cache_clear()   # re-registration after unregister
+        return cls
+    return deco
+
+
+def _ensure_builtins() -> None:
+    # The built-in protocol classes register themselves on import; importing
+    # lazily here (not at module top) keeps this module cycle-free.
+    from repro.api import protocols  # noqa: F401
+
+
+def available_protocols() -> Tuple[str, ...]:
+    """All registered protocol names (replaces the old ``METHODS`` tuple)."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_protocol(name: str) -> type:
+    """Resolve a protocol name to its class; unknown names raise ValueError."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown protocol {name!r}; registered: {sorted(_REGISTRY)}") from None
+
+
+def unregister_protocol(name: str) -> None:
+    """Remove a registered protocol (primarily for tests/plugins)."""
+    _REGISTRY.pop(name, None)
+    _resolve_cached.cache_clear()   # drop stale instances for the name
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_cached(name: str, cfg):
+    return get_protocol(name)(cfg)
+
+
+def resolve(cfg) -> "Type":
+    """ProtocolConfig -> cached Protocol instance for ``cfg.method``.
+
+    Instances are stateless (all mutable protocol state lives in
+    ``ProtocolState`` / engine state), so caching on the frozen config is safe
+    and keeps jit retracing keyed on config identity.
+    """
+    return _resolve_cached(cfg.method, cfg)

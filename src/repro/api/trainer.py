@@ -1,0 +1,379 @@
+"""Engine-agnostic GossipTrainer facade — the repro.api entry point.
+
+One object, one loop, any engine::
+
+    from repro.api import GossipTrainer
+
+    trainer = GossipTrainer(engine="sim", protocol=proto, optimizer=opt,
+                            loss_fn=loss_fn, num_workers=4)
+    state = trainer.init_state(seed=0)
+    for step in range(steps):
+        state, metrics = trainer.step(state, next(batches))
+
+The facade owns everything the old drivers leaked to callers:
+
+- **scheduling** — the host-side ``GossipSchedule`` fire/active/round polling
+  and the ``train_step`` vs ``train_gossip_step`` program selection of the
+  distributed engine happen inside :meth:`step`;
+- **accounting** — every metrics dict carries ``loss``, ``fired`` and the
+  cumulative ``comm_bytes`` (expected per-worker egress), live-measuring the
+  paper's communication-cost claim;
+- **checkpointing** — :meth:`save_checkpoint` / :meth:`load_checkpoint`
+  persist the communication-schedule state alongside the trainer state so a
+  resumed run reproduces the exact schedule;
+- **parity** — :meth:`gossip_exchange` exposes one communication round under
+  both engines (ppermute for ``engine="dist"``, the mixing-matrix oracle for
+  ``engine="sim"``) over the same matching schedule, so engines are testable
+  against each other purely through this facade.
+
+Engines:
+
+- ``engine="sim"``  exact Alg. 1-6 on stacked replicas
+  (:class:`repro.core.gossip_sim.SimTrainer`); scheduling is traced into the
+  jitted step from the state's PRNG key.
+- ``engine="dist"`` the production shard_map/collective-permute engine
+  (:class:`repro.train.step.DistTrainer` + ``repro.core.gossip_dist``);
+  scheduling is host-side and replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import registry
+from repro.api.protocols import CommCost, stacked_param_bytes
+from repro.common.config import (MeshConfig, OptimizerConfig, ProtocolConfig,
+                                 TrainConfig)
+
+PyTree = Any
+
+ENGINES = ("sim", "dist")
+
+
+def _as_key(seed) -> jax.Array:
+    if isinstance(seed, (int, np.integer)):
+        return jax.random.PRNGKey(int(seed))
+    return seed
+
+
+class GossipTrainer:
+    """Protocol-agnostic, engine-agnostic trainer facade.
+
+    Common arguments:
+      engine:     "sim" | "dist"
+      protocol:   ProtocolConfig (method name resolved via the registry)
+      optimizer:  OptimizerConfig (default NAG, as the paper)
+      init_fn:    key -> single-replica params (no worker dim)
+      seed:       base seed for the communication schedule
+
+    ``engine="sim"`` additionally takes ``loss_fn(params, x, y)`` and
+    ``num_workers`` (``mesh_cfg`` optionally, for a dist-matching gossip
+    schedule in :meth:`gossip_exchange`).
+
+    ``engine="dist"`` takes ``mesh``, ``mesh_cfg``, ``model_cfg``,
+    ``params_axes``, ``global_batch``, ``seq_len`` (and optionally
+    ``loss_fn(params, batch)``, ``grad_accum``).
+    """
+
+    def __init__(self, *, engine: str = "sim",
+                 protocol: ProtocolConfig,
+                 optimizer: Optional[OptimizerConfig] = None,
+                 init_fn: Optional[Callable] = None,
+                 loss_fn: Optional[Callable] = None,
+                 num_workers: Optional[int] = None,
+                 mesh=None, mesh_cfg: Optional[MeshConfig] = None,
+                 model_cfg=None, params_axes: Optional[PyTree] = None,
+                 global_batch: Optional[int] = None, seq_len: Optional[int] = None,
+                 grad_accum: int = 1, seed: int = 0):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        self.engine = engine
+        self.protocol = protocol
+        self.impl = registry.resolve(protocol)
+        self.optimizer = optimizer or OptimizerConfig()
+        self.seed = seed
+        if engine == "sim":
+            if loss_fn is None or num_workers is None:
+                raise ValueError('engine="sim" requires loss_fn and num_workers')
+            self._backend = _SimBackend(self, loss_fn, num_workers, init_fn, mesh_cfg)
+        else:
+            if mesh is None or mesh_cfg is None or init_fn is None or params_axes is None:
+                raise ValueError('engine="dist" requires mesh, mesh_cfg, init_fn '
+                                 'and params_axes')
+            self._backend = _DistBackend(self, mesh, mesh_cfg, model_cfg, init_fn,
+                                         params_axes, global_batch, seq_len,
+                                         loss_fn, grad_accum, seed)
+
+    # ------------------------------------------------------------------ core
+    @property
+    def num_workers(self) -> int:
+        return self._backend.num_workers
+
+    def init_state(self, seed=0, params: Optional[PyTree] = None):
+        """Fresh trainer state. ``params`` (optional): single-replica params
+        to broadcast instead of calling ``init_fn``."""
+        return self._backend.init_state(seed, params)
+
+    def step(self, state, batch):
+        """ONE training step: gradient component + (internally scheduled)
+        communication component. Returns (state', metrics) where metrics
+        always has ``loss``, ``fired`` and cumulative ``comm_bytes``."""
+        return self._backend.step(state, batch)
+
+    # ------------------------------------------------------- parity / gossip
+    def gossip_exchange(self, params_stack: PyTree, active, round_idx: int) -> PyTree:
+        """Apply ONE communication round of the pairwise protocol to stacked
+        params — identical semantics under both engines (same matching
+        schedule), the facade-level parity surface."""
+        if not self.impl.pairwise:
+            raise ValueError(f"protocol {self.protocol.method!r} has no pairwise "
+                             "gossip exchange")
+        return self._backend.gossip_exchange(params_stack, active, round_idx)
+
+    def matching_partners(self, round_idx: int) -> np.ndarray:
+        """Global partner index per worker for ``round_idx`` (host-side)."""
+        return self._backend.matching_partners(round_idx)
+
+    @property
+    def num_gossip_rounds(self) -> int:
+        return self._backend.num_gossip_rounds
+
+    # ---------------------------------------------------------------- params
+    def rank0_params(self, state) -> PyTree:
+        """Worker 0's replica (paper 'Rank-0 Accuracy')."""
+        return jax.tree.map(lambda x: x[0], state.params)
+
+    def consensus_params(self, state) -> PyTree:
+        """Worker-averaged replica (paper 'Aggregate Accuracy') — the
+        parameters the serving engine loads."""
+        from repro.serving.engine import consensus_params
+        return consensus_params(state.params)
+
+    # aggregate_params: alias kept for SimTrainer-era callers
+    aggregate_params = consensus_params
+
+    # ------------------------------------------------------------ accounting
+    def comm_cost(self, param_bytes: Optional[int] = None) -> CommCost:
+        """Analytic expected egress (bytes/worker/step); ``param_bytes``
+        defaults to the live parameter size when a state template exists."""
+        pb = param_bytes if param_bytes is not None else self._backend.param_bytes()
+        return self.impl.comm_cost(pb, self.num_workers)
+
+    # ------------------------------------------------------------ scheduling
+    def schedule_state(self) -> dict:
+        """Serializable communication-schedule state ({} for engine="sim",
+        whose schedule lives in the jitted state's PRNG key)."""
+        return self._backend.schedule_state()
+
+    def restore_schedule(self, sched_state: dict) -> None:
+        self._backend.restore_schedule(sched_state)
+
+    # ---------------------------------------------------------- checkpointing
+    def save_checkpoint(self, path: str, state, meta: Optional[dict] = None) -> None:
+        """Trainer state + schedule state + host accounting + protocol
+        config, atomically (schedule rides in the metadata via io.save)."""
+        from repro.checkpoint import io
+        meta = dict(meta or {})
+        meta.setdefault("protocol", dataclasses.asdict(self.protocol))
+        meta.update(self._backend.checkpoint_extra())
+        io.save(path, state._asdict(), meta=meta,
+                schedule=getattr(self._backend, "sched", None))
+
+    def load_checkpoint(self, path: str, state_like):
+        """Restore a checkpoint into the structure of ``state_like`` AND
+        rewind the communication schedule / host-side accounting to the saved
+        position. Returns (state, meta)."""
+        from repro.checkpoint import io
+        restored = io.restore(path, state_like._asdict())
+        state = type(state_like)(**restored)
+        meta = io.load_meta(path)
+        sched = getattr(self._backend, "sched", None)
+        if sched is not None:
+            io.restore_schedule(path, sched)
+        self._backend.on_checkpoint_loaded(state, meta)
+        return state, meta
+
+
+# ---------------------------------------------------------------------------
+# engine adapters
+# ---------------------------------------------------------------------------
+
+class _MatchingScheduleMixin:
+    """Shared host-side matching schedule (hypercube / random) so both engines
+    expose the SAME gossip rounds through the facade."""
+
+    def _schedule(self):
+        from repro.core import gossip_dist
+        if getattr(self, "_sched_rounds", None) is None:
+            kind = ("hypercube" if self.facade.protocol.topology == "matching"
+                    else "random")
+            self._sched_rounds = gossip_dist.build_schedule(self._sched_mesh_cfg(), kind)
+        return self._sched_rounds
+
+    def matching_partners(self, round_idx: int) -> np.ndarray:
+        from repro.core import gossip_dist
+        sched, mcfg = self._schedule(), self._sched_mesh_cfg()
+        return np.array([gossip_dist.partner_of(sched, round_idx, w, mcfg)
+                         for w in range(mcfg.num_workers)])
+
+    @property
+    def num_gossip_rounds(self) -> int:
+        return len(self._schedule())
+
+
+class _SimBackend(_MatchingScheduleMixin):
+    def __init__(self, facade: GossipTrainer, loss_fn, num_workers: int,
+                 init_fn, mesh_cfg: Optional[MeshConfig]):
+        from repro.core.gossip_sim import SimTrainer
+        self.facade = facade
+        self.init_fn = init_fn
+        self.num_workers = num_workers
+        self.mesh_cfg = mesh_cfg
+        self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer)
+        self._sched_rounds = None
+        self._pb = None
+
+    def _sched_mesh_cfg(self) -> MeshConfig:
+        return self.mesh_cfg or MeshConfig(data=self.num_workers, model=1, pods=1,
+                                           workers_per_pod=self.num_workers)
+
+    def init_state(self, seed=0, params=None):
+        if params is None:
+            if self.init_fn is None:
+                raise ValueError("provide init_fn at construction or params here")
+            params = self.init_fn(_as_key(seed))
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.num_workers,) + x.shape), params)
+        self._pb = stacked_param_bytes(stacked)
+        sim_seed = int(seed) if isinstance(seed, (int, np.integer)) else 0
+        return self.sim.init(stacked, sim_seed)
+
+    def step(self, state, batch):
+        x, y = (batch["x"], batch["y"]) if isinstance(batch, dict) else batch
+        state, m = self.sim.step(state, x, y)
+        metrics = dict(m)
+        metrics["loss"] = m["loss_mean"]
+        metrics["fired"] = m["comm_active"] > 0
+        metrics["comm_bytes"] = state.proto.comm_bytes
+        return state, metrics
+
+    def param_bytes(self) -> int:
+        if self._pb is None:
+            raise ValueError("param size unknown before init_state; pass param_bytes")
+        return self._pb
+
+    def gossip_exchange(self, params_stack, active, round_idx):
+        """Mixing-matrix oracle over the shared matching schedule — exactly
+        Alg. 3/4/6 restricted to the round's perfect matching."""
+        from repro.core import topology
+        peers = jnp.asarray(self.matching_partners(round_idx))
+        gate = jnp.asarray(active) > 0
+        return topology.apply_mix(self.facade.impl.mix_matrix(peers, gate),
+                                  params_stack)
+
+    def schedule_state(self) -> dict:
+        return {}
+
+    def restore_schedule(self, sched_state: dict) -> None:
+        pass  # sim scheduling lives in SimState.key, restored with the state
+
+    def checkpoint_extra(self) -> dict:
+        return {}  # comm_bytes lives in ProtocolState, saved with the state
+
+    def on_checkpoint_loaded(self, state, meta) -> None:
+        pass
+
+
+class _DistBackend(_MatchingScheduleMixin):
+    def __init__(self, facade: GossipTrainer, mesh, mesh_cfg: MeshConfig, model_cfg,
+                 init_fn, params_axes, global_batch, seq_len, loss_fn,
+                 grad_accum: int, seed: int):
+        from repro.core.scheduler import GossipSchedule
+        from repro.train.step import DistTrainer
+        self.facade = facade
+        self.mesh_cfg = mesh_cfg
+        self.num_workers = mesh_cfg.num_workers
+        tcfg = TrainConfig(protocol=facade.protocol, optimizer=facade.optimizer)
+        self.trainer = DistTrainer(mesh, mesh_cfg, model_cfg, tcfg, init_fn,
+                                   params_axes, loss_fn=loss_fn, grad_accum=grad_accum)
+        if global_batch is not None:
+            self.trainer.set_shape(global_batch, seq_len or 4096)
+        self.sched = GossipSchedule(facade.protocol, self.num_workers, seed=seed + 1)
+        self._ts = self._tg = None
+        self._sched_rounds = None
+        self.comm_bytes = 0.0
+        # host mirror of state.step: polling the schedule with it (instead of
+        # int(state.step)) keeps the hot loop free of per-step device syncs.
+        # The facade drives ONE sequential training stream; the mirror is
+        # re-anchored at init_state / load_checkpoint.
+        self._host_step = 0
+
+    def _sched_mesh_cfg(self) -> MeshConfig:
+        return self.mesh_cfg
+
+    def init_state(self, seed=0, params=None):
+        assert params is None, 'engine="dist" initializes from init_fn only'
+        self._host_step = 0
+        return self.trainer.init_state(_as_key(seed))
+
+    @property
+    def ts(self):
+        if self._ts is None:
+            self._ts = self.trainer.jit_train_step()
+        return self._ts
+
+    @property
+    def tg(self):
+        if self._tg is None:
+            self._tg = self.trainer.jit_train_gossip_step()
+        return self._tg
+
+    def param_bytes(self) -> int:
+        return stacked_param_bytes(self.trainer.param_shapes)
+
+    def step(self, state, batch):
+        impl = self.facade.impl
+        fire, active, rnd = self.sched.poll(self._host_step)
+        self._host_step += 1
+        if impl.pairwise and fire:
+            state, m = self.tg(state, batch, jnp.asarray(active), jnp.int32(rnd))
+        elif impl.uses_center:
+            state, m = self.ts(state, batch, jnp.float32(fire))
+        else:
+            state, m = self.ts(state, batch, jnp.zeros(()))
+        cost = impl.comm_cost(self.param_bytes(), self.num_workers)
+        if not impl.communicates:
+            self.comm_bytes += cost.bytes_per_step   # allreduce: every step; none: 0
+        elif fire:
+            self.comm_bytes += cost.bytes_per_event * float(np.mean(active))
+        metrics = dict(m)
+        metrics["fired"] = bool(fire)
+        metrics["comm_round"] = rnd
+        metrics["comm_bytes"] = self.comm_bytes
+        return state, metrics
+
+    def gossip_exchange(self, params_stack, active, round_idx):
+        # the compiled schedule inside the engine is build_schedule(...) too,
+        # so rounds line up 1:1 with the sim oracle's matching_partners
+        return self.trainer.gossip_exchange(params_stack, jnp.asarray(active),
+                                            jnp.int32(round_idx))
+
+    def schedule_state(self) -> dict:
+        return self.sched.state()
+
+    def restore_schedule(self, sched_state: dict) -> None:
+        self.sched.restore(sched_state)
+
+    def checkpoint_extra(self) -> dict:
+        # dist comm_bytes is host-side accounting; persist it so resumed runs
+        # keep the cumulative egress metric instead of restarting at 0
+        return {"comm_bytes": float(self.comm_bytes)}
+
+    def on_checkpoint_loaded(self, state, meta) -> None:
+        self._host_step = int(state.step)   # one sync, at load time only
+        if meta and "comm_bytes" in meta:
+            self.comm_bytes = float(meta["comm_bytes"])

@@ -2,7 +2,12 @@
 
 Handles the trainer's full state (stacked replicas, velocity, EASGD center,
 step) and the gossip scheduler's host-side state, so a run can resume with
-bit-identical protocol behavior (same PRNG stream position).
+bit-identical protocol behavior (same PRNG stream position):
+:func:`save` accepts ``schedule=sched`` to persist
+:meth:`repro.core.scheduler.GossipSchedule.state` in the metadata and
+:func:`restore_schedule` rewinds a scheduler from it. The
+``repro.api.GossipTrainer`` facade calls both from its
+``save_checkpoint``/``load_checkpoint``.
 """
 from __future__ import annotations
 
@@ -28,11 +33,17 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
+def save(path: str, tree: PyTree, meta: Optional[dict] = None,
+         schedule=None) -> None:
+    """Atomically save a pytree; ``schedule`` (a GossipSchedule) is persisted
+    into the metadata so :func:`restore_schedule` can rewind it on resume."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp.npz"
     np.savez(tmp.removesuffix(".npz"), **_flatten(tree))
     os.replace(tmp, path)
+    if schedule is not None:
+        meta = dict(meta or {})
+        meta["schedule"] = schedule.state()
     if meta is not None:
         with open(path + ".meta.json", "w") as f:
             json.dump(meta, f, indent=2, default=str)
@@ -52,6 +63,17 @@ def restore(path: str, like: PyTree) -> PyTree:
         assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
         leaves.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_schedule(path: str, schedule) -> bool:
+    """Rewind a :class:`~repro.core.scheduler.GossipSchedule` to the position
+    saved alongside the checkpoint at ``path``. Returns True when schedule
+    state was present and restored."""
+    meta = load_meta(path)
+    if meta and meta.get("schedule"):
+        schedule.restore(meta["schedule"])
+        return True
+    return False
 
 
 def load_meta(path: str) -> Optional[dict]:

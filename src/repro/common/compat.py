@@ -1,0 +1,93 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the modern sharding surface (``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.shard_map(..., axis_names=...)``,
+two-argument ``AbstractMesh``), but the pinned container JAX predates parts of
+it. Every call site goes through this module so each API difference is handled
+in exactly one place; when the pin moves forward the shims become pass-throughs
+and can be deleted without touching callers.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, FrozenSet, Iterable, Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAS_AXIS_TYPE = True
+except ImportError:  # older jax: meshes are implicitly fully "auto"
+    _HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[Any]] = None,
+              devices: Optional[Sequence[Any]] = None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every supported version.
+
+    On JAX without ``AxisType`` the argument is dropped: those versions treat
+    every mesh axis as auto, which is exactly what the repo requests.
+    """
+    kwargs = {"devices": devices} if devices is not None else {}
+    if _HAS_AXIS_TYPE and axis_types is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=tuple(axis_types), **kwargs)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Device-free ``AbstractMesh`` across the (shape, names) vs.
+    ((name, size), ...) constructor generations."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:  # jax <= 0.4.37: single shape_tuple of (name, size)
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: old JAX returns a one-element
+    list of dicts, new JAX a plain dict; both become a (possibly empty) dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager: ``jax.set_mesh`` on new JAX; on old JAX a
+    ``Mesh`` is itself a context manager with the equivalent effect."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+# Old-JAX shard_map emulates partial-manual via `auto=`, but its SPMD
+# partitioner miscompiles when the auto axes are non-trivial (>1 devices):
+# "Check failed: target.IsManualSubgroup() == sharding().IsManualSubgroup()".
+# Callers use this flag to fall back to FULL-manual mode (all axes manual,
+# unfiltered specs) on those versions.
+PARTIAL_MANUAL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, mesh, in_specs, out_specs,
+              manual_axes: Iterable[str] = ()) -> Any:
+    """Partial-manual ``shard_map``: ``manual_axes`` are manual, every other
+    mesh axis stays auto (GSPMD). Maps onto ``jax.shard_map(axis_names=...)``
+    on new JAX and ``jax.experimental.shard_map.shard_map(auto=...)`` on old,
+    with replication checking disabled on both (the gossip updates are
+    deliberately worker-varying)."""
+    manual: FrozenSet[str] = frozenset(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                             axis_names=manual, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)

@@ -269,10 +269,11 @@ class ProtocolConfig:
     moving_rate_final: float = -1.0  # <0 -> constant alpha
     alpha_decay_steps: int = 0
 
-    def __post_init__(self):
-        if self.method in ("elastic_gossip", "gossiping_pull", "gossiping_push", "easgd"):
-            assert (self.comm_probability > 0) != (self.comm_period > 0), (
-                "set exactly one of comm_probability / comm_period")
+    # NOTE: gated protocols require exactly one of comm_probability /
+    # comm_period; that invariant is protocol knowledge, so it is validated by
+    # repro.api.protocols.Protocol.__init__ (capability-flag driven) when the
+    # config is first resolved through the registry — this module stays free
+    # of per-method knowledge.
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.api import registry
+from repro.common import compat
 from repro.common.config import MeshConfig, ProtocolConfig
 from repro.core import topology
 
@@ -61,17 +63,9 @@ def build_schedule(mesh_cfg: MeshConfig, kind: str = "hypercube", num_random_rou
 
 
 def _gate_and_coef(cfg: ProtocolConfig, my_active, peer_active):
-    """Per-method gate/coefficient for a matched pair (DESIGN.md §3):
-    EG: fires if either endpoint selected the pair (passive peers respond),
-    coefficient alpha, symmetric. pull: own gate, 1/2. push: peer's gate, 1/2.
-    """
-    if cfg.method == "elastic_gossip":
-        return jnp.maximum(my_active, peer_active), cfg.moving_rate
-    if cfg.method == "gossiping_pull":
-        return my_active, 0.5
-    if cfg.method == "gossiping_push":
-        return peer_active, 0.5
-    raise ValueError(f"method {cfg.method} is not a pairwise-gossip method")
+    """Per-protocol gate/coefficient for a matched pair (DESIGN.md §3) —
+    deprecated shim over :meth:`repro.api.protocols.Protocol.pair_gate_coef`."""
+    return registry.resolve(cfg).pair_gate_coef(my_active, peer_active)
 
 
 def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
@@ -83,22 +77,31 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
     """
     schedule = build_schedule(mesh_cfg, schedule_kind)
     n_rounds = len(schedule)
-    manual = set(GOSSIP_AXES) & set(mesh.axis_names)
+    impl = registry.resolve(cfg)
+    gossip_axes = set(GOSSIP_AXES) & set(mesh.axis_names)
 
-    def filter_spec(spec: P) -> P:
-        # partial-manual shard_map: in/out specs may only reference the
-        # manual (gossip) axes; fsdp/model stay auto (GSPMD).
-        def keep(entry):
-            if entry is None:
-                return None
-            if isinstance(entry, (tuple, list)):
-                kept = tuple(a for a in entry if a in manual)
-                return kept if kept else None
-            return entry if entry in manual else None
-        return P(*(keep(e) for e in spec))
+    if compat.PARTIAL_MANUAL_SHARD_MAP:
+        manual = gossip_axes
 
-    param_specs = jax.tree.map(filter_spec, param_specs,
-                               is_leaf=lambda x: isinstance(x, P))
+        def filter_spec(spec: P) -> P:
+            # partial-manual shard_map: in/out specs may only reference the
+            # manual (gossip) axes; fsdp/model stay auto (GSPMD).
+            def keep(entry):
+                if entry is None:
+                    return None
+                if isinstance(entry, (tuple, list)):
+                    kept = tuple(a for a in entry if a in manual)
+                    return kept if kept else None
+                return entry if entry in manual else None
+            return P(*(keep(e) for e in spec))
+
+        param_specs = jax.tree.map(filter_spec, param_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    else:
+        # old-JAX fallback (see compat.PARTIAL_MANUAL_SHARD_MAP): every mesh
+        # axis goes manual, so specs stay UNfiltered — the local update is
+        # elementwise + ppermute, hence valid on the fully decomposed shards.
+        manual = set(mesh.axis_names)
 
     def local_update(params, active_scalar, round_idx):
         # params: local replica shard, leading dim 1; active_scalar: [1] float32
@@ -106,7 +109,7 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
             def fn(theta, act):
                 peer = jax.tree.map(lambda x: jax.lax.ppermute(x, axis_name, pairs), theta)
                 peer_act = jax.lax.ppermute(act, axis_name, pairs)
-                gate, coef = _gate_and_coef(cfg, act, peer_act)
+                gate, coef = impl.pair_gate_coef(act, peer_act)
 
                 def upd(t, pr):
                     # compute in the storage dtype: f32 upcasts would
@@ -123,17 +126,16 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
         branches = [functools.partial(branch(ax, pairs)) for ax, pairs in schedule]
         return jax.lax.switch(round_idx % n_rounds, branches, params, active_scalar)
 
-    active_spec = P(tuple(a for a in GOSSIP_AXES if a in manual))
+    active_spec = P(tuple(a for a in GOSSIP_AXES if a in gossip_axes))
 
     @jax.jit
     def gossip_step(params_stack, active, round_idx):
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             lambda p, a: local_update(p, a[0], round_idx),
-            mesh=mesh,
+            mesh,
             in_specs=(param_specs, active_spec),
             out_specs=param_specs,
-            axis_names=manual,
-            check_vma=False,
+            manual_axes=manual,
         )
         return fn(params_stack, active)
 

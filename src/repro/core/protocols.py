@@ -1,166 +1,65 @@
-"""Protocol definitions: the paper's Algorithms 1-6 as composable updates.
+"""Protocol math — compatibility layer over :mod:`repro.api`.
+
+The paper's Algorithms 1-6 now live as first-class Protocol classes in
+:mod:`repro.api.protocols`, resolved by name through the registry
+(:mod:`repro.api.registry`). This module keeps the original functional
+surface (``comm_gate`` / ``comm_update`` / ``gradient_transform`` /
+``comm_cost`` / ``init_state`` / ``alpha_at``) as thin shims that dispatch
+through the registry, so pre-registry callers keep working. New code should
+use ``repro.api`` directly:
+
+    from repro.api import get_protocol, register_protocol, GossipTrainer
 
 Each protocol is expressed as two orthogonal components (the paper's
-decomposition, §2.2):
-
-- a *gradient-related* transform applied to per-worker gradients (only
-  All-reduce SGD is non-trivial here: it averages gradients across workers);
-- a *communication-related* transform applied to the stacked parameters
-  (gossip/elastic/EASGD mixing), gated by the communication schedule
-  (period tau or Bernoulli probability p).
-
-Both components are computed from the step-t state simultaneously (the paper
-modifies Alg. 3/6 the same way, §2.3), so gradient and communication updates
-commute and the engines can compose them additively.
+decomposition, §2.2): a *gradient-related* transform on per-worker gradients
+and a *communication-related* transform on the stacked parameters, both
+computed from the step-t state simultaneously (§2.3) so the engines can
+compose them additively.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
-import jax
-import jax.numpy as jnp
-
+from repro.api import registry
+from repro.api.protocols import CommCost, ProtocolState  # noqa: F401  (re-export)
 from repro.common.config import ProtocolConfig
-from repro.core import topology
 
 PyTree = Any
 
-METHODS = ("allreduce", "none", "elastic_gossip", "gossiping_pull", "gossiping_push", "easgd")
-
-
-class ProtocolState(NamedTuple):
-    center: Optional[PyTree]      # EASGD center variable (else None)
-    comm_rounds: jax.Array        # number of gossip rounds executed
-    comm_bytes: jax.Array         # cumulative bytes a worker sent (accounting)
-
 
 def init_state(cfg: ProtocolConfig, params_stack: PyTree) -> ProtocolState:
-    center = None
-    if cfg.method == "easgd":
-        # Alg. 2: center initialized to the common init (= worker 0's replica)
-        center = jax.tree.map(lambda x: x[0], params_stack)
-    return ProtocolState(center, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64 else jnp.float32))
+    return registry.resolve(cfg).init_state(params_stack)
 
 
-def alpha_at(cfg: ProtocolConfig, step) -> jnp.ndarray:
-    """Moving rate at ``step`` — constant (the paper) or linearly annealed to
-    moving_rate_final (the schedule the thesis suggests in §4.1.3: high alpha
-    helps early, hurts late)."""
-    a0 = jnp.asarray(cfg.moving_rate, jnp.float32)
-    if cfg.moving_rate_final < 0 or cfg.alpha_decay_steps <= 0:
-        return a0
-    frac = jnp.clip(jnp.asarray(step, jnp.float32) / cfg.alpha_decay_steps, 0.0, 1.0)
-    return a0 + (cfg.moving_rate_final - a0) * frac
+def alpha_at(cfg: ProtocolConfig, step):
+    """Moving rate at ``step`` — constant (the paper) or linearly annealed."""
+    return registry.resolve(cfg).alpha_at(step)
 
 
-def comm_gate(cfg: ProtocolConfig, key: jax.Array, step: jax.Array, num_workers: int) -> jax.Array:
-    """Per-worker participation for this step: bool[W].
-
-    period tau  -> all workers together every tau steps (Alg. 2/3/4/6);
-    probability p -> independent Bernoulli per worker (Alg. 5 / GoSGD).
-    """
-    if cfg.method in ("allreduce", "none"):
-        return jnp.zeros((num_workers,), bool)
-    if cfg.comm_period:
-        fire = (step % cfg.comm_period) == 0
-        return jnp.broadcast_to(fire, (num_workers,))
-    return topology.participation(key, num_workers, cfg.comm_probability)
+def comm_gate(cfg: ProtocolConfig, key, step, num_workers: int):
+    """Per-worker participation for this step: bool[W]."""
+    return registry.resolve(cfg).comm_gate(key, step, num_workers)
 
 
 def gradient_transform(cfg: ProtocolConfig, grads_stack: PyTree) -> PyTree:
-    """All-reduce SGD (Alg. 1 line 4): average gradients across workers."""
-    if cfg.method == "allreduce":
-        return jax.tree.map(lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape), grads_stack)
-    return grads_stack
+    """Gradient-related component (All-reduce SGD averages across workers)."""
+    return registry.resolve(cfg).gradient_transform(grads_stack)
 
 
-def comm_update(cfg: ProtocolConfig, key: jax.Array, active: jax.Array,
-                theta_stack: PyTree, state: ProtocolState,
-                step=None) -> tuple[PyTree, ProtocolState]:
-    """Communication-related component on stacked params [W, ...].
-
-    Exact Algorithm semantics (incl. fan-in sets K_i) via mixing matrices.
-    ``active`` is the per-worker participation mask from :func:`comm_gate`.
-    ``step`` (optional) enables the alpha schedule (beyond-paper).
-    """
-    W = active.shape[0]
-    alpha = cfg.moving_rate if step is None else alpha_at(cfg, step)
-    if cfg.method in ("allreduce", "none"):
-        return theta_stack, state
-
-    if cfg.method == "easgd":
-        # Alg. 2 lines 5-7, gated: z_i = alpha (theta_i - center);
-        # theta_i -= z_i; center += sum_i z_i.
-        a = alpha
-        act = active.astype(jnp.float32)
-
-        def upd(x, c):
-            gate = act.reshape((W,) + (1,) * (x.ndim - 1))
-            z = a * gate * (x.astype(jnp.float32) - c.astype(jnp.float32)[None])
-            return (x - z.astype(x.dtype)), (c + jnp.sum(z, axis=0).astype(c.dtype))
-
-        pairs = jax.tree.map(upd, theta_stack, state.center)
-        theta_new = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-        center_new = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
-        rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-        return theta_new, ProtocolState(center_new, rounds, state.comm_bytes)
-
-    if cfg.topology == "matching":
-        peers = topology.sample_matching(key, W)
-    else:
-        peers = topology.sample_uniform_peers(key, W)
-
-    if cfg.method == "elastic_gossip":
-        mix = topology.elastic_gossip_mix(peers, active, alpha)
-    elif cfg.method == "gossiping_pull":
-        mix = topology.gossip_pull_mix(peers, active)
-    elif cfg.method == "gossiping_push":
-        mix = topology.gossip_push_mix(peers, active)
-    else:
-        raise ValueError(cfg.method)
-
-    theta_new = topology.apply_mix(mix, theta_stack)
-    rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-    return theta_new, ProtocolState(state.center, rounds, state.comm_bytes)
-
-
-# ---------------------------------------------------------------------------
-# Communication-cost accounting (bytes per step, per worker) — the paper's
-# central claim is comparable accuracy at far lower communication cost.
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class CommCost:
-    bytes_per_event: float     # bytes one worker transmits per communication event
-    events_per_step: float     # expected events per training step
-
-    @property
-    def bytes_per_step(self) -> float:
-        return self.bytes_per_event * self.events_per_step
+def comm_update(cfg: ProtocolConfig, key, active, theta_stack: PyTree,
+                state: ProtocolState, step=None):
+    """Communication-related component on stacked params [W, ...]."""
+    return registry.resolve(cfg).comm_update(key, active, theta_stack, state,
+                                             step=step)
 
 
 def comm_cost(cfg: ProtocolConfig, param_bytes: int, num_workers: int) -> CommCost:
-    """Expected egress bytes per worker per step.
+    """Expected egress bytes per worker per step (analytic)."""
+    return registry.resolve(cfg).comm_cost(param_bytes, num_workers)
 
-    all-reduce (ring): 2 * (W-1)/W * P per step, every step.
-    elastic gossip / pull / push: P per participating event (one replica
-      to/from one peer), expected p (or 1/tau) events per step.
-    easgd: P to the center per event (center egress excluded: worker-side view).
-    """
-    p_eff = cfg.comm_probability if cfg.comm_probability else (
-        1.0 / cfg.comm_period if cfg.comm_period else 0.0)
-    if cfg.method == "allreduce":
-        return CommCost(2.0 * (num_workers - 1) / num_workers * param_bytes, 1.0)
-    if cfg.method == "none":
-        return CommCost(0.0, 0.0)
-    if cfg.method == "easgd":
-        return CommCost(2.0 * param_bytes, p_eff)  # send local, receive center
-    if cfg.method == "elastic_gossip":
-        # bidirectional pairwise exchange: send P, receive P -> egress P
-        return CommCost(float(param_bytes), p_eff)
-    if cfg.method == "gossiping_pull":
-        return CommCost(float(param_bytes), p_eff)   # receive P (peer egresses P)
-    if cfg.method == "gossiping_push":
-        return CommCost(float(param_bytes), p_eff)
-    raise ValueError(cfg.method)
+
+def __getattr__(name: str):
+    if name == "METHODS":
+        # deprecated: the registry is the source of truth for protocol names
+        return registry.available_protocols()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -5,6 +5,13 @@ component fires and with which per-worker participation mask — from a shared
 seed, so every process in a real multi-controller deployment derives the same
 schedule (the paper's synchronous setting). Bernoulli(p) gives Alg. 5 / GoSGD
 semantics; period tau gives Alg. 2/3/4/6.
+
+Protocol behavior is driven by registry capability flags
+(:mod:`repro.api.registry`), not method-name dispatch: non-communicating
+protocols never fire, center-based protocols (EASGD) draw ONE shared gate,
+pairwise gossip draws per-worker Bernoulli gates and advances the round
+counter. ``state()``/``restore()`` round-trip the full scheduler state so a
+checkpoint resume replays the exact schedule (same PRNG stream position).
 """
 from __future__ import annotations
 
@@ -13,6 +20,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.api import registry
 from repro.common.config import ProtocolConfig
 
 
@@ -25,25 +33,25 @@ class GossipSchedule:
 
     def __post_init__(self):
         self._rng = np.random.RandomState(self.seed)
+        self._impl = registry.resolve(self.cfg)
 
     def poll(self, step: int) -> Tuple[bool, Optional[np.ndarray], int]:
         """-> (fire, active mask [W] float32, round_idx). Advances PRNG every
         step regardless of firing (keeps multi-controller replicas aligned)."""
-        cfg = self.cfg
-        if cfg.method in ("allreduce", "none"):
+        cfg, impl = self.cfg, self._impl
+        if not impl.communicates:
             return False, None, 0
-        if cfg.method == "easgd":
-            if cfg.comm_period:
-                fire = step % cfg.comm_period == 0
-            else:
-                fire = bool(self._rng.rand() < cfg.comm_probability)
-            return fire, np.full((self.num_workers,), float(fire), np.float32), 0
         if cfg.comm_period:
             fire = step % cfg.comm_period == 0
             active = np.full((self.num_workers,), float(fire), np.float32)
-        else:
+        elif impl.per_worker_gate:
             active = (self._rng.rand(self.num_workers) < cfg.comm_probability).astype(np.float32)
             fire = bool(active.any())
+        else:  # one shared draw (EASGD-style center exchange)
+            fire = bool(self._rng.rand() < cfg.comm_probability)
+            active = np.full((self.num_workers,), float(fire), np.float32)
+        if not impl.pairwise:
+            return fire, active, 0
         rnd = self.round_counter
         if fire:
             self.round_counter += 1
@@ -53,3 +61,11 @@ class GossipSchedule:
         return {"round_counter": self.round_counter,
                 "rng_state": self._rng.get_state()[1].tolist(),
                 "rng_pos": int(self._rng.get_state()[2])}
+
+    def restore(self, state: dict) -> None:
+        """Inverse of :meth:`state`: rewind to a saved schedule position so a
+        resumed run fires the exact same (fire, active, round) sequence."""
+        self.round_counter = int(state["round_counter"])
+        self._rng.set_state(("MT19937",
+                             np.asarray(state["rng_state"], np.uint32),
+                             int(state["rng_pos"]), 0, 0.0))

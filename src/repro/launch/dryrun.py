@@ -22,6 +22,7 @@ import traceback    # noqa: E402
 import jax          # noqa: E402
 
 from repro.analysis import roofline as rf                       # noqa: E402
+from repro.common import compat                                 # noqa: E402
 from repro.common.config import INPUT_SHAPES                    # noqa: E402
 from repro.configs import ARCH_IDS, get_config                  # noqa: E402
 from repro.launch import plans as plans_mod                     # noqa: E402
@@ -50,13 +51,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False
         t0 = time.time()
         try:
             if prog.mesh is not None:
-                with jax.set_mesh(prog.mesh):
+                with compat.set_mesh(prog.mesh):
                     lowered = prog.jitted.lower(*prog.args)
             else:
                 lowered = prog.jitted.lower(*prog.args)
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             hlo_text = compiled.as_text()
             roof = rf.analyze_program(arch, plan.shape, prog.name, hlo_text, cfg, chips,
                                       peak_memory=getattr(mem, "temp_size_in_bytes", None))

@@ -1,18 +1,23 @@
-"""End-to-end training driver (single-controller).
+"""End-to-end training driver (single-controller), built on ``repro.api``.
 
-Runs the paper's protocol (or any baseline) on an assigned architecture with
-the synthetic LM data pipeline, host-side gossip scheduling, checkpointing,
-and consensus metrics. On this CPU container it is exercised with reduced
-configs (examples/quickstart.py, tests); on a real cluster the same driver
-drives the production mesh.
+The driver is protocol-agnostic: it constructs a
+:class:`repro.api.GossipTrainer` with ``engine="dist"`` and calls ONE method
+per step — ``trainer.step(state, batch)``. Scheduling (fire/active/round
+polling and the train vs. train+gossip program selection), communication-byte
+accounting and checkpoint/schedule persistence all live inside the facade;
+protocol names come from the registry, so a newly registered protocol is
+immediately launchable with ``--method <name>``.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
         --reduced --steps 50 --method elastic_gossip --p 0.25
+
+On this CPU container it is exercised with reduced configs
+(examples/quickstart.py, tests); on a real cluster the same driver drives the
+production mesh.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 
@@ -20,20 +25,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig, TrainConfig
+from repro.api import GossipTrainer, available_protocols
+from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.consensus import divergence_metrics
-from repro.core.scheduler import GossipSchedule
-from repro.checkpoint import io as ckpt_io
-from repro.data.synthetic import make_lm_tokens
 from repro.launch.mesh import make_host_mesh, make_worker_mesh
 from repro.models import transformer as tr
-from repro.train.step import DistTrainer
 
 
 def lm_batches(cfg, num_workers: int, per_worker: int, seq: int, seed: int = 0):
     """Worker-partitioned synthetic token stream (each worker gets a disjoint
     slice, the paper's data-parallel partitioning)."""
+    from repro.data.synthetic import make_lm_tokens
     stream = make_lm_tokens(num_workers * 4_000_000 // max(1, num_workers // 8), cfg.vocab_size, seed)
     shard_len = len(stream) // num_workers
     step = 0
@@ -65,8 +68,6 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
                            comm_period=tau)
-    tcfg = TrainConfig(protocol=proto,
-                       optimizer=OptimizerConfig(name="nag", learning_rate=lr, momentum=0.9))
     if production_mesh:
         mesh_cfg = MeshConfig(data=16, model=16, pods=2 if multi_pod else 1,
                               workers_per_pod=workers)
@@ -81,34 +82,29 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         return params
 
     _, axes = tr.abstract_lm(cfg)
-    trainer = DistTrainer(mesh, mesh_cfg, cfg, tcfg, init_fn, axes)
-    trainer.set_shape(global_batch, seq)
-    state = trainer.init_state(jax.random.PRNGKey(seed))
-    ts, tg = trainer.jit_train_step(), trainer.jit_train_gossip_step()
-    sched = GossipSchedule(proto, mesh_cfg.num_workers, seed=seed + 1)
+    trainer = GossipTrainer(
+        engine="dist", protocol=proto,
+        optimizer=OptimizerConfig(name="nag", learning_rate=lr, momentum=0.9),
+        mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=cfg, init_fn=init_fn,
+        params_axes=axes, global_batch=global_batch, seq_len=seq, seed=seed)
+    state = trainer.init_state(seed)
     batches = lm_batches(cfg, mesh_cfg.num_workers, global_batch // mesh_cfg.num_workers,
                          seq, seed)
     history = []
     t0 = time.time()
     for i in range(steps):
-        batch = next(batches)
-        fire, active, rnd = sched.poll(i)
-        if fire and proto.method not in ("easgd",):
-            state, m = tg(state, batch, jnp.asarray(active), jnp.int32(rnd))
-        elif proto.method == "easgd":
-            state, m = ts(state, batch, jnp.float32(fire))
-        else:
-            state, m = ts(state, batch, jnp.zeros(()))
+        state, m = trainer.step(state, next(batches))
         if i % log_every == 0 or i == steps - 1:
             div = divergence_metrics(state.params)
             rec = {"step": i, "loss": float(m["loss"]),
                    "consensus_rel": float(div["consensus_rel"]),
-                   "fired": bool(fire)}
+                   "fired": bool(m["fired"]),
+                   "comm_mb": round(float(m["comm_bytes"]) / 1e6, 3)}
             history.append(rec)
             print(json.dumps(rec))
         if checkpoint_dir and (i + 1) % 50 == 0:
-            ckpt_io.save(f"{checkpoint_dir}/step_{i+1}.npz", state._asdict(),
-                         meta={"arch": arch, "step": i + 1, "protocol": dataclasses.asdict(proto)})
+            trainer.save_checkpoint(f"{checkpoint_dir}/step_{i+1}.npz", state,
+                                    meta={"arch": arch, "step": i + 1})
     print(f"trained {steps} steps in {time.time()-t0:.1f}s; "
           f"final loss {history[-1]['loss']:.4f}")
     return state, history
@@ -120,8 +116,7 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--method", default="elastic_gossip",
-                    choices=("elastic_gossip", "gossiping_pull", "gossiping_push",
-                             "allreduce", "easgd", "none"))
+                    choices=available_protocols())
     ap.add_argument("--p", type=float, default=0.25)
     ap.add_argument("--tau", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=0.5)

@@ -119,6 +119,10 @@ def make_serve_program(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ModelConfig, *,
 
 
 def consensus_params(params_stacked: PyTree) -> PyTree:
-    """Average the worker replicas -> serving params (paper 'Aggregate')."""
+    """Average the worker replicas -> serving params (paper 'Aggregate').
+
+    This is the training->serving handoff: ``repro.api.GossipTrainer
+    .consensus_params(state)`` delegates here, and ``make_serve_program`` is
+    re-exported from :mod:`repro.api` as the serving entry point."""
     return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
                         params_stacked)

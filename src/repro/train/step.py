@@ -12,8 +12,10 @@ Two compiled programs (DESIGN.md §4):
                       gated by the host-scheduled ``active`` scalar.
 - ``train_gossip_step``  gradient + ONE matching-gossip round, composed
                       simultaneously from the step-t state, exactly like the
-                      simulation engine (gossip_sim.py). The host driver calls
-                      it on steps where the communication schedule fires.
+                      simulation engine (gossip_sim.py). The repro.api
+                      GossipTrainer facade selects between the two programs
+                      from the host-side schedule; protocol behavior comes
+                      from registry capability flags, not method strings.
 
 Keeping them separate keeps gossip collectives out of the steady-state HLO, so
 the dry-run roofline can amortize gossip cost by its true expected frequency
@@ -28,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api import registry
 from repro.common.config import MeshConfig, ModelConfig, ProtocolConfig, TrainConfig
 from repro.core import gossip_dist
 from repro.launch import sharding as shr
@@ -56,6 +59,7 @@ class DistTrainer:
         self.W = mesh_cfg.num_workers
         self.opt = train_cfg.optimizer
         self.protocol = train_cfg.protocol
+        self._impl = registry.resolve(self.protocol)
         assert self.opt.name == "nag", "distributed trainer implements the paper's NAG (Alg. 5)"
 
         stacked_axes = shr.with_worker_dim(params_axes)
@@ -66,7 +70,7 @@ class DistTrainer:
         self.center_specs = shr.tree_specs(single_shapes, params_axes, mesh)
         self.state_specs = TrainState(
             params=self.param_specs, velocity=self.param_specs,
-            center=self.center_specs if self.protocol.method == "easgd" else None,
+            center=self.center_specs if self._impl.uses_center else None,
             step=P())
         self._gossip_exchange = None
 
@@ -79,13 +83,13 @@ class DistTrainer:
                                   is_leaf=lambda x: isinstance(x, P)))
         vel = jax.tree.map(jnp.zeros_like, stacked)
         center = (jax.tree.map(lambda x: x.copy(), single)
-                  if self.protocol.method == "easgd" else None)
+                  if self._impl.uses_center else None)
         return TrainState(stacked, vel, center, jnp.zeros((), jnp.int32))
 
     def state_shapes(self) -> TrainState:
         """ShapeDtypeStructs for the dry-run (no allocation)."""
         single = jax.eval_shape(self.init_fn, jax.random.PRNGKey(0))
-        center = single if self.protocol.method == "easgd" else None
+        center = single if self._impl.uses_center else None
         return TrainState(self.param_shapes, self.param_shapes, center,
                           jax.ShapeDtypeStruct((), jnp.int32))
 
@@ -139,23 +143,14 @@ class DistTrainer:
 
     # ------------------------------------------------------------- programs
     def _train_step(self, state: TrainState, batch, active):
-        cfg = self.protocol
         loss, grads = self._grads_and_loss(state.params, batch)
-        if cfg.method == "allreduce":
-            grads = jax.tree.map(
-                lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape), grads)
+        grads = self._impl.gradient_transform(grads)
         center_new = state.center
         comm_delta = None
-        if cfg.method == "easgd":
-            a = cfg.moving_rate
-
-            def upd(x, c):
-                z = a * active * (x.astype(jnp.float32) - c.astype(jnp.float32)[None])
-                return (-z).astype(x.dtype), (c + jnp.sum(z, axis=0).astype(c.dtype))
-
-            pairs = jax.tree.map(upd, state.params, state.center)
-            comm_delta = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-            center_new = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        if self._impl.uses_center:
+            # center exchange (Alg. 2 lines 5-7), gated by the host scheduler
+            comm_delta, center_new = self._impl.center_step(
+                state.params, state.center, active)
         p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
         if comm_delta is not None:
             p_new = jax.tree.map(jnp.add, p_new, comm_delta)

@@ -1,0 +1,68 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use,
+so the tier-1 suite runs on containers without hypothesis installed.
+
+Property tests degrade to a fixed-seed random sweep of ``max_examples``
+draws — weaker shrinking/coverage than real hypothesis, same assertions.
+When hypothesis IS installed the tests import it instead (see the
+``try/except ImportError`` at each usage site).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.RandomState], Any]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.RandomState) -> Any:
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randint(len(opts))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.randint(2)))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_max_examples", 20)
+            rng = np.random.RandomState(0)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i}: {drawn}") from e
+        # keep pytest's signature introspection from treating the drawn
+        # params as fixtures (inspect.signature follows __wrapped__)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,257 @@
+"""repro.api tests: registry round-trip, the GossipTrainer facade (training,
+byte accounting, checkpoint/schedule restore), and sim-vs-dist facade parity.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CommCost, GossipTrainer, Protocol, available_protocols,
+                       get_protocol, register_protocol, resolve,
+                       unregister_protocol)
+from repro.common.config import OptimizerConfig, ProtocolConfig
+from repro.models import simple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PAPER_METHODS = {"allreduce", "none", "elastic_gossip", "gossiping_pull",
+                 "gossiping_push", "easgd"}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip_every_protocol_resolvable():
+    names = available_protocols()
+    assert PAPER_METHODS <= set(names)
+    for name in names:
+        cls = get_protocol(name)
+        assert issubclass(cls, Protocol)
+        assert cls.name == name
+        # capability flags are consistent with the paper's taxonomy
+        if cls.pairwise:
+            assert cls.communicates
+
+
+def test_unknown_protocol_raises_with_candidates():
+    with pytest.raises(ValueError, match="unknown protocol"):
+        get_protocol("carrier_pigeon")
+
+
+def test_register_protocol_extension_point():
+    @register_protocol("_test_silent")
+    class Silent(Protocol):
+        communicates = False
+
+        def comm_cost(self, param_bytes, num_workers):
+            return CommCost(0.0, 0.0)
+
+    try:
+        assert "_test_silent" in available_protocols()
+        impl = resolve(ProtocolConfig(method="_test_silent"))
+        assert isinstance(impl, Silent) and not impl.communicates
+        # duplicate registration under the same name is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            @register_protocol("_test_silent")
+            class Clash(Protocol):
+                pass
+    finally:
+        unregister_protocol("_test_silent")
+    assert "_test_silent" not in available_protocols()
+
+
+def test_pairwise_hooks_rejected_for_non_pairwise():
+    impl = resolve(ProtocolConfig(method="easgd", comm_period=2))
+    with pytest.raises(ValueError, match="not a pairwise"):
+        impl.pair_gate_coef(jnp.ones(()), jnp.ones(()))
+
+
+# ---------------------------------------------------------------------------
+# facade: sim engine
+# ---------------------------------------------------------------------------
+
+def _mlp_problem(W=4, n=48, d=10, classes=3, seed=0):
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(classes, d) * 2
+    y = rng.randint(0, classes, (W, n)).astype(np.int32)
+    x = protos[y] + rng.randn(W, n, d).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def _mlp_loss(params, x, y):
+    return simple.xent_loss(simple.mlp_logits(params, x), y)
+
+
+def _sim_trainer(method, W=4, **proto_kw):
+    proto = ProtocolConfig(method=method, topology="uniform", **proto_kw)
+    return GossipTrainer(
+        engine="sim", protocol=proto,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=_mlp_loss, num_workers=W,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=16, depth=2,
+                                            num_classes=3)[0])
+
+
+def test_facade_sim_trains_and_reports_normalized_metrics():
+    trainer = _sim_trainer("elastic_gossip", comm_probability=0.5, moving_rate=0.5)
+    state = trainer.init_state(0)
+    x, y = _mlp_problem()
+    losses = []
+    for _ in range(40):
+        state, m = trainer.step(state, (x, y))
+        assert {"loss", "fired", "comm_bytes"} <= set(m)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7
+    assert float(m["comm_bytes"]) > 0
+
+
+def test_facade_comm_bytes_match_analytic_cost():
+    # p=1: every worker participates every step -> bytes = steps * P exactly
+    steps, W = 7, 4
+    eg = _sim_trainer("elastic_gossip", W=W, comm_probability=1.0, moving_rate=0.5)
+    state = eg.init_state(0)
+    x, y = _mlp_problem(W)
+    for _ in range(steps):
+        state, m = eg.step(state, (x, y))
+    pb = eg.comm_cost().bytes_per_event
+    assert float(m["comm_bytes"]) == pytest.approx(steps * pb, rel=1e-6)
+
+    # allreduce: ring egress every step, none: zero
+    ar = _sim_trainer("allreduce", W=W)
+    state_ar = ar.init_state(0)
+    for _ in range(steps):
+        state_ar, m_ar = ar.step(state_ar, (x, y))
+    assert float(m_ar["comm_bytes"]) == pytest.approx(
+        steps * 2.0 * (W - 1) / W * pb, rel=1e-6)
+
+    nc = _sim_trainer("none", W=W)
+    state_nc = nc.init_state(0)
+    state_nc, m_nc = nc.step(state_nc, (x, y))
+    assert float(m_nc["comm_bytes"]) == 0.0
+
+
+def test_facade_checkpoint_roundtrip_restores_params(tmp_path):
+    trainer = _sim_trainer("easgd", comm_period=2, moving_rate=0.1)
+    state = trainer.init_state(0)
+    x, y = _mlp_problem()
+    for _ in range(5):
+        state, _ = trainer.step(state, (x, y))
+    path = str(tmp_path / "ck.npz")
+    trainer.save_checkpoint(path, state, meta={"step": 5})
+    template = trainer.init_state(1)
+    restored, meta = trainer.load_checkpoint(path, template)
+    assert meta["step"] == 5 and meta["protocol"]["method"] == "easgd"
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# schedule state round-trip (checkpoint resume reproduces the exact schedule)
+# ---------------------------------------------------------------------------
+
+def test_schedule_restore_is_inverse_of_state():
+    from repro.core.scheduler import GossipSchedule
+    cfg = ProtocolConfig(method="elastic_gossip", comm_probability=0.3)
+    a = GossipSchedule(cfg, 8, seed=7)
+    for i in range(17):
+        a.poll(i)
+    snapshot = a.state()
+    # fresh scheduler, different seed: restore must fully override it
+    b = GossipSchedule(cfg, 8, seed=999)
+    b.restore(snapshot)
+    for i in range(17, 60):
+        fa, ma, ra = a.poll(i)
+        fb, mb, rb = b.poll(i)
+        assert fa == fb and ra == rb
+        np.testing.assert_array_equal(ma, mb)
+
+
+def test_checkpoint_io_saves_and_restores_schedule(tmp_path):
+    from repro.checkpoint import io
+    from repro.core.scheduler import GossipSchedule
+    cfg = ProtocolConfig(method="gossiping_push", comm_probability=0.4)
+    sched = GossipSchedule(cfg, 4, seed=3)
+    for i in range(9):
+        sched.poll(i)
+    path = str(tmp_path / "step_9.npz")
+    io.save(path, {"x": jnp.zeros(2)}, meta={"step": 9}, schedule=sched)
+    resumed = GossipSchedule(cfg, 4, seed=0)
+    assert io.restore_schedule(path, resumed)
+    for i in range(9, 40):
+        fa, ma, ra = sched.poll(i)
+        fb, mb, rb = resumed.poll(i)
+        assert fa == fb and ra == rb
+        np.testing.assert_array_equal(ma, mb)
+    assert io.load_meta(path)["step"] == 9
+
+
+# ---------------------------------------------------------------------------
+# facade-level engine parity: the SAME gossip round through engine="sim" and
+# engine="dist" must agree bit-for-bit on every pairwise protocol
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_facade_parity_sim_vs_dist_all_pairwise_protocols():
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.api import GossipTrainer
+        from repro.common.config import MeshConfig, ProtocolConfig
+        from repro.launch.mesh import make_worker_mesh
+
+        mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+        mesh = make_worker_mesh(mcfg)
+        W = mcfg.num_workers
+
+        def init_fn(key):
+            k1, k2 = jax.random.split(key)
+            return {"w": jax.random.normal(k1, (16, 8)),
+                    "b": jax.random.normal(k2, (8,))}
+
+        axes = {"w": (None, None), "b": (None,)}
+        params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (W,) + x.shape) +
+                              0.1 * jax.random.normal(jax.random.PRNGKey(7),
+                                                      (W,) + x.shape),
+                              init_fn(jax.random.PRNGKey(1)))
+        pspec = {"w": P(("pod", "worker")), "b": P(("pod", "worker"))}
+        params = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                              params, pspec)
+        active = jnp.array(np.random.RandomState(0).rand(W) < 0.6, jnp.float32)
+        dummy = lambda p, b: jnp.zeros(())
+
+        for method in ("elastic_gossip", "gossiping_push", "gossiping_pull"):
+            proto = ProtocolConfig(method=method, comm_probability=0.5,
+                                   moving_rate=0.37)
+            dist = GossipTrainer(engine="dist", protocol=proto, mesh=mesh,
+                                 mesh_cfg=mcfg, model_cfg=None, loss_fn=dummy,
+                                 init_fn=init_fn, params_axes=axes,
+                                 global_batch=8, seq_len=4)
+            sim = GossipTrainer(engine="sim", protocol=proto, loss_fn=dummy,
+                                num_workers=W, mesh_cfg=mcfg)
+            assert dist.num_gossip_rounds == sim.num_gossip_rounds
+            for r in range(dist.num_gossip_rounds):
+                np.testing.assert_array_equal(dist.matching_partners(r),
+                                              sim.matching_partners(r))
+                out_d = dist.gossip_exchange(params, active, r)
+                out_s = sim.gossip_exchange(params, active, r)
+                for k in ("w", "b"):
+                    np.testing.assert_allclose(np.asarray(out_d[k]),
+                                               np.asarray(out_s[k]),
+                                               rtol=1e-6, atol=1e-6,
+                                               err_msg=f"{method} round {r} {k}")
+            print(method, "PARITY_OK")
+        print("ALL_PARITY_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ALL_PARITY_OK" in r.stdout

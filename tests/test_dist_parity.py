@@ -57,14 +57,15 @@ def test_gossip_dist_matches_dense_oracle():
 
 @pytest.mark.slow
 def test_dist_trainer_protocols_run_and_learn():
+    # protocol-agnostic driver loop: scheduling and program selection live in
+    # the GossipTrainer facade, one trainer.step() per step for every method
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.common.config import MeshConfig, ProtocolConfig, TrainConfig, OptimizerConfig
+        from repro.api import GossipTrainer
+        from repro.common.config import MeshConfig, ProtocolConfig, OptimizerConfig
         from repro.launch.mesh import make_worker_mesh
         from repro.configs import get_reduced
         from repro.models import transformer as tr
-        from repro.train.step import DistTrainer
-        from repro.core.scheduler import GossipSchedule
         from repro.data.synthetic import make_lm_tokens
 
         mcfg = MeshConfig(data=4, model=2, pods=1, workers_per_pod=4)
@@ -84,29 +85,22 @@ def test_dist_trainer_protocols_run_and_learn():
         for method, kw in [("elastic_gossip", dict(comm_probability=0.5)),
                            ("allreduce", {}), ("easgd", dict(comm_period=2))]:
             proto = ProtocolConfig(method=method, moving_rate=0.5, **kw)
-            tcfg = TrainConfig(protocol=proto,
-                               optimizer=OptimizerConfig(name="nag", learning_rate=3e-3, momentum=0.9))
             def init_fn(key):
                 p, _ = tr.init_lm(key, cfg)
                 return p
             _, axes = tr.abstract_lm(cfg)
-            trainer = DistTrainer(mesh, mcfg, cfg, tcfg, init_fn, axes)
-            trainer.set_shape(8, 32)
-            state = trainer.init_state(jax.random.PRNGKey(0))
-            ts, tg = trainer.jit_train_step(), trainer.jit_train_gossip_step()
-            sched = GossipSchedule(proto, mcfg.num_workers, seed=1)
+            trainer = GossipTrainer(
+                engine="dist", protocol=proto,
+                optimizer=OptimizerConfig(name="nag", learning_rate=3e-3, momentum=0.9),
+                mesh=mesh, mesh_cfg=mcfg, model_cfg=cfg, init_fn=init_fn,
+                params_axes=axes, global_batch=8, seq_len=32)
+            state = trainer.init_state(0)
             losses = []
             for i in range(24):
-                b = batches(i, mcfg.num_workers, 2, 32)
-                fire, active, rnd = sched.poll(i)
-                if method == "easgd":
-                    state, m = ts(state, b, jnp.float32(fire))
-                elif fire:
-                    state, m = tg(state, b, jnp.asarray(active), jnp.int32(rnd))
-                else:
-                    state, m = ts(state, b, jnp.zeros(()))
+                state, m = trainer.step(state, batches(i, mcfg.num_workers, 2, 32))
                 losses.append(float(m["loss"]))
             assert losses[-1] < losses[0], (method, losses[0], losses[-1])
+            assert float(m["comm_bytes"]) > 0, method
             print(method, "OK", round(losses[0], 3), "->", round(losses[-1], 3))
         print("TRAIN_OK")
     """, timeout=560)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: fixed-seed sweep
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.common.config import ProtocolConfig
 from repro.core import consensus, protocols, topology

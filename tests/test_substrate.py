@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: fixed-seed sweep
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.common.config import OptimizerConfig, ProtocolConfig
 from repro.optim import make_optimizer, param_update, velocity_update
@@ -146,11 +150,11 @@ def test_latest_step_path(tmp_path):
 # ---------------------------------------------------------------------------
 
 def test_spec_for_divisibility_and_axis_reuse():
-    import jax as _jax
     from jax.sharding import PartitionSpec as P
+    from repro.common.compat import AxisType, make_mesh
     from repro.launch.sharding import spec_for
-    mesh = _jax.make_mesh((1, 1), ("fsdp", "model"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("fsdp", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     # single-device mesh: everything divisible, axis sizes 1
     s = spec_for((8, 16), ("embed", "ffn"), mesh)
     assert s == P("fsdp", "model")
@@ -160,12 +164,12 @@ def test_spec_for_divisibility_and_axis_reuse():
 
 
 def test_spec_for_indivisible_falls_back_to_none():
-    import jax as _jax
     from jax.sharding import PartitionSpec as P
+    from repro.common.compat import abstract_mesh
     from repro.launch.sharding import spec_for
     # need >1-sized axis; skip if the runtime only has 1 device — construct
     # an abstract mesh instead
-    mesh = _jax.sharding.AbstractMesh((4, 2), ("fsdp", "model"))
+    mesh = abstract_mesh((4, 2), ("fsdp", "model"))
     s = spec_for((6, 16), ("embed", "ffn"), mesh)   # 6 % 4 != 0
     assert s == P(None, "model")
 
