@@ -13,6 +13,15 @@ production shard_map engine — see repro/launch/train.py, which is this loop
 at scale. Any protocol registered with ``@register_protocol`` works here by
 name (``available_protocols()`` lists them).
 
+Pairwise protocols run on the **flat parameter plane** by default
+(``fused_update=True``): parameters flatten into one lane-aligned buffer per
+dtype (repro/common/flat.py), the distributed gossip round is a single
+collective-permute, and NAG + the gossip displacement land in one fused
+Pallas pass (repro/kernels/fused_update.py). Pass ``fused_update=False`` to
+``GossipTrainer`` to force the per-leaf reference path — numerically
+equivalent (parity-tested), just more HBM sweeps; see
+benchmarks/fused_step.py / BENCH_fused_step.json for the byte accounting.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax

@@ -88,7 +88,7 @@ class GossipTrainer:
                  mesh=None, mesh_cfg: Optional[MeshConfig] = None,
                  model_cfg=None, params_axes: Optional[PyTree] = None,
                  global_batch: Optional[int] = None, seq_len: Optional[int] = None,
-                 grad_accum: int = 1, seed: int = 0):
+                 grad_accum: int = 1, seed: int = 0, fused_update: bool = True):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.engine = engine
@@ -96,6 +96,10 @@ class GossipTrainer:
         self.impl = registry.resolve(protocol)
         self.optimizer = optimizer or OptimizerConfig()
         self.seed = seed
+        # flat-plane fused update (repro.common.flat + kernels/fused_update):
+        # effective for pairwise protocols on either engine; others keep their
+        # per-leaf path regardless (capability-flag gated inside the engines).
+        self.fused_update = fused_update
         if engine == "sim":
             if loss_fn is None or num_workers is None:
                 raise ValueError('engine="sim" requires loss_fn and num_workers')
@@ -233,7 +237,8 @@ class _SimBackend(_MatchingScheduleMixin):
         self.init_fn = init_fn
         self.num_workers = num_workers
         self.mesh_cfg = mesh_cfg
-        self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer)
+        self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer,
+                              fused_update=facade.fused_update)
         self._sched_rounds = None
         self._pb = None
 
@@ -297,7 +302,8 @@ class _DistBackend(_MatchingScheduleMixin):
         self.facade = facade
         self.mesh_cfg = mesh_cfg
         self.num_workers = mesh_cfg.num_workers
-        tcfg = TrainConfig(protocol=facade.protocol, optimizer=facade.optimizer)
+        tcfg = TrainConfig(protocol=facade.protocol, optimizer=facade.optimizer,
+                           fused_update=facade.fused_update)
         self.trainer = DistTrainer(mesh, mesh_cfg, model_cfg, tcfg, init_fn,
                                    params_axes, loss_fn=loss_fn, grad_accum=grad_accum)
         if global_batch is not None:
@@ -306,6 +312,11 @@ class _DistBackend(_MatchingScheduleMixin):
         self._ts = self._tg = None
         self._sched_rounds = None
         self.comm_bytes = 0.0
+        # per-step host costs, hoisted out of the hot loop: param_bytes()
+        # walked the whole param tree and comm_cost() re-derived the analytic
+        # egress EVERY step — both are static per trainer.
+        self._pb = stacked_param_bytes(self.trainer.param_shapes)
+        self._cost = facade.impl.comm_cost(self._pb, self.num_workers)
         # host mirror of state.step: polling the schedule with it (instead of
         # int(state.step)) keeps the hot loop free of per-step device syncs.
         # The facade drives ONE sequential training stream; the mirror is
@@ -333,7 +344,7 @@ class _DistBackend(_MatchingScheduleMixin):
         return self._tg
 
     def param_bytes(self) -> int:
-        return stacked_param_bytes(self.trainer.param_shapes)
+        return self._pb
 
     def step(self, state, batch):
         impl = self.facade.impl
@@ -345,7 +356,7 @@ class _DistBackend(_MatchingScheduleMixin):
             state, m = self.ts(state, batch, jnp.float32(fire))
         else:
             state, m = self.ts(state, batch, jnp.zeros(()))
-        cost = impl.comm_cost(self.param_bytes(), self.num_workers)
+        cost = self._cost
         if not impl.communicates:
             self.comm_bytes += cost.bytes_per_step   # allreduce: every step; none: 0
         elif fire:

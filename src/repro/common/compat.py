@@ -71,8 +71,8 @@ def set_mesh(mesh):
 # Old-JAX shard_map emulates partial-manual via `auto=`, but its SPMD
 # partitioner miscompiles when the auto axes are non-trivial (>1 devices):
 # "Check failed: target.IsManualSubgroup() == sharding().IsManualSubgroup()".
-# Callers use this flag to fall back to FULL-manual mode (all axes manual,
-# unfiltered specs) on those versions.
+# (Informational — since the flat-plane refactor every gossip shard_map runs
+# FULL-manual with unfiltered specs, so no caller branches on this anymore.)
 PARTIAL_MANUAL_SHARD_MAP = hasattr(jax, "shard_map")
 
 

@@ -305,3 +305,9 @@ class TrainConfig:
     checkpoint_dir: str = ""
     log_every: int = 10
     data_skew: float = 0.0           # Dirichlet label-skew strength (0 = iid)
+    # fused flat-plane update (repro.common.flat + kernels/fused_update): one
+    # bandwidth-optimal pass for NAG + the gossip displacement. Applies to
+    # pairwise protocols only (capability-flag gated); allreduce/EASGD keep
+    # their per-leaf path. Default on; turn off to force the per-leaf
+    # reference path (parity tests compare the two).
+    fused_update: bool = True

@@ -7,6 +7,12 @@ replica shard along a matching, followed by the (fusable) elastic update:
 
     theta <- theta - coef * gate * (theta - theta_peer)
 
+The exchange runs on the **flat parameter plane** (repro.common.flat): the
+replica shard is flattened into one lane-aligned buffer per dtype and the
+participation gate rides in the tail element of the first buffer, so a round
+is exactly ONE ppermute per dtype bucket (ONE total for the usual
+homogeneous-dtype tree) instead of one per leaf plus one for the gate.
+
 Matching schedules decompose over the mesh's gossip axes (hypercube dims on
 'worker' then 'pod' — so cross-pod/DCN rounds are a distinct, less frequent
 schedule entry, matching the bandwidth hierarchy). The round index and the
@@ -19,7 +25,6 @@ bit-equality against gossip_sim fed the same matching).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, List, Sequence, Tuple
 
 import jax
@@ -28,6 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.api import registry
 from repro.common import compat
+from repro.common import flat as flat_plane
 from repro.common.config import MeshConfig, ProtocolConfig
 from repro.core import topology
 
@@ -69,75 +75,121 @@ def _gate_and_coef(cfg: ProtocolConfig, my_active, peer_active):
 
 
 def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
-                     param_specs: PyTree, schedule_kind: str = "hypercube"):
-    """Build gossip_step(params_stack, active[Wtot], round_idx) -> params_stack.
+                     param_specs: PyTree, schedule_kind: str = "hypercube",
+                     mode: str = "apply"):
+    """Build gossip_step(params_stack, active[Wtot], round_idx).
 
     params_stack leaves: [Wtot_local..., ...] sharded per param_specs (leading
     dim over ('pod','worker')). active: float32 [num_workers] participation.
+
+    mode="apply": returns the exchanged params_stack (elastic move applied in
+    the exchange program — the facade parity surface and the unfused path).
+    mode="peer":  returns (peer_stack, gate*coef [Wtot]) with the elastic move
+    NOT applied (composition surface for external fused consumers/tests).
+    mode="fused": the trainers' hot path — gossip_step(params_stack, velocity,
+    grads, active, round_idx, eta, mu) -> (params', velocity'): the exchange
+    AND the whole NAG + elastic update (Alg. 5 lines 3/7/9, simultaneous) in
+    one shard-mapped program, so the fused Pallas kernel only ever sees the
+    LOCAL replica shard (a pallas_call has no GSPMD sharding rule — outside
+    shard_map XLA would all-gather the stacked plane onto every chip).
+
+    In every mode the round's communication is one ppermute per dtype bucket
+    of the flat plane (the participation gate rides in the first buffer's
+    tail element), not one per leaf.
     """
+    assert mode in ("apply", "peer", "fused"), mode
     schedule = build_schedule(mesh_cfg, schedule_kind)
     n_rounds = len(schedule)
     impl = registry.resolve(cfg)
     gossip_axes = set(GOSSIP_AXES) & set(mesh.axis_names)
 
-    if compat.PARTIAL_MANUAL_SHARD_MAP:
-        manual = gossip_axes
+    # Full-manual over EVERY mesh axis, all modes (specs stay unfiltered).
+    # The body is elementwise + ppermute, hence valid on the fully decomposed
+    # shards — and the flat plane REQUIRES it: flattening a leaf whose
+    # fsdp/model dims were left auto would make GSPMD all-gather the full
+    # replica onto each chip before the concat (and a pallas_call has no
+    # GSPMD sharding rule at all). Manual shards keep the exchange moving
+    # shard-local bytes only.
+    manual = set(mesh.axis_names)
 
-        def filter_spec(spec: P) -> P:
-            # partial-manual shard_map: in/out specs may only reference the
-            # manual (gossip) axes; fsdp/model stay auto (GSPMD).
-            def keep(entry):
-                if entry is None:
-                    return None
-                if isinstance(entry, (tuple, list)):
-                    kept = tuple(a for a in entry if a in manual)
-                    return kept if kept else None
-                return entry if entry in manual else None
-            return P(*(keep(e) for e in spec))
+    def exchange_flat(bufs, act, round_idx):
+        """ONE ppermute per dtype bucket (gate in the carrier's tail element):
+        lax.switch selects the round's static permutation. Returns
+        (peer_bufs, peer_act)."""
+        buckets = list(bufs)
+        carrier = buckets[0]
 
-        param_specs = jax.tree.map(filter_spec, param_specs,
-                                   is_leaf=lambda x: isinstance(x, P))
-    else:
-        # old-JAX fallback (see compat.PARTIAL_MANUAL_SHARD_MAP): every mesh
-        # axis goes manual, so specs stay UNfiltered — the local update is
-        # elementwise + ppermute, hence valid on the fully decomposed shards.
-        manual = set(mesh.axis_names)
-
-    def local_update(params, active_scalar, round_idx):
-        # params: local replica shard, leading dim 1; active_scalar: [1] float32
         def branch(axis_name, pairs):
-            def fn(theta, act):
-                peer = jax.tree.map(lambda x: jax.lax.ppermute(x, axis_name, pairs), theta)
-                peer_act = jax.lax.ppermute(act, axis_name, pairs)
-                gate, coef = impl.pair_gate_coef(act, peer_act)
-
-                def upd(t, pr):
-                    # compute in the storage dtype: f32 upcasts would
-                    # materialize two full f32 copies of the replica shard
-                    # (grok: +12 GB/chip). On TPU the Pallas fused_update
-                    # kernel does the f32 math per-tile in VMEM instead
-                    # (repro/kernels/fused_update.py).
-                    g = (gate * coef).astype(t.dtype).reshape((1,) * t.ndim)
-                    return t - g * (t - pr)
-
-                return jax.tree.map(upd, theta, peer)
+            def fn(bufs):
+                cat = jnp.concatenate(
+                    [bufs[carrier],
+                     jnp.reshape(act, (1, 1)).astype(bufs[carrier].dtype)], axis=-1)
+                peer_cat = jax.lax.ppermute(cat, axis_name, pairs)
+                peer = {carrier: peer_cat[:, :-1]}
+                for k in buckets[1:]:
+                    peer[k] = jax.lax.ppermute(bufs[k], axis_name, pairs)
+                return peer, peer_cat[0, -1].astype(jnp.float32)
             return fn
 
-        branches = [functools.partial(branch(ax, pairs)) for ax, pairs in schedule]
-        return jax.lax.switch(round_idx % n_rounds, branches, params, active_scalar)
+        branches = [branch(ax, pairs) for ax, pairs in schedule]
+        return jax.lax.switch(round_idx % n_rounds, branches, bufs)
+
+    def local_update(params, active_scalar, round_idx):
+        # params: local replica shard, leading dim 1; active_scalar: scalar f32
+        spec = flat_plane.FlatSpec.build(params, leading=1)
+        bufs = spec.flatten(params)
+        peer, peer_act = exchange_flat(bufs, active_scalar, round_idx)
+        gate, coef = impl.pair_gate_coef(active_scalar, peer_act)
+        gc = (gate * coef).astype(jnp.float32)
+        if mode == "peer":
+            return spec.unflatten(peer), jnp.reshape(gc, (1,))
+        # compute in the storage dtype: f32 upcasts would materialize two full
+        # f32 copies of the replica shard (grok: +12 GB/chip). On TPU the
+        # fused mode does the f32 math per-tile in VMEM instead.
+        new = {k: b - gc.astype(b.dtype) * (b - peer[k]) for k, b in bufs.items()}
+        return spec.unflatten(new)
+
+    def local_fused(params, velocity, grads, active_scalar, round_idx, eta, mu):
+        # exchange + the entire NAG + elastic displacement in one pass over
+        # the local flat plane (kernels/ops dispatches to the Pallas kernel on
+        # TPU, the jnp oracle elsewhere)
+        from repro.kernels import ops as kernel_ops
+        spec = flat_plane.FlatSpec.build(params, leading=1)
+        bufs = spec.flatten(params)
+        vb, gb = spec.flatten(velocity), spec.flatten(grads)
+        peer, peer_act = exchange_flat(bufs, active_scalar, round_idx)
+        gate, coef = impl.pair_gate_coef(active_scalar, peer_act)
+        gc = (gate * coef).astype(jnp.float32)
+        out_t, out_v = kernel_ops.fused_bufs_elastic_nag(bufs, peer, vb, gb,
+                                                         gc, eta, mu)
+        return spec.unflatten(out_t), spec.unflatten(out_v, like=velocity)
 
     active_spec = P(tuple(a for a in GOSSIP_AXES if a in gossip_axes))
 
-    @jax.jit
-    def gossip_step(params_stack, active, round_idx):
-        fn = compat.shard_map(
-            lambda p, a: local_update(p, a[0], round_idx),
-            mesh,
-            in_specs=(param_specs, active_spec),
-            out_specs=param_specs,
-            manual_axes=manual,
-        )
-        return fn(params_stack, active)
+    if mode == "fused":
+        @jax.jit
+        def gossip_step(params_stack, velocity, grads, active, round_idx, eta, mu):
+            fn = compat.shard_map(
+                lambda p, v, g, a, e, m: local_fused(p, v, g, a[0], round_idx, e, m),
+                mesh,
+                in_specs=(param_specs, param_specs, param_specs, active_spec, P(), P()),
+                out_specs=(param_specs, param_specs),
+                manual_axes=manual,
+            )
+            return fn(params_stack, velocity, grads, active, eta, mu)
+    else:
+        out_specs = param_specs if mode == "apply" else (param_specs, active_spec)
+
+        @jax.jit
+        def gossip_step(params_stack, active, round_idx):
+            fn = compat.shard_map(
+                lambda p, a: local_update(p, a[0], round_idx),
+                mesh,
+                in_specs=(param_specs, active_spec),
+                out_specs=out_specs,
+                manual_axes=manual,
+            )
+            return fn(params_stack, active)
 
     gossip_step.num_rounds = n_rounds
     gossip_step.schedule = schedule

@@ -16,11 +16,15 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import registry
+from repro.common import flat as flat_plane
 from repro.common.config import OptimizerConfig, ProtocolConfig
 from repro.common.pytree import tree_mean_leading, tree_take_leading
 from repro.core import protocols
 from repro.core.protocols import ProtocolState
-from repro.optim.optimizers import OptState, make_optimizer, param_update, velocity_update
+from repro.kernels import ops
+from repro.optim.optimizers import OptState, _clip, make_optimizer, param_update, velocity_update
+from repro.optim.schedule import lr_at
 
 PyTree = Any
 
@@ -40,15 +44,26 @@ class SimTrainer:
     """
 
     def __init__(self, loss_fn: Callable, num_workers: int,
-                 protocol: ProtocolConfig, optimizer: OptimizerConfig):
+                 protocol: ProtocolConfig, optimizer: OptimizerConfig,
+                 fused_update: bool = True):
         self.loss_fn = loss_fn
         self.num_workers = num_workers
         self.protocol = protocol
         self.optimizer_cfg = optimizer
         self.optimizer = make_optimizer(optimizer)
-        self._step_fn = jax.jit(self._step)
+        # fused flat-plane path (one pass for Alg. 5 lines 3/7/9): pairwise
+        # protocols + NAG only — allreduce/EASGD/none keep the per-leaf path
+        # (registry capability flags, not method strings).
+        self.fused_update = (fused_update and optimizer.name == "nag"
+                             and registry.resolve(protocol).pairwise)
+        self._flat_spec = None   # FlatSpec, cached per trainer at init()
+        # donate the stacked state so params/velocity update in place instead
+        # of doubling HBM residency every step
+        self._step_fn = jax.jit(self._step, donate_argnums=(0,))
 
     def init(self, params_stack: PyTree, seed: int = 0) -> SimState:
+        if self.fused_update:
+            self._flat_spec = flat_plane.FlatSpec.build(params_stack, leading=1)
         return SimState(
             params=params_stack,
             opt=self.optimizer.init(params_stack),
@@ -73,17 +88,42 @@ class SimTrainer:
         active = protocols.comm_gate(cfg, gate_key, state.step, self.num_workers)
         theta_comm, proto_new = protocols.comm_update(cfg, sel_key, active, state.params,
                                                       state.proto, step=state.step)
-        # elastic/gossip displacement relative to theta_t:
-        comm_delta = jax.tree.map(lambda a, b: a - b, theta_comm, state.params)
 
-        # optimizer update (lines 3 & 9)
-        if self.optimizer_cfg.name == "nag":
-            v_new, opt_new = velocity_update(self.optimizer_cfg, state.opt, grads)
-            theta_grad = param_update(self.optimizer_cfg, state.opt.step, state.params, grads, v_new)
+        if self.fused_update:
+            # fused flat-plane path: lines 3, 7 and 9 in ONE pass per dtype
+            # bucket. Setting peer := theta_comm and coef := 1 makes the
+            # kernel's elastic term exactly the comm displacement
+            # theta_comm - theta, for ANY pairwise mixing (incl. fan-in > 1).
+            ocfg = self.optimizer_cfg
+            grads_c = _clip(ocfg, grads)
+            eta = lr_at(ocfg, state.opt.step)
+            spec = self._flat_spec
+            if spec is None:
+                spec = self._flat_spec = flat_plane.FlatSpec.build(state.params, leading=1)
+            params_new, v_new = ops.fused_tree_elastic_nag(
+                state.params, theta_comm, state.opt.mu, grads_c,
+                jnp.ones((self.num_workers,), jnp.float32),
+                eta=eta, mu=ocfg.momentum, spec=spec)
+            opt_new = OptState(state.opt.step + 1, v_new, {})
         else:
-            theta_grad, opt_new = self.optimizer.update(grads, state.opt, state.params)
+            # per-leaf reference path (the fused path's parity target)
+            # elastic/gossip displacement relative to theta_t:
+            comm_delta = jax.tree.map(lambda a, b: a - b, theta_comm, state.params)
 
-        params_new = jax.tree.map(lambda tg, d: tg + d.astype(tg.dtype), theta_grad, comm_delta)
+            # optimizer update (lines 3 & 9)
+            if self.optimizer_cfg.name == "nag":
+                v_new, opt_new = velocity_update(self.optimizer_cfg, state.opt, grads)
+                # clip the -eta*g term too: velocity_update clips internally,
+                # and make_optimizer("nag") uses the clipped grads for BOTH
+                # terms — so must line 9 here (and the fused path does)
+                theta_grad = param_update(self.optimizer_cfg, state.opt.step,
+                                          state.params,
+                                          _clip(self.optimizer_cfg, grads), v_new)
+            else:
+                theta_grad, opt_new = self.optimizer.update(grads, state.opt, state.params)
+
+            params_new = jax.tree.map(lambda tg, d: tg + d.astype(tg.dtype),
+                                      theta_grad, comm_delta)
 
         metrics = {
             "loss_mean": jnp.mean(losses),

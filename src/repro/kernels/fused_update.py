@@ -5,12 +5,22 @@ XLA emits separate sweeps for the velocity update, the elastic move, and the
 parameter update — >=5 HBM reads + 2 writes per element. This kernel does one
 pass: read theta/peer/v/g once, write theta'/v' once (6 streams total), at
 arithmetic intensity ~0.5 flop/byte — pure bandwidth, so fusion is the whole
-game (DESIGN.md §6).
+game (byte accounting: benchmarks/fused_step.py).
 
 Tiling: params are flattened and padded to 1-D tiles of ``block`` elements
 (default 65536 = 256 KiB f32 per stream; 6 streams -> 1.5 MiB VMEM working
 set, lane-aligned multiples of 128). The dynamic participation gate is folded
 into coef on the host, so the kernel body is branch-free.
+
+Two entry points:
+
+- :func:`fused_elastic_nag_update` — single array, static eta/mu (the
+  original per-leaf kernel, kept for the oracle tests);
+- :func:`fused_flat_elastic_nag_update` / :func:`fused_flat_nag_update` —
+  ``[W, N]`` flat replica buffers from :mod:`repro.common.flat`, with
+  per-replica coef and *traced* eta/mu packed into a small scalar operand, so
+  one compiled program serves every step of an lr schedule. These are what
+  the engines call (through :mod:`repro.kernels.ops`).
 """
 from __future__ import annotations
 
@@ -68,3 +78,97 @@ def fused_elastic_nag_update(theta, peer, v, g, coef_gate, *, eta: float, mu: fl
     )(tf, pf, vf, gf, coef)
     return (t_new.reshape(-1)[:n].reshape(shape),
             v_new.reshape(-1)[:n].reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# Flat-plane kernels: [W, N] replica buffers, runtime scalars
+# ---------------------------------------------------------------------------
+
+def _flat_kernel(theta_ref, peer_ref, v_ref, g_ref, sc_ref,
+                 theta_out_ref, v_out_ref):
+    t = theta_ref[...].astype(jnp.float32)
+    p = peer_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    coef, eta, mu = sc_ref[0, 0], sc_ref[0, 1], sc_ref[0, 2]
+    v_new = mu * v - eta * g
+    t_new = t - coef * (t - p) - eta * g + mu * v_new
+    theta_out_ref[...] = t_new.astype(theta_out_ref.dtype)
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+
+
+def _flat_nag_kernel(theta_ref, v_ref, g_ref, sc_ref, theta_out_ref, v_out_ref):
+    t = theta_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    eta, mu = sc_ref[0, 0], sc_ref[0, 1]
+    v_new = mu * v - eta * g
+    theta_out_ref[...] = (t - eta * g + mu * v_new).astype(theta_out_ref.dtype)
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+
+
+def _pad_blocks(x, n: int, block: int):
+    nblocks = max(1, (n + block - 1) // block)
+    pad = nblocks * block - n
+    return (jnp.pad(x, ((0, 0), (0, pad))) if pad else x), nblocks
+
+
+def _scalar_rows(W: int, *cols) -> jnp.ndarray:
+    """[W, len(cols)] f32: each col a python/traced scalar or a [W] vector."""
+    rows = [jnp.broadcast_to(jnp.asarray(c, jnp.float32).reshape(-1), (W,))
+            for c in cols]
+    return jnp.stack(rows, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_flat_elastic_nag_update(theta, peer, v, g, coef, eta, mu, *,
+                                  block: int = BLOCK, interpret: bool = False):
+    """Whole-plane fused update (paper Alg. 5 lines 3/7/9, simultaneous).
+
+    theta/peer/v/g: [W, N] flat replica buffers (repro.common.flat layout);
+    coef: scalar or [W] per-replica moving rate * participation gate;
+    eta/mu: scalars (traced values OK — they ride in a VMEM scalar row, so lr
+    schedules don't retrigger compilation). Returns (theta', v') [W, N].
+    """
+    W, n = theta.shape
+    (tf, nblocks), (pf, _) = _pad_blocks(theta, n, block), _pad_blocks(peer, n, block)
+    (vf, _), (gf, _) = _pad_blocks(v, n, block), _pad_blocks(g, n, block)
+    sc = _scalar_rows(W, coef, eta, mu)
+
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    sc_spec = pl.BlockSpec((1, 3), lambda i, j: (i, 0))
+    t_new, v_new = pl.pallas_call(
+        _flat_kernel,
+        grid=(W, nblocks),
+        in_specs=[spec, spec, spec, spec, sc_spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((W, nblocks * block), theta.dtype),
+                   jax.ShapeDtypeStruct((W, nblocks * block), v.dtype)],
+        interpret=interpret,
+    )(tf, pf, vf, gf, sc)
+    return t_new[:, :n], v_new[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_flat_nag_update(theta, v, g, eta, mu, *,
+                          block: int = BLOCK, interpret: bool = False):
+    """Pure-NAG whole-plane update (no peer stream): the non-communicating
+    step of pairwise protocols. theta/v/g: [W, N]; eta/mu scalars (traced OK).
+    Returns (theta', v')."""
+    W, n = theta.shape
+    (tf, nblocks), (vf, _) = _pad_blocks(theta, n, block), _pad_blocks(v, n, block)
+    gf, _ = _pad_blocks(g, n, block)
+    sc = _scalar_rows(W, eta, mu)
+
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    sc_spec = pl.BlockSpec((1, 2), lambda i, j: (i, 0))
+    t_new, v_new = pl.pallas_call(
+        _flat_nag_kernel,
+        grid=(W, nblocks),
+        in_specs=[spec, spec, spec, sc_spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((W, nblocks * block), theta.dtype),
+                   jax.ShapeDtypeStruct((W, nblocks * block), v.dtype)],
+        interpret=interpret,
+    )(tf, vf, gf, sc)
+    return t_new[:, :n], v_new[:, :n]

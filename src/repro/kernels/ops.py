@@ -8,14 +8,17 @@ need the math (training loops on CPU) should use the ref path via
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.common.flat import FlatSpec
 from repro.kernels import fused_update as _fu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref
+
+PyTree = Any
 
 
 def on_tpu() -> bool:
@@ -34,6 +37,92 @@ def fused_elastic_nag_update(theta, peer, v, g, coef_gate, *, eta: float, mu: fl
     return _fu.fused_elastic_nag_update(
         theta, peer, v, g, coef_gate, eta=eta, mu=mu,
         interpret=(not on_tpu()) if interpret is None else interpret)
+
+
+# ---------------------------------------------------------------------------
+# Flat-plane entry points (repro.common.flat buffers / whole pytrees)
+# ---------------------------------------------------------------------------
+
+def fused_flat_elastic_nag_update(theta, peer, v, g, coef, eta, mu, *,
+                                  use_kernel: Optional[bool] = None,
+                                  interpret: Optional[bool] = None):
+    """[W, N] flat-buffer fused update; per-replica coef, traced eta/mu."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if not use_kernel:
+        return ref.fused_flat_elastic_nag_update(theta, peer, v, g, coef, eta, mu)
+    return _fu.fused_flat_elastic_nag_update(
+        theta, peer, v, g, coef, eta, mu,
+        interpret=(not on_tpu()) if interpret is None else interpret)
+
+
+def fused_flat_nag_update(theta, v, g, eta, mu, *,
+                          use_kernel: Optional[bool] = None,
+                          interpret: Optional[bool] = None):
+    """[W, N] flat-buffer pure-NAG update (no peer stream)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if not use_kernel:
+        return ref.fused_flat_nag_update(theta, v, g, eta, mu)
+    return _fu.fused_flat_nag_update(
+        theta, v, g, eta, mu,
+        interpret=(not on_tpu()) if interpret is None else interpret)
+
+
+def fused_bufs_elastic_nag(theta_bufs, peer_bufs, v_bufs, g_bufs, coef, eta, mu,
+                           *, use_kernel: Optional[bool] = None,
+                           interpret: Optional[bool] = None):
+    """Per-dtype-bucket dispatch of the fused update over flat-buffer dicts
+    (the shared core of :func:`fused_tree_elastic_nag` and the dist engine's
+    shard-mapped ``gossip_dist`` fused mode). Returns (theta'_bufs, v'_bufs)."""
+    out_t, out_v = {}, {}
+    for k in theta_bufs:
+        out_t[k], out_v[k] = fused_flat_elastic_nag_update(
+            theta_bufs[k], peer_bufs[k], v_bufs[k], g_bufs[k], coef, eta, mu,
+            use_kernel=use_kernel, interpret=interpret)
+    return out_t, out_v
+
+
+def fused_tree_elastic_nag(theta: PyTree, peer: PyTree, v: PyTree, g: PyTree,
+                           coef, *, eta, mu, spec: Optional[FlatSpec] = None,
+                           use_kernel: Optional[bool] = None,
+                           interpret: Optional[bool] = None):
+    """Tree-level fused update: the engines' hot loop in ONE pass per dtype
+    bucket over the flat plane (Alg. 5 lines 3/7/9, simultaneous).
+
+    All four trees share ``theta``'s structure, stacked ``[W, ...]``; ``coef``
+    is the per-replica moving rate * gate (scalar or [W]); ``spec`` is the
+    cached :class:`FlatSpec` (built from ``theta`` when omitted). Returns
+    (theta', v') as trees with theta's / v's dtypes.
+
+    For UNSHARDED stacked trees only (the sim engine / tests): a pallas_call
+    has no GSPMD sharding rule, so on sharded trees XLA would all-gather the
+    plane — the dist engine instead reaches the flat kernels through the
+    shard-mapped ``gossip_dist.make_gossip_step(mode="fused")`` /
+    ``DistTrainer.fused_nag`` programs, which hand the kernel local shards.
+    """
+    if spec is None:
+        spec = FlatSpec.build(theta, leading=1)
+    out_t, out_v = fused_bufs_elastic_nag(
+        spec.flatten(theta), spec.flatten(peer), spec.flatten(v), spec.flatten(g),
+        coef, eta, mu, use_kernel=use_kernel, interpret=interpret)
+    return spec.unflatten(out_t, like=theta), spec.unflatten(out_v, like=v)
+
+
+def fused_tree_nag(theta: PyTree, v: PyTree, g: PyTree, *, eta, mu,
+                   spec: Optional[FlatSpec] = None,
+                   use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None):
+    """Tree-level pure-NAG flat update (the non-firing step of pairwise
+    protocols): velocity + parameter update in one pass, 5 streams."""
+    if spec is None:
+        spec = FlatSpec.build(theta, leading=1)
+    tb, vb, gb = spec.flatten(theta), spec.flatten(v), spec.flatten(g)
+    out_t, out_v = {}, {}
+    for k in tb:
+        out_t[k], out_v[k] = fused_flat_nag_update(
+            tb[k], vb[k], gb[k], eta, mu, use_kernel=use_kernel, interpret=interpret)
+    return spec.unflatten(out_t, like=theta), spec.unflatten(out_v, like=v)
 
 
 def flash_attention(q, k, v, kv_len=None, *, causal: bool = True, window: int = 0,

@@ -21,6 +21,33 @@ def fused_elastic_nag_update(theta, peer, v, g, *, coef_gate: float, eta: float,
     return theta_new.astype(theta.dtype), v_new.astype(v.dtype)
 
 
+def _per_replica(c, W: int) -> jnp.ndarray:
+    """Scalar or [W] -> [W, 1] f32 column (broadcasts over the flat axis)."""
+    return jnp.broadcast_to(jnp.asarray(c, jnp.float32).reshape(-1), (W,))[:, None]
+
+
+def fused_flat_elastic_nag_update(theta, peer, v, g, coef, eta, mu):
+    """Flat-plane oracle: same math as :func:`fused_elastic_nag_update` on
+    [W, N] replica buffers with per-replica ``coef`` (scalar or [W]) and
+    traced ``eta``/``mu``. Returns (theta', v')."""
+    W = theta.shape[0]
+    c = _per_replica(coef, W)
+    tf, pf = theta.astype(jnp.float32), peer.astype(jnp.float32)
+    vf, gf = v.astype(jnp.float32), g.astype(jnp.float32)
+    v_new = mu * vf - eta * gf
+    theta_new = tf - c * (tf - pf) - eta * gf + mu * v_new
+    return theta_new.astype(theta.dtype), v_new.astype(v.dtype)
+
+
+def fused_flat_nag_update(theta, v, g, eta, mu):
+    """Flat-plane pure-NAG oracle (Alg. 5 lines 3 & 9, no communication)."""
+    tf = theta.astype(jnp.float32)
+    vf, gf = v.astype(jnp.float32), g.astype(jnp.float32)
+    v_new = mu * vf - eta * gf
+    theta_new = tf - eta * gf + mu * v_new
+    return theta_new.astype(theta.dtype), v_new.astype(v.dtype)
+
+
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
               logit_softcap: float = 0.0, q_offset: int = 0, kv_len=None):
     """Naive full-softmax attention oracle.

@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.api import registry
 from repro.common.config import MeshConfig, ModelConfig, ProtocolConfig, TrainConfig
 from repro.core import gossip_dist
+from repro.kernels import ops
 from repro.launch import sharding as shr
 from repro.optim.schedule import lr_at
 from repro.train import losses
@@ -73,6 +74,12 @@ class DistTrainer:
             center=self.center_specs if self._impl.uses_center else None,
             step=P())
         self._gossip_exchange = None
+        self._fused_gossip = None
+        self._fused_nag = None
+        # fused flat-plane update (TrainConfig.fused_update, default on):
+        # pairwise protocols only — allreduce/EASGD keep the per-leaf path
+        # (registry capability flags, not method strings).
+        self.fused_update = bool(train_cfg.fused_update) and self._impl.pairwise
 
     # ------------------------------------------------------------------ init
     def init_state(self, key) -> TrainState:
@@ -151,9 +158,16 @@ class DistTrainer:
             # center exchange (Alg. 2 lines 5-7), gated by the host scheduler
             comm_delta, center_new = self._impl.center_step(
                 state.params, state.center, active)
-        p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
-        if comm_delta is not None:
-            p_new = jax.tree.map(jnp.add, p_new, comm_delta)
+        if self.fused_update and comm_delta is None:
+            # flat-plane fused NAG: velocity + parameter update in ONE pass
+            # (5 streams) instead of two per-leaf sweeps
+            p_new, v_new = self.fused_nag(
+                state.params, state.velocity, grads,
+                lr_at(self.opt, state.step), jnp.float32(self.opt.momentum))
+        else:
+            p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
+            if comm_delta is not None:
+                p_new = jax.tree.map(jnp.add, p_new, comm_delta)
         metrics = {"loss": jnp.mean(loss)}
         return TrainState(p_new, v_new, center_new, state.step + 1), metrics
 
@@ -161,20 +175,59 @@ class DistTrainer:
         """Simultaneous composition: grads and the elastic move both read the
         step-t params (paper §2.3)."""
         loss, grads = self._grads_and_loss(state.params, batch)
-        exchanged = self.gossip_exchange(state.params, active, round_idx)
-        comm_delta = jax.tree.map(lambda a, b: a - b, exchanged, state.params)
-        p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
-        p_new = jax.tree.map(lambda p, d: p + d.astype(p.dtype), p_new, comm_delta)
+        if self.fused_update:
+            # flat-plane path: ONE shard-mapped program does the single
+            # ppermute (peer replica + gate in one buffer) AND the fused
+            # NAG + elastic displacement (Alg. 5 lines 3/7/9, simultaneous —
+            # both read the step-t params), with the per-replica gate*coef
+            # folded into the kernel's coefficient. Keeping the kernel inside
+            # the shard_map is load-bearing: pallas_call has no GSPMD
+            # sharding rule, so outside it XLA would all-gather the stacked
+            # plane onto every chip.
+            p_new, v_new = self.fused_gossip(
+                state.params, state.velocity, grads, active, round_idx,
+                lr_at(self.opt, state.step), jnp.float32(self.opt.momentum))
+        else:
+            exchanged = self.gossip_exchange(state.params, active, round_idx)
+            comm_delta = jax.tree.map(lambda a, b: a - b, exchanged, state.params)
+            p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
+            p_new = jax.tree.map(lambda p, d: p + d.astype(p.dtype), p_new, comm_delta)
         metrics = {"loss": jnp.mean(loss)}
         return TrainState(p_new, v_new, state.center, state.step + 1), metrics
+
+    def _make_gossip(self, mode: str):
+        return gossip_dist.make_gossip_step(
+            self.mesh, self.mesh_cfg, self.protocol, self.param_specs,
+            schedule_kind="hypercube" if self.protocol.topology == "matching" else "random",
+            mode=mode)
 
     @property
     def gossip_exchange(self):
         if self._gossip_exchange is None:
-            self._gossip_exchange = gossip_dist.make_gossip_step(
-                self.mesh, self.mesh_cfg, self.protocol, self.param_specs,
-                schedule_kind="hypercube" if self.protocol.topology == "matching" else "random")
+            self._gossip_exchange = self._make_gossip("apply")
         return self._gossip_exchange
+
+    @property
+    def fused_gossip(self):
+        if self._fused_gossip is None:
+            self._fused_gossip = self._make_gossip("fused")
+        return self._fused_gossip
+
+    @property
+    def fused_nag(self):
+        """Shard-mapped flat-plane NAG (full-manual: the Pallas kernel must
+        only see local shards) — fused_nag(params, velocity, grads, eta, mu)
+        -> (params', velocity')."""
+        if self._fused_nag is None:
+            from repro.common import compat
+            pspecs = self.param_specs
+            self._fused_nag = compat.shard_map(
+                lambda p, v, g, eta, mu: ops.fused_tree_nag(p, v, g, eta=eta, mu=mu),
+                self.mesh,
+                in_specs=(pspecs, pspecs, pspecs, P(), P()),
+                out_specs=(pspecs, pspecs),
+                manual_axes=set(self.mesh.axis_names))
+        return self._fused_nag
 
     # jit entry points ------------------------------------------------------
     def _shard(self, tree):

@@ -1,0 +1,227 @@
+"""Engine-level parity: the fused flat-plane path must match the per-leaf
+reference path on BOTH engines for every pairwise protocol, and the flat
+gossip exchange must issue exactly ONE ppermute per round."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import OptimizerConfig, ProtocolConfig
+from repro.core.gossip_sim import SimTrainer
+from repro.models import simple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PAIRWISE = [
+    ("elastic_gossip", dict(comm_probability=0.5, moving_rate=0.5)),
+    ("gossiping_pull", dict(comm_probability=0.5)),
+    ("gossiping_push", dict(comm_period=2)),
+]
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# simulation engine
+# ---------------------------------------------------------------------------
+
+def _sim_run(method, kw, fused, W=4, steps=8, grad_clip=0.0):
+    params, _ = simple.init_mlp(jax.random.PRNGKey(0), in_dim=10, hidden=16,
+                                depth=2, num_classes=3)
+    # fresh stack per run: the jitted step donates its input state
+    stack = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (W,) + a.shape) + 0.0,
+                         params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (W, 8, 10))
+    y = jax.random.randint(jax.random.PRNGKey(2), (W, 8), 0, 3)
+
+    def loss(p, xi, yi):
+        return simple.xent_loss(simple.mlp_logits(p, xi), yi)
+
+    t = SimTrainer(loss, W, ProtocolConfig(method=method, topology="uniform", **kw),
+                   OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9,
+                                   grad_clip=grad_clip),
+                   fused_update=fused)
+    st = t.init(stack, 7)
+    for _ in range(steps):
+        st, m = t.step(st, x, y)
+    return t, st
+
+
+@pytest.mark.parametrize("method,kw", PAIRWISE)
+def test_sim_fused_matches_per_leaf_path(method, kw):
+    tf, sf = _sim_run(method, kw, fused=True)
+    tu, su = _sim_run(method, kw, fused=False)
+    assert tf.fused_update and not tu.fused_update
+    for a, b in zip(jax.tree.leaves(sf.params), jax.tree.leaves(su.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(sf.opt.mu), jax.tree.leaves(su.opt.mu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7)
+    # the live byte accounting must be identical too
+    np.testing.assert_allclose(np.asarray(sf.proto.comm_bytes),
+                               np.asarray(su.proto.comm_bytes), rtol=1e-6)
+
+
+def test_sim_fused_parity_with_grad_clip():
+    """Regression: with grad_clip set, BOTH NAG terms must see the clipped
+    grads on both paths (the split-phase path once clipped only line 3)."""
+    tf_, sf = _sim_run("elastic_gossip", dict(comm_probability=0.5, moving_rate=0.5),
+                       fused=True, steps=5, grad_clip=0.1)
+    _, su = _sim_run("elastic_gossip", dict(comm_probability=0.5, moving_rate=0.5),
+                     fused=False, steps=5, grad_clip=0.1)
+    for a, b in zip(jax.tree.leaves(sf.params), jax.tree.leaves(su.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_sim_non_pairwise_protocols_never_fuse():
+    for method, kw in [("allreduce", {}), ("none", {}),
+                       ("easgd", dict(comm_period=2, moving_rate=0.1))]:
+        t, st = _sim_run(method, kw, fused=True, steps=2)
+        assert not t.fused_update, method
+        assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(st.params))
+
+
+# ---------------------------------------------------------------------------
+# distributed engine (multi-device subprocess, as in test_dist_parity.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dist_fused_matches_per_leaf_path_all_pairwise():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import GossipTrainer
+        from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
+        from repro.configs import get_reduced
+        from repro.launch.mesh import make_worker_mesh
+
+        mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+        mesh = make_worker_mesh(mcfg)
+        W = mcfg.num_workers
+        model_cfg = get_reduced("tinyllama_1_1b")  # batch axes/shapes only
+        V, D = 64, 16
+
+        def init_fn(key):
+            k1, k2 = jax.random.split(key)
+            return {"emb": 0.1 * jax.random.normal(k1, (V, D)),
+                    "out": 0.1 * jax.random.normal(k2, (D, V))}
+
+        axes = {"emb": (None, None), "out": (None, None)}
+
+        def loss_fn(params, batch):
+            h = params["emb"][batch["tokens"]].mean(axis=1)
+            logits = h @ params["out"]
+            lab = batch["labels"][:, 0]
+            return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(lab.shape[0]), lab])
+
+        S, pw = 16, 1
+        rng = np.random.RandomState(0)
+        batches = [{"tokens": jnp.asarray(rng.randint(0, V, (W, pw, S))),
+                    "labels": jnp.asarray(rng.randint(0, V, (W, pw, S)))}
+                   for _ in range(6)]
+
+        for method, kw in [("elastic_gossip", dict(comm_probability=0.5, moving_rate=0.5)),
+                           ("gossiping_pull", dict(comm_period=2)),
+                           ("gossiping_push", dict(comm_probability=0.7))]:
+            proto = ProtocolConfig(method=method, **kw)
+            finals = []
+            for fused in (True, False):
+                tr = GossipTrainer(engine="dist", protocol=proto,
+                                   optimizer=OptimizerConfig(name="nag",
+                                                             learning_rate=0.05,
+                                                             momentum=0.9),
+                                   mesh=mesh, mesh_cfg=mcfg, model_cfg=model_cfg,
+                                   init_fn=init_fn, params_axes=axes,
+                                   global_batch=W * pw, seq_len=S,
+                                   loss_fn=loss_fn, fused_update=fused, seed=3)
+                state = tr.init_state(0)
+                fired = 0
+                for b in batches:
+                    state, m = tr.step(state, b)
+                    fired += bool(m["fired"])
+                finals.append((state, fired, float(m["comm_bytes"])))
+            (a, fa, ca), (b, fb, cb) = finals
+            assert fa == fb and fa > 0, (method, fa, fb)
+            assert ca == cb, (method, ca, cb)
+            for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=1e-5, atol=1e-6, err_msg=method)
+            for x, y in zip(jax.tree.leaves(a.velocity), jax.tree.leaves(b.velocity)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=1e-5, atol=1e-7, err_msg=method)
+            print(method, "FUSED_PARITY_OK fired", fa)
+        print("ALL_FUSED_PARITY_OK")
+    """, timeout=560)
+    assert "ALL_FUSED_PARITY_OK" in out
+
+
+@pytest.mark.slow
+def test_gossip_round_is_one_ppermute():
+    """The flat exchange folds every leaf AND the participation gate into one
+    buffer: the compiled program must contain exactly num_rounds ppermutes
+    (one per lax.switch branch), not (num_leaves + 1) per round."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.common.config import MeshConfig, ProtocolConfig
+        from repro.core import gossip_dist
+        from repro.launch.mesh import make_worker_mesh
+
+        mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+        mesh = make_worker_mesh(mcfg)
+        W = mcfg.num_workers
+        cfg = ProtocolConfig(method="elastic_gossip", comm_probability=0.5,
+                             moving_rate=0.37)
+        # 3 leaves: unfused per-leaf exchange would cost 4 ppermutes per round
+        params = {"w": jax.random.normal(jax.random.PRNGKey(1), (W, 16, 8)),
+                  "b": jax.random.normal(jax.random.PRNGKey(2), (W, 8)),
+                  "c": jax.random.normal(jax.random.PRNGKey(3), (W, 5))}
+        pspecs = {k: P(("pod", "worker")) for k in params}
+        params = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                              params, pspecs)
+        active = jnp.ones((W,), jnp.float32)
+
+        def count_prim(jaxpr, name):
+            n = sum(1 for e in jaxpr.eqns if e.primitive.name == name)
+            for e in jaxpr.eqns:
+                for v in e.params.values():
+                    for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                        if hasattr(sub, "jaxpr"):
+                            n += count_prim(sub.jaxpr, name)
+                        elif hasattr(sub, "eqns"):
+                            n += count_prim(sub, name)
+            return n
+
+        for mode in ("apply", "peer"):
+            step = gossip_dist.make_gossip_step(mesh, mcfg, cfg, pspecs, mode=mode)
+            jaxpr = jax.make_jaxpr(lambda p, a, r: step(p, a, r))(
+                params, active, jnp.int32(0))
+            n = count_prim(jaxpr.jaxpr, "ppermute")
+            assert n == step.num_rounds, (mode, n, step.num_rounds)
+            print(mode, "ppermutes:", n, "rounds:", step.num_rounds)
+
+        # the trainers' hot path: exchange + fused NAG/elastic update in one
+        # shard-mapped program — still exactly one ppermute per round
+        step = gossip_dist.make_gossip_step(mesh, mcfg, cfg, pspecs, mode="fused")
+        vel = jax.tree.map(jnp.zeros_like, params)
+        grads = jax.tree.map(jnp.ones_like, params)
+        jaxpr = jax.make_jaxpr(lambda p, v, g, a, r, e, m: step(p, v, g, a, r, e, m))(
+            params, vel, grads, active, jnp.int32(0),
+            jnp.float32(0.01), jnp.float32(0.9))
+        n = count_prim(jaxpr.jaxpr, "ppermute")
+        assert n == step.num_rounds, ("fused", n, step.num_rounds)
+        print("fused ppermutes:", n, "rounds:", step.num_rounds)
+        print("ONE_PPERMUTE_OK")
+    """)
+    assert "ONE_PPERMUTE_OK" in out
