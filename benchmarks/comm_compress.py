@@ -1,0 +1,191 @@
+"""Gossip-compression codecs (repro.comm): steps/sec + modeled and accounted
+wire bytes/step for each codec x {sim, dist}. Writes
+``BENCH_comm_compress.json`` at the repo root.
+
+Modeled: the analytic per-event wire bytes (``GossipTrainer.comm_cost`` —
+codec-compressed flat plane vs raw param bytes), times the expected events per
+step (p=1 here, so every step fires). Accounted: the LIVE ``comm_bytes``
+accumulator divided by steps — the two must agree, which is asserted; their
+codec/none ratio is the measured compression.
+
+Measured: wall-clock steps/sec through the GossipTrainer facade. On this CPU
+container the codecs dispatch to the jnp oracles (the Pallas kernels are
+exercised in interpret mode and parity-checked in tests/test_comm.py); codec
+overhead here is XLA:CPU encode/decode arithmetic, while the wire-byte column
+is the compression a real interconnect would see.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO, "BENCH_comm_compress.json")
+
+WORKERS = 4
+CODECS = ("none", "q8", "topk")
+
+
+def _measure_sim(codec: str, steps: int, hidden: int):
+    from repro.api import GossipTrainer
+    from repro.common.config import OptimizerConfig, ProtocolConfig
+    from repro.models import simple
+
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=1.0,
+                           moving_rate=0.5, topology="uniform", codec=codec)
+    params0, _ = simple.init_mlp(jax.random.PRNGKey(0), in_dim=784, hidden=hidden,
+                                 depth=3, num_classes=10)
+
+    def loss_fn(p, x, y):
+        return simple.xent_loss(simple.mlp_logits(p, x), y)
+
+    trainer = GossipTrainer(engine="sim", protocol=proto,
+                            optimizer=OptimizerConfig(name="nag", learning_rate=1e-3,
+                                                      momentum=0.99),
+                            loss_fn=loss_fn, num_workers=WORKERS)
+    state = trainer.init_state(0, params=params0)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(WORKERS, 32, 784).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, (WORKERS, 32)))
+    for _ in range(3):   # warmup / compile
+        state, m = trainer.step(state, (x, y))
+    jax.block_until_ready(state.params)
+    base = float(m["comm_bytes"])
+    t0 = time.time()
+    for _ in range(steps):
+        state, m = trainer.step(state, (x, y))
+    jax.block_until_ready(state.params)
+    dt = time.time() - t0
+    accounted = (float(m["comm_bytes"]) - base) / steps
+    return {"steps_per_sec": round(steps / dt, 3),
+            "modeled_wire_bytes_per_step": float(trainer.comm_cost().bytes_per_step),
+            "accounted_wire_bytes_per_step": accounted,
+            "final_loss": float(m["loss"])}
+
+
+def _measure_dist(steps: int):
+    """All codecs on the 8-worker shard_map engine in ONE subprocess (this
+    process must keep 1 visible device, see tests/conftest)."""
+    code = textwrap.dedent("""
+        import json, time
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import GossipTrainer
+        from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
+        from repro.configs import get_reduced
+        from repro.launch.mesh import make_worker_mesh
+
+        STEPS = %d
+        mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+        mesh = make_worker_mesh(mcfg)
+        W = mcfg.num_workers
+        model_cfg = get_reduced("tinyllama_1_1b")   # batch axes/shapes only
+        V, D = 256, 64
+
+        def init_fn(key):
+            k1, k2 = jax.random.split(key)
+            return {"emb": 0.1 * jax.random.normal(k1, (V, D)),
+                    "out": 0.1 * jax.random.normal(k2, (D, V))}
+
+        axes = {"emb": (None, None), "out": (None, None)}
+
+        def loss_fn(params, batch):
+            h = params["emb"][batch["tokens"]].mean(axis=1)
+            logits = h @ params["out"]
+            lab = batch["labels"][:, 0]
+            return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(lab.shape[0]), lab])
+
+        S, pw = 32, 2
+        rng = np.random.RandomState(0)
+        batch = {"tokens": jnp.asarray(rng.randint(0, V, (W, pw, S))),
+                 "labels": jnp.asarray(rng.randint(0, V, (W, pw, S)))}
+        out = {}
+        for codec in %r:
+            proto = ProtocolConfig(method="elastic_gossip", comm_probability=1.0,
+                                   moving_rate=0.5, codec=codec)
+            tr = GossipTrainer(engine="dist", protocol=proto,
+                               optimizer=OptimizerConfig(name="nag",
+                                                         learning_rate=1e-3,
+                                                         momentum=0.99),
+                               mesh=mesh, mesh_cfg=mcfg, model_cfg=model_cfg,
+                               init_fn=init_fn, params_axes=axes,
+                               global_batch=W * pw, seq_len=S, loss_fn=loss_fn)
+            state = tr.init_state(0)
+            for _ in range(2):   # warmup / compile
+                state, m = tr.step(state, batch)
+            jax.block_until_ready(state.params)
+            base = float(m["comm_bytes"])
+            t0 = time.time()
+            for _ in range(STEPS):
+                state, m = tr.step(state, batch)
+            jax.block_until_ready(state.params)
+            dt = time.time() - t0
+            out[codec] = {
+                "steps_per_sec": round(STEPS / dt, 3),
+                "modeled_wire_bytes_per_step": float(tr.comm_cost().bytes_per_step),
+                "accounted_wire_bytes_per_step": (float(m["comm_bytes"]) - base) / STEPS,
+                "final_loss": float(m["loss"])}
+        print("RESULT " + json.dumps(out))
+    """ % (steps, list(CODECS)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def main(quick: bool = True) -> None:
+    sim_steps = 20 if quick else 150
+    dist_steps = 6 if quick else 40
+    hidden = 128 if quick else 512
+
+    result = {"workers": WORKERS}
+    print("codec,engine,steps_per_sec,modeled_wire_bytes_per_step,"
+          "accounted_wire_bytes_per_step")
+
+    result["sim"] = {c: _measure_sim(c, sim_steps, hidden) for c in CODECS}
+    result["dist"] = _measure_dist(dist_steps)
+
+    for eng in ("sim", "dist"):
+        for c in CODECS:
+            r = result[eng][c]
+            # the live accumulator must agree with the analytic wire model
+            # (p=1: one event per step)
+            assert abs(r["accounted_wire_bytes_per_step"]
+                       - r["modeled_wire_bytes_per_step"]) <= (
+                1e-5 * r["modeled_wire_bytes_per_step"] + 1.0), (eng, c, r)
+            print(f"{c},{eng},{r['steps_per_sec']},"
+                  f"{r['modeled_wire_bytes_per_step']:.0f},"
+                  f"{r['accounted_wire_bytes_per_step']:.0f}")
+        raw = result[eng]["none"]["modeled_wire_bytes_per_step"]
+        result[eng]["compression_ratio"] = {
+            c: round(raw / result[eng][c]["modeled_wire_bytes_per_step"], 3)
+            for c in CODECS if c != "none"}
+        assert result[eng]["compression_ratio"]["q8"] > 3.0, result[eng]
+        assert result[eng]["compression_ratio"]["topk"] > 5.0, result[eng]
+
+    result["notes"] = (
+        "p=1 elastic gossip: every step fires, so accounted == modeled "
+        "bytes/step. Wire bytes count the PACKED flat plane (q8: int8 values "
+        "+ f32 scale per codec_block; topk: 8 bytes per kept element); the "
+        "'none' baseline counts raw (unpadded) parameter bytes. CPU-container "
+        "steps/sec include jnp-oracle encode/decode arithmetic; on TPU the "
+        "Pallas codec kernels run per-tile in VMEM and the uint8 wire "
+        "shrinks actual interconnect egress by the listed ratio.")
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main(quick="--full" not in sys.argv)

@@ -11,8 +11,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (alpha_schedule, comm_cost, fused_step, roofline_bench,
-                        table_4_1, table_4_2, table_4_3, table_a_1)
+from benchmarks import (alpha_schedule, comm_compress, comm_cost, fused_step,
+                        roofline_bench, table_4_1, table_4_2, table_4_3,
+                        table_a_1)
 
 TABLES = {
     "table_4_1": table_4_1.main,
@@ -21,6 +22,7 @@ TABLES = {
     "table_a_1": table_a_1.main,
     "alpha_schedule": alpha_schedule.main,
     "comm_cost": comm_cost.main,
+    "comm_compress": comm_compress.main,
     "roofline": roofline_bench.main,
     "fused_step": fused_step.main,
 }

@@ -10,8 +10,10 @@ everything the engines and the host scheduler need to drive it:
   (period tau or Bernoulli probability p);
 - ``pair_gate_coef`` / ``mix_matrix``  the pairwise realization used by the
   distributed collective-permute engine and the simulation oracle;
-- ``comm_cost``  analytic egress accounting (the paper's headline claim), also
-  accumulated live into ``ProtocolState.comm_bytes`` by ``comm_update``;
+- ``comm_cost``  analytic egress accounting (the paper's headline claim), fed
+  the TRUE wire bytes (codec-compressed when ``cfg.codec`` is set) and
+  tracked live by ``comm_update`` via the exact ``ProtocolState.comm_units``
+  accumulator (``comm_bytes`` is derived from it, never f32-accumulated);
 - capability flags (``communicates``, ``pairwise``, ``uses_center``,
   ``per_worker_gate``) that replace every ``if cfg.method == ...`` chain the
   engines and scheduler used to carry.
@@ -48,7 +50,16 @@ def _topology():
 class ProtocolState(NamedTuple):
     center: Optional[PyTree]      # EASGD center variable (else None)
     comm_rounds: jax.Array        # number of gossip rounds executed
-    comm_bytes: jax.Array         # cumulative expected egress bytes per worker
+    # comm_units: EXACT integer accumulator — total worker-participations
+    # (sum of the active mask per event; W per allreduce step). comm_bytes is
+    # DERIVED from it every update (per-event wire bytes * units / W), never
+    # accumulated in float32, so long runs cannot silently drop increments
+    # once the total passes 2^24 x granularity (the old f32 += bug); the
+    # float32 report stays within 1 ULP (~1e-7 relative) of the f64 truth.
+    # Past int32 max (~2^31 participations, e.g. 8 workers x 250M events) the
+    # counter SATURATES — bytes become a lower bound, never negative.
+    comm_units: jax.Array         # int32 cumulative participation count
+    comm_bytes: jax.Array         # f32 expected egress bytes/worker (derived)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +87,14 @@ def _bytes_dtype():
     return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
 
 
+def _saturating_units_add(units: jax.Array, inc: jax.Array) -> jax.Array:
+    """comm_units + inc, saturating at int32 max instead of wrapping: past
+    ~2^31 worker-participations the reported bytes become a LOWER bound
+    rather than flipping negative — the counter never moves backwards."""
+    new = units + inc
+    return jnp.where(new < units, units, new)
+
+
 class Protocol:
     """Base class: one distributed-training algorithm, fully self-describing.
 
@@ -96,10 +115,18 @@ class Protocol:
             assert (cfg.comm_probability > 0) != (cfg.comm_period > 0), (
                 f"protocol {cfg.method!r} is gated: set exactly one of "
                 "comm_probability / comm_period")
+        if cfg.codec != "none":
+            if not self.pairwise:
+                raise ValueError(
+                    f"codec {cfg.codec!r} compresses the pairwise gossip wire; "
+                    f"protocol {cfg.method!r} is not pairwise")
+            from repro.comm import get_codec
+            get_codec(cfg.codec)   # fail fast on unknown codec names
 
     # ---------------------------------------------------------------- state
     def init_state(self, params_stack: PyTree) -> ProtocolState:
         return ProtocolState(self.init_center(params_stack),
+                             jnp.zeros((), jnp.int32),
                              jnp.zeros((), jnp.int32),
                              jnp.zeros((), _bytes_dtype()))
 
@@ -144,12 +171,18 @@ class Protocol:
         return _topology().sample_uniform_peers(key, num_workers)
 
     def comm_update(self, key: jax.Array, active: jax.Array, theta_stack: PyTree,
-                    state: ProtocolState, step=None) -> tuple[PyTree, ProtocolState]:
+                    state: ProtocolState, step=None,
+                    transmit: Optional[PyTree] = None) -> tuple[PyTree, ProtocolState]:
         """Communication-related component on stacked params [W, ...].
 
         ``active`` is the participation mask from :meth:`comm_gate`; ``step``
-        (optional) enables the alpha schedule (beyond-paper). The default
-        honors the ``pairwise`` capability flag: pairwise protocols mix via
+        (optional) enables the alpha schedule (beyond-paper). ``transmit``
+        (optional) is the stacked tree peers actually RECEIVE — the codec's
+        decode(encode(theta)) reconstruction: the mixing keeps each worker's
+        own (diagonal) contribution exact and reads the off-diagonal
+        contributions from ``transmit``, exactly like the distributed engine
+        where only the wire payload is lossy. The default honors the
+        ``pairwise`` capability flag: pairwise protocols mix via
         :meth:`mix_matrix` over :meth:`sample_peers` (so a registered subclass
         only needs the matrix + gate/coef rule); everything else is the
         no-communication identity.
@@ -157,11 +190,14 @@ class Protocol:
         if not self.pairwise:
             return theta_stack, state
         peers = self.sample_peers(key, active.shape[0])
-        theta_new = _topology().apply_mix(self.mix_matrix(peers, active, step=step),
-                                          theta_stack)
+        mix = self.mix_matrix(peers, active, step=step)
+        if transmit is None:
+            theta_new = _topology().apply_mix(mix, theta_stack)
+        else:
+            theta_new = _topology().apply_mix_split(mix, theta_stack, transmit)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-        return theta_new, ProtocolState(state.center, rounds,
-                                        self._accrue_bytes(state, active, theta_stack))
+        units, bytes_ = self._accrue_bytes(state, active, theta_stack)
+        return theta_new, ProtocolState(state.center, rounds, units, bytes_)
 
     # ------------------------------------- pairwise (dist-engine) realization
     def pair_gate_coef(self, my_active, peer_active):
@@ -185,15 +221,27 @@ class Protocol:
         """Expected egress bytes per worker per step (analytic)."""
         raise NotImplementedError
 
+    def wire_stack_bytes(self, theta_stack: PyTree) -> float:
+        """Bytes ONE replica actually puts on the wire per event: raw param
+        bytes, or the codec's compressed wire bytes when ``cfg.codec`` is
+        set (static under trace — layout only)."""
+        if self.cfg.codec == "none":
+            return float(stacked_param_bytes(theta_stack))
+        from repro import comm
+        from repro.common.flat import FlatSpec
+        spec = FlatSpec.build(theta_stack, leading=1)
+        return float(comm.wire_param_bytes(comm.resolve_codec(self.cfg), spec))
+
     def _accrue_bytes(self, state: ProtocolState, active: jax.Array,
-                      theta_stack: PyTree) -> jax.Array:
-        """comm_bytes + this event's expected per-worker egress: one full
-        replica per participating worker, averaged over workers."""
-        pb = stacked_param_bytes(theta_stack)
+                      theta_stack: PyTree) -> tuple[jax.Array, jax.Array]:
+        """(comm_units', comm_bytes'): the exact integer participation count
+        plus the derived per-worker egress — one wire-compressed replica per
+        participating worker, averaged over workers."""
         W = active.shape[0]
-        per_event = self.comm_cost(pb, W).bytes_per_event
-        frac = jnp.mean(jnp.asarray(active, _bytes_dtype()))
-        return state.comm_bytes + per_event * frac
+        per_event = self.comm_cost(self.wire_stack_bytes(theta_stack), W).bytes_per_event
+        units = _saturating_units_add(state.comm_units,
+                                      jnp.sum(jnp.asarray(active).astype(jnp.int32)))
+        return units, (per_event / W) * units.astype(_bytes_dtype())
 
 
 # ---------------------------------------------------------------------------
@@ -219,13 +267,16 @@ class AllReduceSGD(Protocol):
             lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
             grads_stack)
 
-    def comm_update(self, key, active, theta_stack, state, step=None):
+    def comm_update(self, key, active, theta_stack, state, step=None, transmit=None):
         # parameters untouched, but the every-step ring all-reduce egress is
         # accounted so live runs expose the paper's communication-cost gap.
-        pb = stacked_param_bytes(theta_stack)
-        cost = self.comm_cost(pb, active.shape[0])
+        W = active.shape[0]
+        per_event = self.comm_cost(stacked_param_bytes(theta_stack), W).bytes_per_event
+        # every worker, every step
+        units = _saturating_units_add(state.comm_units, jnp.int32(W))
         return theta_stack, state._replace(
-            comm_bytes=state.comm_bytes + jnp.asarray(cost.bytes_per_step, _bytes_dtype()))
+            comm_units=units,
+            comm_bytes=(per_event / W) * units.astype(_bytes_dtype()))
 
     def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
         # ring all-reduce: 2 * (W-1)/W * P per step, every step
@@ -268,12 +319,12 @@ class EASGD(Protocol):
         center_new = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
         return delta, center_new
 
-    def comm_update(self, key, active, theta_stack, state, step=None):
+    def comm_update(self, key, active, theta_stack, state, step=None, transmit=None):
         delta, center_new = self.center_step(theta_stack, state.center, active, step=step)
         theta_new = jax.tree.map(lambda x, d: x + d, theta_stack, delta)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-        return theta_new, ProtocolState(center_new, rounds,
-                                        self._accrue_bytes(state, active, theta_stack))
+        units, bytes_ = self._accrue_bytes(state, active, theta_stack)
+        return theta_new, ProtocolState(center_new, rounds, units, bytes_)
 
     def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
         # send local, receive center (center egress excluded: worker-side view)

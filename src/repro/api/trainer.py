@@ -88,12 +88,19 @@ class GossipTrainer:
                  mesh=None, mesh_cfg: Optional[MeshConfig] = None,
                  model_cfg=None, params_axes: Optional[PyTree] = None,
                  global_batch: Optional[int] = None, seq_len: Optional[int] = None,
-                 grad_accum: int = 1, seed: int = 0, fused_update: bool = True):
+                 grad_accum: int = 1, seed: int = 0, fused_update: bool = True,
+                 codec: Optional[str] = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.engine = engine
+        # gossip-compression codec (repro.comm registry): an explicit
+        # ``codec=`` overrides the protocol config's codec for this trainer
+        if codec is not None:
+            protocol = dataclasses.replace(protocol, codec=codec)
         self.protocol = protocol
         self.impl = registry.resolve(protocol)
+        from repro import comm as _comm
+        self.codec = _comm.active_codec(protocol) if self.impl.pairwise else None
         self.optimizer = optimizer or OptimizerConfig()
         self.seed = seed
         # flat-plane fused update (repro.common.flat + kernels/fused_update):
@@ -163,8 +170,9 @@ class GossipTrainer:
     # ------------------------------------------------------------ accounting
     def comm_cost(self, param_bytes: Optional[int] = None) -> CommCost:
         """Analytic expected egress (bytes/worker/step); ``param_bytes``
-        defaults to the live parameter size when a state template exists."""
-        pb = param_bytes if param_bytes is not None else self._backend.param_bytes()
+        defaults to the live WIRE size per event — the codec-compressed flat
+        plane when a codec is active, else the raw parameter size."""
+        pb = param_bytes if param_bytes is not None else self._backend.wire_bytes()
         return self.impl.comm_cost(pb, self.num_workers)
 
     # ------------------------------------------------------------ scheduling
@@ -241,6 +249,7 @@ class _SimBackend(_MatchingScheduleMixin):
                               fused_update=facade.fused_update)
         self._sched_rounds = None
         self._pb = None
+        self._wire = None
 
     def _sched_mesh_cfg(self) -> MeshConfig:
         return self.mesh_cfg or MeshConfig(data=self.num_workers, model=1, pods=1,
@@ -254,6 +263,7 @@ class _SimBackend(_MatchingScheduleMixin):
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (self.num_workers,) + x.shape), params)
         self._pb = stacked_param_bytes(stacked)
+        self._wire = int(self.facade.impl.wire_stack_bytes(stacked))
         sim_seed = int(seed) if isinstance(seed, (int, np.integer)) else 0
         return self.sim.init(stacked, sim_seed)
 
@@ -271,14 +281,31 @@ class _SimBackend(_MatchingScheduleMixin):
             raise ValueError("param size unknown before init_state; pass param_bytes")
         return self._pb
 
+    def wire_bytes(self) -> int:
+        if self._wire is None:
+            raise ValueError("wire size unknown before init_state; pass param_bytes")
+        return self._wire
+
     def gossip_exchange(self, params_stack, active, round_idx):
         """Mixing-matrix oracle over the shared matching schedule — exactly
-        Alg. 3/4/6 restricted to the round's perfect matching."""
+        Alg. 3/4/6 restricted to the round's perfect matching. With a codec,
+        off-diagonal contributions read the decode(encode(theta))
+        reconstruction, seeded by (round, worker) exactly like the dist
+        engine's wire — the parity surface stays engine-exact."""
+        from repro import comm
+        from repro.common.flat import FlatSpec
         from repro.core import topology
         peers = jnp.asarray(self.matching_partners(round_idx))
         gate = jnp.asarray(active) > 0
-        return topology.apply_mix(self.facade.impl.mix_matrix(peers, gate),
-                                  params_stack)
+        mix = self.facade.impl.mix_matrix(peers, gate)
+        codec = self.facade.codec
+        if codec is None:
+            return topology.apply_mix(mix, params_stack)
+        spec = FlatSpec.build(params_stack, leading=1)
+        W = jax.tree.leaves(params_stack)[0].shape[0]
+        hat, _ = comm.roundtrip_bufs(codec, spec.flatten(params_stack),
+                                     comm.codec_seeds(round_idx, jnp.arange(W)))
+        return topology.apply_mix_split(mix, params_stack, spec.unflatten(hat))
 
     def schedule_state(self) -> dict:
         return {}
@@ -311,12 +338,18 @@ class _DistBackend(_MatchingScheduleMixin):
         self.sched = GossipSchedule(facade.protocol, self.num_workers, seed=seed + 1)
         self._ts = self._tg = None
         self._sched_rounds = None
+        # host-side (python float64) accumulator: increments stay exact far
+        # beyond f32's 2^24 granularity — the traced sim-engine counterpart is
+        # ProtocolState.comm_units (see repro.api.protocols)
         self.comm_bytes = 0.0
         # per-step host costs, hoisted out of the hot loop: param_bytes()
         # walked the whole param tree and comm_cost() re-derived the analytic
-        # egress EVERY step — both are static per trainer.
+        # egress EVERY step — both are static per trainer. The cost model uses
+        # the WIRE bytes: the codec-compressed flat plane when a codec rides
+        # the collective, else the raw parameter bytes.
         self._pb = stacked_param_bytes(self.trainer.param_shapes)
-        self._cost = facade.impl.comm_cost(self._pb, self.num_workers)
+        self._wire = int(facade.impl.wire_stack_bytes(self.trainer.param_shapes))
+        self._cost = facade.impl.comm_cost(self._wire, self.num_workers)
         # host mirror of state.step: polling the schedule with it (instead of
         # int(state.step)) keeps the hot loop free of per-step device syncs.
         # The facade drives ONE sequential training stream; the mirror is
@@ -345,6 +378,9 @@ class _DistBackend(_MatchingScheduleMixin):
 
     def param_bytes(self) -> int:
         return self._pb
+
+    def wire_bytes(self) -> int:
+        return self._wire
 
     def step(self, state, batch):
         impl = self.facade.impl

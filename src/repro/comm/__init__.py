@@ -1,0 +1,46 @@
+"""repro.comm — the pluggable gossip-compression subsystem.
+
+What a worker sends in a gossip round is a flat parameter buffer
+(:mod:`repro.common.flat`); this package decides what that buffer looks like
+ON THE WIRE. Three pieces, mirroring :mod:`repro.api`:
+
+- the **codec registry** (:mod:`repro.comm.registry`): every compression
+  scheme is a :class:`Codec` class registered under a name;
+  ``@register_codec`` is the one-file extension point
+  (``ProtocolConfig(codec="<name>")`` / ``GossipTrainer(codec=...)`` /
+  ``launch.train --codec`` then work everywhere);
+- the **codec classes** (:mod:`repro.comm.codecs`): ``none`` (identity),
+  ``q8`` (stochastic-rounding int8, per-block scales) and ``topk``
+  (magnitude top-k + error-feedback residual in a checkpointable
+  :class:`CommState`), each backed by a Pallas encode/decode kernel pair
+  (:mod:`repro.kernels.codec`) with jnp oracles (:mod:`repro.kernels.ref`);
+- **true wire-byte accounting**: ``wire_param_bytes`` is what the live
+  ``comm_bytes`` accumulators and ``Protocol.comm_cost`` report when a codec
+  is active — compressed bytes, not raw parameter bytes.
+
+Typical use::
+
+    from repro.api import GossipTrainer
+    from repro.common.config import ProtocolConfig
+
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=0.25,
+                           codec="q8")
+    trainer = GossipTrainer(engine="sim", protocol=proto, ...)
+    # or: GossipTrainer(..., codec="q8") to override any protocol config
+"""
+from repro.comm.registry import (  # noqa: F401
+    available_codecs,
+    get_codec,
+    register_codec,
+    resolve_codec,
+    unregister_codec,
+)
+from repro.comm.codecs import (  # noqa: F401
+    Codec,
+    CommState,
+    active_codec,
+    codec_seeds,
+    init_comm_state,
+    roundtrip_bufs,
+    wire_param_bytes,
+)

@@ -1,0 +1,316 @@
+"""Gossip-compression codecs over the flat parameter plane.
+
+A codec turns one flat-plane bucket (``[W, N]``, :mod:`repro.common.flat`)
+into a *wire* — the arrays that actually leave the worker — and back into an
+approximate buffer. The contract both engines rely on:
+
+- ``encode``/``decode`` are the fidelity surface: the simulation engine mixes
+  against ``decode(encode(theta))`` (exact self, reconstructed peers), the
+  distributed engine encodes before its collective permute and decodes after,
+  so both see the SAME reconstruction error;
+- ``pack``/``unpack`` flatten the wire into a single uint8 buffer so the
+  distributed round stays ONE ppermute per dtype bucket (the participation
+  gate rides in the packed buffer's tail byte);
+- ``wire_bytes`` is the static per-replica accounting that ``comm_bytes`` /
+  ``Protocol.comm_cost`` report instead of raw parameter bytes;
+- rounding noise is a deterministic hash of (round, worker, element index)
+  (:func:`repro.kernels.ref.stochastic_uniform` via :func:`codec_seeds`), so
+  the engines produce bit-identical wires for the same round.
+
+Stateful codecs (``topk``) carry an error-feedback residual in
+:class:`CommState`, stored params-shaped in the trainer state so it shards,
+donates and checkpoints exactly like the parameters.
+
+Pallas kernels live in :mod:`repro.kernels.codec`, jnp oracles in
+:mod:`repro.kernels.ref`; dispatch (TPU kernel vs oracle) goes through
+:mod:`repro.kernels.ops` like every other kernel in the repo.
+"""
+from __future__ import annotations
+
+from typing import Any, ClassVar, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.registry import register_codec, resolve_codec
+from repro.common.flat import FlatSpec
+from repro.kernels import ops
+
+PyTree = Any
+
+Wire = Tuple[jax.Array, ...]
+
+
+class CommState(NamedTuple):
+    """Checkpointable communication-plane state.
+
+    ``residual``: the error-feedback carry of a stateful codec, a float32
+    pytree with the parameters' structure (stacked ``[W, ...]``), or ``None``
+    for stateless codecs (flattens to zero leaves, so checkpoint layouts stay
+    stable across codecs).
+    """
+    residual: Optional[PyTree]
+
+
+class Codec:
+    """One gossip-compression scheme, fully self-describing.
+
+    Instances are immutable views over a frozen
+    :class:`~repro.common.config.ProtocolConfig` (``codec_block`` /
+    ``codec_topk_frac`` knobs); all evolving state lives in
+    :class:`CommState`.
+    """
+
+    name: ClassVar[str] = ""          # set by @register_codec
+    identity: ClassVar[bool] = False  # true -> engines skip the codec path
+    stateful: ClassVar[bool] = False  # carries an error-feedback residual
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.block = int(cfg.codec_block)
+        assert self.block > 0 and self.block % 128 == 0, (
+            "codec_block must be a positive lane multiple", self.block)
+
+    def _nb(self, n: int) -> int:
+        return max(1, -(-n // self.block))
+
+    # ----------------------------------------------------------- accounting
+    def wire_bytes(self, n: int, itemsize: int) -> int:
+        """Wire bytes for one replica row of an ``n``-element bucket."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------------- fidelity
+    def encode(self, buf, seeds, residual=None, *, use_kernel=None,
+               interpret=None) -> Tuple[Wire, Optional[jax.Array]]:
+        """[W, N] bucket (+ optional [W, N] f32 residual) -> (wire arrays,
+        residual' or None). ``seeds``: [W] uint32 per-row rounding seeds."""
+        raise NotImplementedError
+
+    def decode(self, wire: Wire, n: int, *, use_kernel=None,
+               interpret=None) -> jax.Array:
+        """Wire arrays -> [W, n] float32 reconstruction."""
+        raise NotImplementedError
+
+    def roundtrip(self, buf, seeds, residual=None, *, use_kernel=None,
+                  interpret=None):
+        """decode(encode(buf)) convenience -> (reconstruction, residual')."""
+        wire, res = self.encode(buf, seeds, residual, use_kernel=use_kernel,
+                                interpret=interpret)
+        return (self.decode(wire, buf.shape[1], use_kernel=use_kernel,
+                            interpret=interpret), res)
+
+    # ------------------------------------------------------------------ wire
+    def pack(self, wire: Wire) -> jax.Array:
+        """Wire arrays -> ONE uint8 [W, L] buffer (what rides the ppermute);
+        L == :meth:`wire_bytes` of the bucket."""
+        raise NotImplementedError
+
+    def unpack(self, packed: jax.Array, n: int) -> Wire:
+        """Inverse of :meth:`pack` for an ``n``-element bucket."""
+        raise NotImplementedError
+
+    def decode_wire(self, packed: jax.Array, n: int, **kw) -> jax.Array:
+        return self.decode(self.unpack(packed, n), n, **kw)
+
+
+def _u8(x) -> jax.Array:
+    """Bitcast any array to uint8, folding the byte dim into the last axis."""
+    b = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    if b.ndim > x.ndim:                      # wider-than-byte input dtypes
+        b = b.reshape(x.shape[:-1] + (-1,))
+    return b
+
+
+def _from_u8(b: jax.Array, dtype) -> jax.Array:
+    dtype = jnp.dtype(dtype)
+    if dtype.itemsize == 1:
+        return jax.lax.bitcast_convert_type(b, dtype)
+    W = b.shape[0]
+    return jax.lax.bitcast_convert_type(
+        b.reshape(W, -1, dtype.itemsize), dtype)
+
+
+# ---------------------------------------------------------------------------
+# builtin codecs
+# ---------------------------------------------------------------------------
+
+@register_codec("none")
+class IdentityCodec(Codec):
+    """Uncompressed wire: the raw flat buffer (the engines bypass the codec
+    path entirely, so this class only ever backs accounting and tests)."""
+    identity = True
+
+    def wire_bytes(self, n: int, itemsize: int) -> int:
+        return n * itemsize
+
+    def encode(self, buf, seeds, residual=None, **kw):
+        return (buf,), None
+
+    def decode(self, wire, n, **kw):
+        return wire[0].astype(jnp.float32)
+
+    def pack(self, wire):
+        return _u8(wire[0])
+
+    def unpack(self, packed, n):
+        raise NotImplementedError("identity codec has no packed wire format")
+
+
+@register_codec("q8")
+class Q8Codec(Codec):
+    """Stochastic-rounding int8 quantization, one f32 scale per
+    ``codec_block`` elements: ~4x fewer wire bytes for float32 planes, with
+    unbiased rounding (E[decode] = input)."""
+
+    def wire_bytes(self, n: int, itemsize: int) -> int:
+        if n == 0:
+            return 0
+        nb = self._nb(n)
+        return nb * self.block + 4 * nb          # int8 values + f32 scales
+
+    def encode(self, buf, seeds, residual=None, *, use_kernel=None, interpret=None):
+        W, n = buf.shape
+        if n == 0:
+            return (jnp.zeros((W, 0), jnp.int8), jnp.zeros((W, 0), jnp.float32)), None
+        values, scales = ops.q8_encode(buf, seeds, block=self.block,
+                                       use_kernel=use_kernel, interpret=interpret)
+        return (values, scales), None
+
+    def decode(self, wire, n, *, use_kernel=None, interpret=None):
+        values, scales = wire
+        if n == 0:
+            return jnp.zeros((values.shape[0], 0), jnp.float32)
+        return ops.q8_decode(values, scales, n, block=self.block,
+                             use_kernel=use_kernel, interpret=interpret)
+
+    def pack(self, wire):
+        values, scales = wire
+        return jnp.concatenate([_u8(values), _u8(scales)], axis=-1)
+
+    def unpack(self, packed, n):
+        nb = self._nb(n) if n else 0
+        split = nb * self.block
+        return (_from_u8(packed[:, :split], jnp.int8),
+                _from_u8(packed[:, split:split + 4 * nb], jnp.float32))
+
+
+@register_codec("topk")
+class TopKCodec(Codec):
+    """Per-block magnitude top-k sparsification with error feedback: only the
+    ``codec_topk_frac`` largest-magnitude entries of each block (of
+    ``acc = buf + residual``) ride the wire as (f32 value, int32 index)
+    pairs; the untransmitted mass carries to the next round in
+    ``CommState.residual``.
+
+    Caveat — this sparsifies the STATE the peer mixes against, so receivers
+    see a mostly-zero reconstruction between a coordinate's transmissions and
+    untransmitted coordinates accumulate in the residual until their grown
+    magnitude forces selection. That makes low fractions aggressive: fidelity
+    degrades in a way the engines MEASURE (the sim mixing sees exactly the
+    wire's reconstruction) rather than hide. Use ``q8`` for accuracy-neutral
+    compression; use topk for studying sparsified gossip or with large
+    ``codec_topk_frac`` / infrequent rounds, and read the convergence gap off
+    the live metrics (benchmarks/comm_compress.py reports it)."""
+    stateful = True
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.k = max(1, int(round(float(cfg.codec_topk_frac) * self.block)))
+        assert self.k <= self.block
+
+    def wire_bytes(self, n: int, itemsize: int) -> int:
+        if n == 0:
+            return 0
+        return self._nb(n) * self.k * 8          # f32 value + int32 index
+
+    def encode(self, buf, seeds, residual=None, *, use_kernel=None, interpret=None):
+        W, n = buf.shape
+        if n == 0:
+            z = jnp.zeros((W, 0), jnp.float32)
+            return (z, jnp.zeros((W, 0), jnp.int32)), z
+        values, idx, res = ops.topk_encode(buf, residual, k=self.k,
+                                           block=self.block,
+                                           use_kernel=use_kernel,
+                                           interpret=interpret)
+        return (values, idx), res
+
+    def decode(self, wire, n, *, use_kernel=None, interpret=None):
+        values, idx = wire
+        if n == 0:
+            return jnp.zeros((values.shape[0], 0), jnp.float32)
+        return ops.topk_decode(values, idx, n, k=self.k, block=self.block,
+                               use_kernel=use_kernel, interpret=interpret)
+
+    def pack(self, wire):
+        values, idx = wire
+        return jnp.concatenate([_u8(values), _u8(idx)], axis=-1)
+
+    def unpack(self, packed, n):
+        m = (self._nb(n) * self.k) if n else 0
+        return (_from_u8(packed[:, :4 * m], jnp.float32),
+                _from_u8(packed[:, 4 * m:8 * m], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# shared helpers (both engines + accounting)
+# ---------------------------------------------------------------------------
+
+def codec_seeds(round_idx, worker_ids) -> jax.Array:
+    """Per-worker uint32 rounding seeds for one gossip round.
+
+    Pure function of (round counter, global worker index) — BOTH engines
+    derive the wire noise from it, so the same round produces bit-identical
+    payloads under the sim mixing oracle and the dist collective permute.
+    """
+    r = jnp.asarray(round_idx).astype(jnp.uint32)
+    w = jnp.asarray(worker_ids).astype(jnp.uint32)
+    return ((r + jnp.uint32(1)) * jnp.uint32(2654435761)
+            ^ (w * jnp.uint32(0x9E3779B9) + jnp.uint32(0x85EBCA6B)))
+
+
+def wire_param_bytes(codec: Codec, spec: FlatSpec) -> int:
+    """Wire bytes of ONE replica of the flat plane under ``codec`` — the
+    number ``comm_bytes`` / ``comm_cost`` account per communication event."""
+    return int(sum(codec.wire_bytes(n, jnp.dtype(b).itemsize)
+                   for b, n in spec.totals.items()))
+
+
+def roundtrip_bufs(codec: Codec, bufs, seeds, res_bufs=None, gate=None):
+    """decode(encode(.)) over a dict of flat-plane buckets — THE fidelity
+    surface both sim paths share (engine hot loop and facade parity oracle).
+
+    ``res_bufs``: per-bucket error-feedback residuals for stateful codecs
+    (None -> zeros). ``gate`` (optional, broadcastable against ``[W, N]``
+    rows): per-row participation — a stateful codec's residual only advances
+    for rows whose OWN comm gate fired, so mass encoded into a wire the
+    receiver discards is carried, not dropped. (For pull-gossip a passive
+    partner's wire may still be applied while its residual also carries — the
+    mass is re-sent later: error feedback stays conservative, never lossy.)
+    Returns (hat_bufs, new_res_bufs_or_None).
+    """
+    res_bufs = res_bufs or {}
+    hat, new_res = {}, {}
+    for k, b in bufs.items():
+        r = res_bufs.get(k)
+        if r is None and codec.stateful:
+            r = jnp.zeros(b.shape, jnp.float32)
+        hat[k], r2 = codec.roundtrip(b, seeds, residual=r)
+        if codec.stateful:
+            new_res[k] = r2 if gate is None else jnp.where(gate, r2, r)
+    return hat, (new_res if codec.stateful else None)
+
+
+def init_comm_state(codec: Optional[Codec], params_stack: PyTree) -> CommState:
+    """Fresh CommState for a trainer: a zero f32 residual tree shaped like
+    the (stacked) params for stateful codecs, else an empty state."""
+    if codec is None or not codec.stateful:
+        return CommState(None)
+    return CommState(jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params_stack))
+
+
+def active_codec(cfg) -> Optional[Codec]:
+    """Resolve ``cfg.codec`` to a Codec, or ``None`` when compression is off
+    (the engines' one-line gate for the codec path)."""
+    codec = resolve_codec(cfg)
+    return None if codec.identity else codec

@@ -268,6 +268,16 @@ class ProtocolConfig:
     # moving rate from moving_rate to moving_rate_final over alpha_decay_steps
     moving_rate_final: float = -1.0  # <0 -> constant alpha
     alpha_decay_steps: int = 0
+    # gossip compression (repro.comm codec registry): what rides the wire for
+    # pairwise protocols — "none" | "q8" (stochastic-rounding int8, per-block
+    # scales) | "topk" (magnitude top-k + error-feedback residual) | any
+    # @register_codec name. comm_bytes / comm_cost then account the
+    # *compressed* wire bytes, and both engines mix against the
+    # decode(encode(theta)) reconstruction so codec error is measurable.
+    codec: str = "none"
+    codec_block: int = 512           # elements per codec block (q8 scale /
+    #                                  topk selection granularity; LANE-multiple)
+    codec_topk_frac: float = 0.05    # topk: fraction of each block transmitted
 
     # NOTE: gated protocols require exactly one of comm_probability /
     # comm_period; that invariant is protocol knowledge, so it is validated by
@@ -311,3 +321,6 @@ class TrainConfig:
     # their per-leaf path. Default on; turn off to force the per-leaf
     # reference path (parity tests compare the two).
     fused_update: bool = True
+    # gossip-compression codec override: "" inherits protocol.codec, any
+    # registered codec name ("q8", "topk", ...) replaces it for this run.
+    codec: str = ""

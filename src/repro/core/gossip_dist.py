@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import comm
 from repro.api import registry
 from repro.common import compat
 from repro.common import flat as flat_plane
@@ -96,11 +97,22 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
     In every mode the round's communication is one ppermute per dtype bucket
     of the flat plane (the participation gate rides in the first buffer's
     tail element), not one per leaf.
+
+    When ``cfg.codec`` names a registered compression codec (repro.comm), the
+    wire is the codec's PACKED uint8 buffer: each shard encodes its local
+    plane before the ppermute (stochastic rounding seeded by (round, worker),
+    matching the sim engine's stream) and decodes the peer's wire after — the
+    collective moves compressed bytes, still exactly one ppermute per bucket.
+    Stateful codecs (topk error feedback) additionally take/return the
+    residual tree: every mode's signature gains a ``residual`` argument after
+    the params and a residual output at the end.
     """
     assert mode in ("apply", "peer", "fused"), mode
     schedule = build_schedule(mesh_cfg, schedule_kind)
     n_rounds = len(schedule)
     impl = registry.resolve(cfg)
+    codec = comm.active_codec(cfg) if impl.pairwise else None
+    stateful = codec is not None and codec.stateful
     gossip_axes = set(GOSSIP_AXES) & set(mesh.axis_names)
 
     # Full-manual over EVERY mesh axis, all modes (specs stay unfiltered).
@@ -112,7 +124,18 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
     # shard-local bytes only.
     manual = set(mesh.axis_names)
 
-    def exchange_flat(bufs, act, round_idx):
+    def _worker_index():
+        """Global worker index of the local shard (inside shard_map) — the
+        codec's rounding-seed coordinate, matching the sim engine's
+        ``jnp.arange(W)``."""
+        idx = jnp.int32(0)
+        if "pod" in mesh.axis_names:
+            idx = jax.lax.axis_index("pod") * mesh_cfg.workers_per_pod
+        if "worker" in mesh.axis_names:
+            idx = idx + jax.lax.axis_index("worker")
+        return idx
+
+    def switch_exchange(bufs, act, round_idx):
         """ONE ppermute per dtype bucket (gate in the carrier's tail element):
         lax.switch selects the round's static permutation. Returns
         (peer_bufs, peer_act)."""
@@ -134,22 +157,55 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
         branches = [branch(ax, pairs) for ax, pairs in schedule]
         return jax.lax.switch(round_idx % n_rounds, branches, bufs)
 
-    def local_update(params, active_scalar, round_idx):
+    def exchange_flat(spec, bufs, residual, act, round_idx):
+        """One gossip round over the local flat plane. Returns
+        (peer_bufs, peer_act, new_residual_bufs_or_None).
+
+        Uncompressed: the raw buffers ride the collective. With a codec: each
+        shard encodes its plane, PACKS the wire into one uint8 buffer per
+        bucket (gate in the tail byte) so the ppermute moves compressed bytes,
+        and decodes the peer's wire on arrival. A stateful codec's residual
+        only advances when THIS worker's own gate fired (mirroring the sim
+        engine): mass encoded into a wire the partner discards stays in the
+        residual instead of being dropped."""
+        if codec is None:
+            peer, peer_act = switch_exchange(bufs, act, round_idx)
+            return peer, peer_act, None
+        seeds = jnp.reshape(comm.codec_seeds(round_idx, _worker_index()), (1,))
+        res_bufs = spec.flatten(residual) if stateful else {}
+        wires, new_res = {}, {}
+        for k, b in bufs.items():
+            wire, r2 = codec.encode(b, seeds, residual=res_bufs.get(k))
+            wires[k] = codec.pack(wire)
+            if stateful:
+                new_res[k] = jnp.where(act > 0, r2, res_bufs[k])
+        peer_wires, peer_act = switch_exchange(wires, act, round_idx)
+        peer = {k: codec.decode_wire(peer_wires[k], spec.totals[k]).astype(b.dtype)
+                for k, b in bufs.items()}
+        return peer, peer_act, (new_res if stateful else None)
+
+    def local_update(params, residual, active_scalar, round_idx):
         # params: local replica shard, leading dim 1; active_scalar: scalar f32
         spec = flat_plane.FlatSpec.build(params, leading=1)
         bufs = spec.flatten(params)
-        peer, peer_act = exchange_flat(bufs, active_scalar, round_idx)
+        peer, peer_act, new_res = exchange_flat(spec, bufs, residual,
+                                                active_scalar, round_idx)
         gate, coef = impl.pair_gate_coef(active_scalar, peer_act)
         gc = (gate * coef).astype(jnp.float32)
         if mode == "peer":
-            return spec.unflatten(peer), jnp.reshape(gc, (1,))
-        # compute in the storage dtype: f32 upcasts would materialize two full
-        # f32 copies of the replica shard (grok: +12 GB/chip). On TPU the
-        # fused mode does the f32 math per-tile in VMEM instead.
-        new = {k: b - gc.astype(b.dtype) * (b - peer[k]) for k, b in bufs.items()}
-        return spec.unflatten(new)
+            out = (spec.unflatten(peer), jnp.reshape(gc, (1,)))
+        else:
+            # compute in the storage dtype: f32 upcasts would materialize two
+            # full f32 copies of the replica shard (grok: +12 GB/chip). On TPU
+            # the fused mode does the f32 math per-tile in VMEM instead.
+            new = {k: b - gc.astype(b.dtype) * (b - peer[k]) for k, b in bufs.items()}
+            out = (spec.unflatten(new),)
+        if stateful:
+            out = out + (spec.unflatten(new_res, like=residual),)
+        return out[0] if len(out) == 1 else out
 
-    def local_fused(params, velocity, grads, active_scalar, round_idx, eta, mu):
+    def local_fused(params, velocity, grads, residual, active_scalar,
+                    round_idx, eta, mu):
         # exchange + the entire NAG + elastic displacement in one pass over
         # the local flat plane (kernels/ops dispatches to the Pallas kernel on
         # TPU, the jnp oracle elsewhere)
@@ -157,33 +213,68 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
         spec = flat_plane.FlatSpec.build(params, leading=1)
         bufs = spec.flatten(params)
         vb, gb = spec.flatten(velocity), spec.flatten(grads)
-        peer, peer_act = exchange_flat(bufs, active_scalar, round_idx)
+        peer, peer_act, new_res = exchange_flat(spec, bufs, residual,
+                                                active_scalar, round_idx)
         gate, coef = impl.pair_gate_coef(active_scalar, peer_act)
         gc = (gate * coef).astype(jnp.float32)
         out_t, out_v = kernel_ops.fused_bufs_elastic_nag(bufs, peer, vb, gb,
                                                          gc, eta, mu)
-        return spec.unflatten(out_t), spec.unflatten(out_v, like=velocity)
+        outs = (spec.unflatten(out_t), spec.unflatten(out_v, like=velocity))
+        if stateful:
+            outs = outs + (spec.unflatten(new_res, like=residual),)
+        return outs
 
     active_spec = P(tuple(a for a in GOSSIP_AXES if a in gossip_axes))
 
     if mode == "fused":
+        if stateful:
+            @jax.jit
+            def gossip_step(params_stack, velocity, grads, residual, active,
+                            round_idx, eta, mu):
+                fn = compat.shard_map(
+                    lambda p, v, g, r, a, e, m: local_fused(p, v, g, r, a[0],
+                                                            round_idx, e, m),
+                    mesh,
+                    in_specs=(param_specs, param_specs, param_specs, param_specs,
+                              active_spec, P(), P()),
+                    out_specs=(param_specs, param_specs, param_specs),
+                    manual_axes=manual,
+                )
+                return fn(params_stack, velocity, grads, residual, active, eta, mu)
+        else:
+            @jax.jit
+            def gossip_step(params_stack, velocity, grads, active, round_idx, eta, mu):
+                fn = compat.shard_map(
+                    lambda p, v, g, a, e, m: local_fused(p, v, g, None, a[0],
+                                                         round_idx, e, m),
+                    mesh,
+                    in_specs=(param_specs, param_specs, param_specs, active_spec,
+                              P(), P()),
+                    out_specs=(param_specs, param_specs),
+                    manual_axes=manual,
+                )
+                return fn(params_stack, velocity, grads, active, eta, mu)
+    elif stateful:
+        out_specs = ((param_specs, param_specs) if mode == "apply"
+                     else (param_specs, active_spec, param_specs))
+
         @jax.jit
-        def gossip_step(params_stack, velocity, grads, active, round_idx, eta, mu):
+        def gossip_step(params_stack, residual, active, round_idx):
             fn = compat.shard_map(
-                lambda p, v, g, a, e, m: local_fused(p, v, g, a[0], round_idx, e, m),
+                lambda p, r, a: local_update(p, r, a[0], round_idx),
                 mesh,
-                in_specs=(param_specs, param_specs, param_specs, active_spec, P(), P()),
-                out_specs=(param_specs, param_specs),
+                in_specs=(param_specs, param_specs, active_spec),
+                out_specs=out_specs,
                 manual_axes=manual,
             )
-            return fn(params_stack, velocity, grads, active, eta, mu)
+            return fn(params_stack, residual, active)
     else:
         out_specs = param_specs if mode == "apply" else (param_specs, active_spec)
 
         @jax.jit
         def gossip_step(params_stack, active, round_idx):
             fn = compat.shard_map(
-                lambda p, a: local_update(p, a[0], round_idx),
+                lambda p, a: local_update(p, None, a[0], round_idx),
                 mesh,
                 in_specs=(param_specs, active_spec),
                 out_specs=out_specs,
@@ -193,6 +284,7 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
 
     gossip_step.num_rounds = n_rounds
     gossip_step.schedule = schedule
+    gossip_step.stateful_codec = stateful
     return gossip_step
 
 

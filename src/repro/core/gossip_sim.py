@@ -16,6 +16,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import comm
 from repro.api import registry
 from repro.common import flat as flat_plane
 from repro.common.config import OptimizerConfig, ProtocolConfig
@@ -35,6 +36,10 @@ class SimState(NamedTuple):
     proto: ProtocolState
     key: jax.Array
     step: jax.Array
+    # codec state (repro.comm): error-feedback residual of a stateful codec
+    # (params-shaped f32 tree) or an empty CommState — checkpointed with the
+    # rest of the state so resumed runs continue the residual.
+    comm: comm.CommState = comm.CommState(None)
 
 
 class SimTrainer:
@@ -56,13 +61,16 @@ class SimTrainer:
         # (registry capability flags, not method strings).
         self.fused_update = (fused_update and optimizer.name == "nag"
                              and registry.resolve(protocol).pairwise)
+        # gossip-compression codec (repro.comm): pairwise protocols only
+        # (enforced by Protocol.__init__); None when cfg.codec == "none"
+        self.codec = comm.active_codec(protocol)
         self._flat_spec = None   # FlatSpec, cached per trainer at init()
         # donate the stacked state so params/velocity update in place instead
         # of doubling HBM residency every step
         self._step_fn = jax.jit(self._step, donate_argnums=(0,))
 
     def init(self, params_stack: PyTree, seed: int = 0) -> SimState:
-        if self.fused_update:
+        if self.fused_update or self.codec is not None:
             self._flat_spec = flat_plane.FlatSpec.build(params_stack, leading=1)
         return SimState(
             params=params_stack,
@@ -70,7 +78,45 @@ class SimTrainer:
             proto=protocols.init_state(self.protocol, params_stack),
             key=jax.random.PRNGKey(seed),
             step=jnp.zeros((), jnp.int32),
+            comm=comm.init_comm_state(self.codec, params_stack),
         )
+
+    def _spec(self, params_stack) -> flat_plane.FlatSpec:
+        if self._flat_spec is None:
+            self._flat_spec = flat_plane.FlatSpec.build(params_stack, leading=1)
+        return self._flat_spec
+
+    def _codec_transmit(self, state: SimState, active):
+        """decode(encode(theta)) on the flat plane: what peers RECEIVE this
+        round, plus the advanced error-feedback residual. Seeds derive from
+        (comm round counter, worker index) — the same stream the dist engine
+        uses. Wrapped in lax.cond so non-firing steps skip the whole
+        encode/decode pass (the identity mix would ignore the transmit
+        anyway); inside a firing round, a stateful codec's residual advances
+        per worker, gated by that worker's OWN participation (matching the
+        dist engine) so wire mass a receiver discards is carried forward."""
+        codec, spec = self.codec, self._spec(state.params)
+
+        def fire():
+            bufs = spec.flatten(state.params)
+            res_bufs = (spec.flatten(state.comm.residual)
+                        if codec.stateful else None)
+            seeds = comm.codec_seeds(state.proto.comm_rounds,
+                                     jnp.arange(self.num_workers))
+            hat, new_res = comm.roundtrip_bufs(
+                codec, bufs, seeds, res_bufs,
+                gate=jnp.asarray(active).reshape(-1, 1))
+            comm_new = state.comm
+            if codec.stateful:
+                comm_new = comm.CommState(
+                    spec.unflatten(new_res, like=state.comm.residual))
+            return spec.unflatten(hat), comm_new
+
+        def skip():
+            # transmit := theta makes apply_mix_split exactly apply_mix
+            return state.params, state.comm
+
+        return jax.lax.cond(jnp.any(active), fire, skip)
 
     # -- one synchronous step across all workers ---------------------------
     def _step(self, state: SimState, x, y):
@@ -86,8 +132,11 @@ class SimTrainer:
 
         # communication-related component (lines 4-8), simultaneous
         active = protocols.comm_gate(cfg, gate_key, state.step, self.num_workers)
+        transmit, comm_new = (self._codec_transmit(state, active)
+                              if self.codec is not None else (None, state.comm))
         theta_comm, proto_new = protocols.comm_update(cfg, sel_key, active, state.params,
-                                                      state.proto, step=state.step)
+                                                      state.proto, step=state.step,
+                                                      transmit=transmit)
 
         if self.fused_update:
             # fused flat-plane path: lines 3, 7 and 9 in ONE pass per dtype
@@ -97,9 +146,7 @@ class SimTrainer:
             ocfg = self.optimizer_cfg
             grads_c = _clip(ocfg, grads)
             eta = lr_at(ocfg, state.opt.step)
-            spec = self._flat_spec
-            if spec is None:
-                spec = self._flat_spec = flat_plane.FlatSpec.build(state.params, leading=1)
+            spec = self._spec(state.params)
             params_new, v_new = ops.fused_tree_elastic_nag(
                 state.params, theta_comm, state.opt.mu, grads_c,
                 jnp.ones((self.num_workers,), jnp.float32),
@@ -130,7 +177,8 @@ class SimTrainer:
             "loss_max": jnp.max(losses),
             "comm_active": jnp.sum(active.astype(jnp.int32)),
         }
-        return SimState(params_new, opt_new, proto_new, key, state.step + 1), metrics
+        return SimState(params_new, opt_new, proto_new, key, state.step + 1,
+                        comm_new), metrics
 
     def step(self, state: SimState, x, y):
         return self._step_fn(state, x, y)

@@ -47,10 +47,11 @@ def gradient_transform(cfg: ProtocolConfig, grads_stack: PyTree) -> PyTree:
 
 
 def comm_update(cfg: ProtocolConfig, key, active, theta_stack: PyTree,
-                state: ProtocolState, step=None):
-    """Communication-related component on stacked params [W, ...]."""
+                state: ProtocolState, step=None, transmit=None):
+    """Communication-related component on stacked params [W, ...];
+    ``transmit`` (optional) is the codec-reconstructed tree peers receive."""
     return registry.resolve(cfg).comm_update(key, active, theta_stack, state,
-                                             step=step)
+                                             step=step, transmit=transmit)
 
 
 def comm_cost(cfg: ProtocolConfig, param_bytes: int, num_workers: int) -> CommCost:

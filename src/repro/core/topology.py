@@ -102,6 +102,26 @@ def apply_mix(mix: jax.Array, theta_stack):
     return jax.tree.map(one, theta_stack)
 
 
+def apply_mix_split(mix: jax.Array, theta_stack, transmit_stack):
+    """:func:`apply_mix` with lossy transmission: each worker's OWN (diagonal)
+    contribution reads exact ``theta``, the off-diagonal (received)
+    contributions read ``transmit`` — the codec's decode(encode(theta))
+    reconstruction. This is exactly the distributed realization, where only
+    the wire payload is compressed:
+
+        theta'[w] = mix[w,w] * theta[w] + sum_{v!=w} mix[w,v] * transmit[v]
+    """
+    d = jnp.diagonal(mix)
+    off = mix - jnp.diag(d)
+
+    def one(x, t):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        tfl = t.reshape(t.shape[0], -1).astype(jnp.float32)
+        out = d[:, None] * flat + jnp.einsum("wv,vp->wp", off, tfl)
+        return out.reshape(x.shape).astype(x.dtype)
+    return jax.tree.map(one, theta_stack, transmit_stack)
+
+
 # ---------------------------------------------------------------------------
 # Static matching schedules — distributed engine (collective-permute)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,183 @@
+"""Pallas TPU kernels: gossip-compression codecs on the flat parameter plane.
+
+The wire cost of a gossip round is the size of the flat replica buffer that
+rides the collective permute (repro.core.gossip_dist). These kernels shrink
+that buffer before it leaves the chip and reconstruct it on arrival:
+
+- ``q8`` — stochastic-rounding int8 quantization with one float32 scale per
+  ``block`` elements (~4x fewer wire bytes for float32 planes);
+- ``topk`` — per-block magnitude top-k selection with an error-feedback
+  residual (the untransmitted mass is carried to the next round), wire cost
+  8 bytes per kept element.
+
+Layout matches :mod:`repro.kernels.fused_update`: ``[W, N]`` replica buffers
+from :mod:`repro.common.flat`, tiled into ``(1, block)`` lane-aligned strips,
+one grid step per (replica, block). Rounding noise comes from
+:func:`repro.kernels.ref.stochastic_uniform` — a deterministic hash of
+(per-row seed, in-row element index) — so the kernels are bit-identical to
+the jnp oracles in :mod:`repro.kernels.ref` (the parity target in
+tests/test_comm.py) and both engines produce the same wire payload from the
+same (round, worker) seed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _pad_to_blocks, stochastic_uniform
+
+
+def _blocked(x, block: int):
+    """[W, N] -> ([W, nb*block] zero-padded, nb) — same padding rule as the
+    oracles (shared helper keeps kernel and oracle layouts in lockstep)."""
+    xb, nb = _pad_to_blocks(x, block)
+    return xb.reshape(x.shape[0], nb * block), nb
+
+
+# ---------------------------------------------------------------------------
+# q8: stochastic-rounding int8 quantization, per-block scales
+# ---------------------------------------------------------------------------
+
+def _q8_encode_kernel(x_ref, seed_ref, v_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)                       # (1, block)
+    amax = jnp.max(jnp.abs(x))
+    # multiply, not divide: keeps the scale bit-identical to the oracle under
+    # every lowering (XLA folds /const into *reciprocal inconsistently)
+    scale = jnp.where(amax > 0, amax * jnp.float32(1.0 / 127.0), 1.0)
+    j = pl.program_id(1)
+    idx = (j * block
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)).astype(jnp.uint32)
+    u = stochastic_uniform(idx, seed_ref[0, 0])
+    q = jnp.clip(jnp.floor(x / scale + u), -127.0, 127.0)
+    v_ref[...] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _q8_decode_kernel(v_ref, s_ref, out_ref):
+    out_ref[...] = v_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def q8_encode(buf, seeds, *, block: int, interpret: bool = False):
+    """buf: [W, N] float plane bucket; seeds: [W] uint32 per-row rounding
+    seeds. Returns (values int8 [W, nb*block], scales f32 [W, nb])."""
+    W, n = buf.shape
+    xf, nb = _blocked(buf.astype(jnp.float32), block)
+    sd = seeds.astype(jnp.uint32).reshape(W, 1)
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    one = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    scale_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_q8_encode_kernel, block=block),
+        grid=(W, nb),
+        in_specs=[spec, one],
+        out_specs=[spec, scale_spec],
+        out_shape=[jax.ShapeDtypeStruct((W, nb * block), jnp.int8),
+                   jax.ShapeDtypeStruct((W, nb), jnp.float32)],
+        interpret=interpret,
+    )(xf, sd)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))
+def q8_decode(values, scales, *, n: int, block: int, interpret: bool = False):
+    """(values int8 [W, nb*block], scales f32 [W, nb]) -> [W, n] float32."""
+    W, nbb = values.shape
+    nb = nbb // block
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    scale_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _q8_decode_kernel,
+        grid=(W, nb),
+        in_specs=[spec, scale_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((W, nb * block), jnp.float32),
+        interpret=interpret,
+    )(values, scales)
+    return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# topk: per-block magnitude top-k + error-feedback residual
+# ---------------------------------------------------------------------------
+
+def _topk_encode_kernel(x_ref, r_ref, v_ref, i_ref, res_ref, *, k: int, block: int):
+    acc = x_ref[...].astype(jnp.float32) + r_ref[...]        # (1, block)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+
+    def pick(j, carry):
+        vals, idxs, taken = carry
+        # mask taken entries below any |acc| so they can't be re-selected;
+        # ties on magnitude resolve to the lowest index (matches lax.top_k)
+        mag = jnp.where(taken, -1.0, jnp.abs(acc))
+        m = jnp.max(mag)
+        sel = jnp.min(jnp.where(mag == m, iota, block))
+        hit = iota == sel
+        v = jnp.sum(jnp.where(hit, acc, 0.0))
+        vals = jax.lax.dynamic_update_index_in_dim(vals, v, j, 0)
+        idxs = jax.lax.dynamic_update_index_in_dim(idxs, sel, j, 0)
+        return vals, idxs, taken | hit
+
+    vals, idxs, taken = jax.lax.fori_loop(
+        0, k, pick, (jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.int32),
+                     jnp.zeros((1, block), bool)))
+    v_ref[...] = vals.reshape(1, k)
+    i_ref[...] = idxs.reshape(1, k)
+    res_ref[...] = jnp.where(taken, 0.0, acc)
+
+
+def _topk_decode_kernel(v_ref, i_ref, out_ref, *, k: int, block: int):
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    vals = v_ref[...]
+    idxs = i_ref[...]
+
+    def scatter(j, dense):
+        sel = jax.lax.dynamic_index_in_dim(idxs[0], j, 0, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vals[0], j, 0, keepdims=False)
+        return dense + jnp.where(iota == sel, v, 0.0)
+
+    out_ref[...] = jax.lax.fori_loop(0, k, scatter,
+                                     jnp.zeros((1, block), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_encode(buf, residual, *, k: int, block: int, interpret: bool = False):
+    """buf: [W, N] float bucket; residual: [W, N] f32 error-feedback carry.
+    Returns (values f32 [W, nb*k], local indices int32 [W, nb*k],
+    residual' f32 [W, N])."""
+    W, n = buf.shape
+    xf, nb = _blocked(buf.astype(jnp.float32), block)
+    rf, _ = _blocked(residual.astype(jnp.float32), block)
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    kspec = pl.BlockSpec((1, k), lambda i, j: (i, j))
+    vals, idxs, res = pl.pallas_call(
+        functools.partial(_topk_encode_kernel, k=k, block=block),
+        grid=(W, nb),
+        in_specs=[spec, spec],
+        out_specs=[kspec, kspec, spec],
+        out_shape=[jax.ShapeDtypeStruct((W, nb * k), jnp.float32),
+                   jax.ShapeDtypeStruct((W, nb * k), jnp.int32),
+                   jax.ShapeDtypeStruct((W, nb * block), jnp.float32)],
+        interpret=interpret,
+    )(xf, rf)
+    return vals, idxs, res[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "block", "interpret"))
+def topk_decode(values, idx, *, n: int, k: int, block: int, interpret: bool = False):
+    """(values f32 [W, nb*k], indices int32 [W, nb*k]) -> [W, n] float32."""
+    W, m = values.shape
+    nb = m // k
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    kspec = pl.BlockSpec((1, k), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        functools.partial(_topk_decode_kernel, k=k, block=block),
+        grid=(W, nb),
+        in_specs=[kspec, kspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((W, nb * block), jnp.float32),
+        interpret=interpret,
+    )(values, idx)
+    return out[:, :n]

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.flat import FlatSpec
+from repro.kernels import codec as _codec
 from repro.kernels import fused_update as _fu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref
@@ -123,6 +124,54 @@ def fused_tree_nag(theta: PyTree, v: PyTree, g: PyTree, *, eta, mu,
         out_t[k], out_v[k] = fused_flat_nag_update(
             tb[k], vb[k], gb[k], eta, mu, use_kernel=use_kernel, interpret=interpret)
     return spec.unflatten(out_t, like=theta), spec.unflatten(out_v, like=v)
+
+
+# ---------------------------------------------------------------------------
+# Gossip-compression codec entry points (repro.comm; [W, N] flat buckets)
+# ---------------------------------------------------------------------------
+
+def _pick(use_kernel: Optional[bool], interpret: Optional[bool]):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    return use_kernel, (not on_tpu()) if interpret is None else interpret
+
+
+def q8_encode(buf, seeds, *, block: int, use_kernel: Optional[bool] = None,
+              interpret: Optional[bool] = None):
+    """Stochastic-rounding int8 quantization -> (values, per-block scales)."""
+    use_kernel, interpret = _pick(use_kernel, interpret)
+    if not use_kernel:
+        return ref.q8_encode(buf, seeds, block=block)
+    return _codec.q8_encode(buf, seeds, block=block, interpret=interpret)
+
+
+def q8_decode(values, scales, n: int, *, block: int,
+              use_kernel: Optional[bool] = None, interpret: Optional[bool] = None):
+    use_kernel, interpret = _pick(use_kernel, interpret)
+    if not use_kernel:
+        return ref.q8_decode(values, scales, n, block=block)
+    return _codec.q8_decode(values, scales, n=n, block=block, interpret=interpret)
+
+
+def topk_encode(buf, residual, *, k: int, block: int,
+                use_kernel: Optional[bool] = None, interpret: Optional[bool] = None):
+    """Per-block magnitude top-k with error feedback ->
+    (values, indices, residual')."""
+    use_kernel, interpret = _pick(use_kernel, interpret)
+    if residual is None:
+        residual = jnp.zeros(buf.shape, jnp.float32)
+    if not use_kernel:
+        return ref.topk_encode(buf, residual, k=k, block=block)
+    return _codec.topk_encode(buf, residual, k=k, block=block, interpret=interpret)
+
+
+def topk_decode(values, idx, n: int, *, k: int, block: int,
+                use_kernel: Optional[bool] = None, interpret: Optional[bool] = None):
+    use_kernel, interpret = _pick(use_kernel, interpret)
+    if not use_kernel:
+        return ref.topk_decode(values, idx, n, k=k, block=block)
+    return _codec.topk_decode(values, idx, n=n, k=k, block=block,
+                              interpret=interpret)
 
 
 def flash_attention(q, k, v, kv_len=None, *, causal: bool = True, window: int = 0,

@@ -48,6 +48,99 @@ def fused_flat_nag_update(theta, v, g, eta, mu):
     return theta_new.astype(theta.dtype), v_new.astype(v.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Gossip-compression codec oracles (repro.comm; Pallas kernels in codec.py)
+# ---------------------------------------------------------------------------
+
+def stochastic_uniform(idx, seed):
+    """Deterministic per-element uniform in [0, 1): murmur-style integer hash
+    of (seed, element index). Both the Pallas codec kernels and these oracles
+    draw rounding noise from THIS function, so kernel-vs-oracle parity is
+    bit-exact and the sim / dist engines produce identical wire payloads from
+    identical (round, worker) seeds. ``idx``: uint32 array of in-row element
+    indices; ``seed``: uint32 scalar/array broadcastable against it."""
+    x = jnp.asarray(idx, jnp.uint32) ^ jnp.asarray(seed, jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    # top 24 bits -> [0, 1) with full float32 resolution
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _pad_to_blocks(x, block: int):
+    """[W, N] -> ([W, nb, block] zero-padded, nb)."""
+    W, n = x.shape
+    nb = max(1, -(-n // block))
+    pad = nb * block - n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x.reshape(W, nb, block), nb
+
+
+def q8_encode(buf, seeds, *, block: int):
+    """Stochastic-rounding int8 quantization with per-block scales.
+
+    buf: [W, N] float buffer (flat-plane bucket); seeds: [W] uint32 per-row
+    rounding seeds. Returns (values int8 [W, nb*block], scales f32 [W, nb])
+    where nb = ceil(N / block); the tail of the last block is zero-padded
+    (padded lanes quantize to 0).
+    """
+    W, n = buf.shape
+    x, nb = _pad_to_blocks(buf.astype(jnp.float32), block)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    # explicit multiply: XLA rewrites division-by-constant into a reciprocal
+    # multiply in SOME lowerings (1-ulp divergence kernel-vs-oracle); an
+    # explicit f32 multiply is the same everywhere
+    scale = jnp.where(amax > 0, amax * jnp.float32(1.0 / 127.0), 1.0)
+    idx = jnp.arange(nb * block, dtype=jnp.uint32).reshape(1, nb, block)
+    u = stochastic_uniform(idx, seeds.astype(jnp.uint32)[:, None, None])
+    q = jnp.clip(jnp.floor(x / scale + u), -127.0, 127.0)
+    return q.astype(jnp.int8).reshape(W, nb * block), scale.reshape(W, nb)
+
+
+def q8_decode(values, scales, n: int, *, block: int):
+    """Inverse of :func:`q8_encode`: [W, nb*block] int8 + [W, nb] f32 scales
+    -> [W, n] float32."""
+    W = values.shape[0]
+    nb = scales.shape[1]
+    x = values.astype(jnp.float32).reshape(W, nb, block) * scales[..., None]
+    return x.reshape(W, nb * block)[:, :n]
+
+
+def topk_encode(buf, residual, *, k: int, block: int):
+    """Per-block magnitude top-k with error feedback.
+
+    Selects, within every ``block``-element block of ``acc = buf + residual``,
+    the ``k`` entries of largest magnitude (ties -> lowest index, matching the
+    kernel's iterative argmax). Returns (values f32 [W, nb*k],
+    local block indices int32 [W, nb*k], residual' f32 [W, N]) with
+    residual' = acc minus everything transmitted.
+    """
+    W, n = buf.shape
+    acc = buf.astype(jnp.float32)
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    accb, nb = _pad_to_blocks(acc, block)
+    _, idx = jax.lax.top_k(jnp.abs(accb), k)                  # [W, nb, k]
+    values = jnp.take_along_axis(accb, idx, axis=-1)
+    kept = jnp.any(idx[..., None] == jnp.arange(block), axis=-2)   # [W, nb, block]
+    res_new = jnp.where(kept, 0.0, accb).reshape(W, nb * block)[:, :n]
+    return (values.reshape(W, nb * k), idx.astype(jnp.int32).reshape(W, nb * k),
+            res_new)
+
+
+def topk_decode(values, idx, n: int, *, k: int, block: int):
+    """Inverse of :func:`topk_encode`: scatter the kept (value, index) pairs
+    back into a dense zero buffer -> [W, n] float32."""
+    W = values.shape[0]
+    nb = values.shape[1] // k
+    v = values.reshape(W, nb, k)
+    i = idx.reshape(W, nb, k)
+    onehot = (i[..., None] == jnp.arange(block)).astype(jnp.float32)
+    dense = jnp.sum(onehot * v[..., None], axis=-2)           # [W, nb, block]
+    return dense.reshape(W, nb * block)[:, :n]
+
+
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
               logit_softcap: float = 0.0, q_offset: int = 0, kv_len=None):
     """Naive full-softmax attention oracle.

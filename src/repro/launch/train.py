@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import GossipTrainer, available_protocols
+from repro.comm import available_codecs
 from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.consensus import divergence_metrics
@@ -63,11 +64,12 @@ def lm_batches(cfg, num_workers: int, per_worker: int, seq: int, seed: int = 0):
 def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int,
         alpha: float, workers: int, global_batch: int, seq: int, lr: float,
         seed: int = 0, checkpoint_dir: str = "", log_every: int = 10,
-        production_mesh: bool = False, multi_pod: bool = False):
+        production_mesh: bool = False, multi_pod: bool = False,
+        codec: str = "none"):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
-                           comm_period=tau)
+                           comm_period=tau, codec=codec)
     if production_mesh:
         mesh_cfg = MeshConfig(data=16, model=16, pods=2 if multi_pod else 1,
                               workers_per_pod=workers)
@@ -117,6 +119,8 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--method", default="elastic_gossip",
                     choices=available_protocols())
+    ap.add_argument("--codec", default="none", choices=available_codecs(),
+                    help="gossip-compression codec on the wire (repro.comm)")
     ap.add_argument("--p", type=float, default=0.25)
     ap.add_argument("--tau", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=0.5)
@@ -131,7 +135,7 @@ def main() -> None:
     run(a.arch, reduced=a.reduced, steps=a.steps, method=a.method, p=a.p, tau=a.tau,
         alpha=a.alpha, workers=a.workers, global_batch=a.global_batch, seq=a.seq,
         lr=a.lr, checkpoint_dir=a.checkpoint_dir,
-        production_mesh=a.production_mesh, multi_pod=a.multi_pod)
+        production_mesh=a.production_mesh, multi_pod=a.multi_pod, codec=a.codec)
 
 
 if __name__ == "__main__":

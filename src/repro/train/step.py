@@ -23,6 +23,7 @@ the dry-run roofline can amortize gossip cost by its true expected frequency
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, NamedTuple, Optional
 
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import comm
 from repro.api import registry
 from repro.common.config import MeshConfig, ModelConfig, ProtocolConfig, TrainConfig
 from repro.core import gossip_dist
@@ -46,6 +48,10 @@ class TrainState(NamedTuple):
     velocity: PyTree          # NAG velocity, same structure
     center: Optional[PyTree]  # EASGD center (no W dim) or None
     step: jax.Array
+    # codec state (repro.comm): error-feedback residual of a stateful codec,
+    # params-shaped f32 (sharded/donated/checkpointed like the params), or an
+    # empty CommState for stateless codecs.
+    comm: comm.CommState = comm.CommState(None)
 
 
 class DistTrainer:
@@ -59,8 +65,13 @@ class DistTrainer:
         self.grad_accum = grad_accum
         self.W = mesh_cfg.num_workers
         self.opt = train_cfg.optimizer
-        self.protocol = train_cfg.protocol
+        # TrainConfig.codec overrides the protocol's codec for this run
+        self.protocol = (dataclasses.replace(train_cfg.protocol, codec=train_cfg.codec)
+                         if train_cfg.codec else train_cfg.protocol)
         self._impl = registry.resolve(self.protocol)
+        self._codec = (comm.active_codec(self.protocol)
+                       if self._impl.pairwise else None)
+        self._codec_stateful = self._codec is not None and self._codec.stateful
         assert self.opt.name == "nag", "distributed trainer implements the paper's NAG (Alg. 5)"
 
         stacked_axes = shr.with_worker_dim(params_axes)
@@ -72,7 +83,8 @@ class DistTrainer:
         self.state_specs = TrainState(
             params=self.param_specs, velocity=self.param_specs,
             center=self.center_specs if self._impl.uses_center else None,
-            step=P())
+            step=P(),
+            comm=comm.CommState(self.param_specs if self._codec_stateful else None))
         self._gossip_exchange = None
         self._fused_gossip = None
         self._fused_nag = None
@@ -91,14 +103,25 @@ class DistTrainer:
         vel = jax.tree.map(jnp.zeros_like, stacked)
         center = (jax.tree.map(lambda x: x.copy(), single)
                   if self._impl.uses_center else None)
-        return TrainState(stacked, vel, center, jnp.zeros((), jnp.int32))
+        comm_state = comm.CommState(None)
+        if self._codec_stateful:
+            res = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), stacked)
+            res = jax.lax.with_sharding_constraint(
+                res, jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                  self.param_specs,
+                                  is_leaf=lambda x: isinstance(x, P)))
+            comm_state = comm.CommState(res)
+        return TrainState(stacked, vel, center, jnp.zeros((), jnp.int32), comm_state)
 
     def state_shapes(self) -> TrainState:
         """ShapeDtypeStructs for the dry-run (no allocation)."""
         single = jax.eval_shape(self.init_fn, jax.random.PRNGKey(0))
         center = single if self._impl.uses_center else None
+        comm_state = comm.CommState(
+            jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                         self.param_shapes) if self._codec_stateful else None)
         return TrainState(self.param_shapes, self.param_shapes, center,
-                          jax.ShapeDtypeStruct((), jnp.int32))
+                          jax.ShapeDtypeStruct((), jnp.int32), comm_state)
 
     # --------------------------------------------------------------- batches
     def batch_specs(self):
@@ -169,12 +192,13 @@ class DistTrainer:
             if comm_delta is not None:
                 p_new = jax.tree.map(jnp.add, p_new, comm_delta)
         metrics = {"loss": jnp.mean(loss)}
-        return TrainState(p_new, v_new, center_new, state.step + 1), metrics
+        return TrainState(p_new, v_new, center_new, state.step + 1, state.comm), metrics
 
     def _train_gossip_step(self, state: TrainState, batch, active, round_idx):
         """Simultaneous composition: grads and the elastic move both read the
         step-t params (paper §2.3)."""
         loss, grads = self._grads_and_loss(state.params, batch)
+        comm_new = state.comm
         if self.fused_update:
             # flat-plane path: ONE shard-mapped program does the single
             # ppermute (peer replica + gate in one buffer) AND the fused
@@ -184,16 +208,27 @@ class DistTrainer:
             # the shard_map is load-bearing: pallas_call has no GSPMD
             # sharding rule, so outside it XLA would all-gather the stacked
             # plane onto every chip.
-            p_new, v_new = self.fused_gossip(
-                state.params, state.velocity, grads, active, round_idx,
-                lr_at(self.opt, state.step), jnp.float32(self.opt.momentum))
+            eta, mu = lr_at(self.opt, state.step), jnp.float32(self.opt.momentum)
+            if self._codec_stateful:
+                p_new, v_new, res_new = self.fused_gossip(
+                    state.params, state.velocity, grads, state.comm.residual,
+                    active, round_idx, eta, mu)
+                comm_new = comm.CommState(res_new)
+            else:
+                p_new, v_new = self.fused_gossip(
+                    state.params, state.velocity, grads, active, round_idx, eta, mu)
         else:
-            exchanged = self.gossip_exchange(state.params, active, round_idx)
+            if self._codec_stateful:
+                exchanged, res_new = self._apply_gossip(
+                    state.params, state.comm.residual, active, round_idx)
+                comm_new = comm.CommState(res_new)
+            else:
+                exchanged = self._apply_gossip(state.params, active, round_idx)
             comm_delta = jax.tree.map(lambda a, b: a - b, exchanged, state.params)
             p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
             p_new = jax.tree.map(lambda p, d: p + d.astype(p.dtype), p_new, comm_delta)
         metrics = {"loss": jnp.mean(loss)}
-        return TrainState(p_new, v_new, state.center, state.step + 1), metrics
+        return TrainState(p_new, v_new, state.center, state.step + 1, comm_new), metrics
 
     def _make_gossip(self, mode: str):
         return gossip_dist.make_gossip_step(
@@ -202,10 +237,23 @@ class DistTrainer:
             mode=mode)
 
     @property
-    def gossip_exchange(self):
+    def _apply_gossip(self):
+        """The raw mode="apply" program; with a stateful codec its signature
+        is (params, residual, active, round) -> (exchanged, residual')."""
         if self._gossip_exchange is None:
             self._gossip_exchange = self._make_gossip("apply")
         return self._gossip_exchange
+
+    def gossip_exchange(self, params_stack, active, round_idx):
+        """ONE communication round applied to the stacked params — the facade
+        parity surface. Stateful codecs run against a zero residual here (the
+        live residual only advances inside the training step)."""
+        if self._codec_stateful:
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                 params_stack)
+            exchanged, _ = self._apply_gossip(params_stack, zeros, active, round_idx)
+            return exchanged
+        return self._apply_gossip(params_stack, active, round_idx)
 
     @property
     def fused_gossip(self):

@@ -1,0 +1,279 @@
+"""Distributed-engine codec tests (multi-device subprocesses, like
+test_fused_parity.py): the compressed gossip round must still be exactly ONE
+ppermute per round — now with a uint8 wire — reported comm_bytes must shrink
+by the codec's compression ratio, q8 must converge close to the uncompressed
+run, the sim mixing oracle must reproduce the dist wire bit-for-bit, and the
+topk error-feedback residual must survive a checkpoint round-trip."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SETUP = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import GossipTrainer
+    from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_worker_mesh
+
+    mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+    mesh = make_worker_mesh(mcfg)
+    W = mcfg.num_workers
+    model_cfg = get_reduced("tinyllama_1_1b")  # batch axes/shapes only
+    V, D = 64, 16
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"emb": 0.1 * jax.random.normal(k1, (V, D)),
+                "out": 0.1 * jax.random.normal(k2, (D, V))}
+
+    axes = {"emb": (None, None), "out": (None, None)}
+
+    def loss_fn(params, batch):
+        h = params["emb"][batch["tokens"]].mean(axis=1)
+        logits = h @ params["out"]
+        lab = batch["labels"][:, 0]
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(lab.shape[0]), lab])
+
+    def make_trainer(codec, fused=True, p=0.5):
+        proto = ProtocolConfig(method="elastic_gossip", comm_probability=p,
+                               moving_rate=0.5, codec=codec)
+        return GossipTrainer(engine="dist", protocol=proto,
+                             optimizer=OptimizerConfig(name="nag",
+                                                       learning_rate=0.05,
+                                                       momentum=0.9),
+                             mesh=mesh, mesh_cfg=mcfg, model_cfg=model_cfg,
+                             init_fn=init_fn, params_axes=axes,
+                             global_batch=W, seq_len=16,
+                             loss_fn=loss_fn, fused_update=fused, seed=3)
+
+    S, pw = 16, 1
+    rng = np.random.RandomState(0)
+    batches = [{"tokens": jnp.asarray(rng.randint(0, V, (W, pw, S))),
+                "labels": jnp.asarray(rng.randint(0, V, (W, pw, S)))}
+               for _ in range(6)]
+
+    def train(codec, fused=True, p=0.5, n=6):
+        tr = make_trainer(codec, fused, p)
+        state = tr.init_state(0)
+        fired = 0
+        for b in batches[:n]:
+            state, m = tr.step(state, b)
+            fired += bool(m["fired"])
+        return tr, state, fired, float(m["comm_bytes"]), float(m["loss"])
+"""
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_codec_round_is_one_uint8_ppermute():
+    """Acceptance (a): with a codec the compiled gossip programs still contain
+    exactly num_rounds ppermutes, and every one of them moves the PACKED
+    uint8 wire buffer — the collective's egress is the compressed bytes."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.common.config import MeshConfig, ProtocolConfig
+        from repro.core import gossip_dist
+        from repro.launch.mesh import make_worker_mesh
+
+        mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+        mesh = make_worker_mesh(mcfg)
+        W = mcfg.num_workers
+        params = {"w": jax.random.normal(jax.random.PRNGKey(1), (W, 16, 8)),
+                  "b": jax.random.normal(jax.random.PRNGKey(2), (W, 8)),
+                  "c": jax.random.normal(jax.random.PRNGKey(3), (W, 5))}
+        pspecs = {k: P(("pod", "worker")) for k in params}
+        params = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                              params, pspecs)
+        active = jnp.ones((W,), jnp.float32)
+
+        def collect(jaxpr, out):
+            for e in jaxpr.eqns:
+                if e.primitive.name == "ppermute":
+                    out.append(e)
+                for v in e.params.values():
+                    for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                        if hasattr(sub, "jaxpr"):
+                            collect(sub.jaxpr, out)
+                        elif hasattr(sub, "eqns"):
+                            collect(sub, out)
+            return out
+
+        for codec in ("q8", "topk"):
+            cfg = ProtocolConfig(method="elastic_gossip", comm_probability=0.5,
+                                 moving_rate=0.37, codec=codec, codec_block=128)
+            for mode in ("apply", "peer", "fused"):
+                step = gossip_dist.make_gossip_step(mesh, mcfg, cfg, pspecs, mode=mode)
+                stateful = step.stateful_codec
+                if mode == "fused":
+                    vel = jax.tree.map(jnp.zeros_like, params)
+                    grads = jax.tree.map(jnp.ones_like, params)
+                    args = ((params, vel, grads) +
+                            ((jax.tree.map(jnp.zeros_like, params),) if stateful else ())
+                            + (active, jnp.int32(0), jnp.float32(0.01), jnp.float32(0.9)))
+                elif stateful:
+                    args = (params, jax.tree.map(jnp.zeros_like, params), active,
+                            jnp.int32(0))
+                else:
+                    args = (params, active, jnp.int32(0))
+                jaxpr = jax.make_jaxpr(lambda *a: step(*a))(*args)
+                pp = collect(jaxpr.jaxpr, [])
+                dts = {str(e.invars[0].aval.dtype) for e in pp}
+                assert len(pp) == step.num_rounds, (codec, mode, len(pp))
+                assert dts == {"uint8"}, (codec, mode, dts)
+                print(codec, mode, "ppermutes:", len(pp), "dtype:", dts)
+        print("ONE_UINT8_PPERMUTE_OK")
+    """)
+    assert "ONE_UINT8_PPERMUTE_OK" in out
+
+
+@pytest.mark.slow
+def test_dist_codec_bytes_parity_and_convergence():
+    """Acceptance (b) + (c) on the dist engine, plus fused==unfused parity
+    under compression: reported comm_bytes shrink by the codec's analytic
+    compression ratio, and a short q8 elastic-gossip run stays within 5% mean
+    relative parameter distance (and 2% final loss) of the uncompressed run."""
+    out = run_sub(SETUP + """
+    finals = {}
+    for codec in ("none", "q8", "topk"):
+        for fused in (True, False):
+            tr, state, fired, cb, loss = train(codec, fused)
+            finals[(codec, fused)] = (state, fired, cb, loss)
+            if codec == "topk":
+                r1 = sum(float(jnp.abs(r).sum())
+                         for r in jax.tree.leaves(state.comm.residual))
+                assert r1 > 0, "residual never advanced"
+
+    for codec in ("none", "q8", "topk"):
+        (a, fa, ca, _), (b, fb, cb_, _) = finals[(codec, True)], finals[(codec, False)]
+        assert fa == fb and fa > 0 and ca == cb_, (codec, fa, fb, ca, cb_)
+        for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-6, err_msg=codec)
+        print(codec, "FUSED_PARITY_OK")
+
+    # (b) accounted bytes shrink by the analytic wire ratio
+    tr_none, tr_q8 = make_trainer("none"), make_trainer("q8")
+    expect = tr_none.comm_cost().bytes_per_event / tr_q8.comm_cost().bytes_per_event
+    got = finals[("none", True)][2] / finals[("q8", True)][2]
+    assert abs(got - expect) < 1e-9 * expect, (got, expect)
+    assert got > 3.5, got
+    print("BYTES_RATIO_OK", got)
+
+    # (c) q8 converges within tolerance of the uncompressed run
+    pn = np.concatenate([np.asarray(x).ravel()
+                         for x in jax.tree.leaves(finals[("none", True)][0].params)])
+    pq = np.concatenate([np.asarray(x).ravel()
+                         for x in jax.tree.leaves(finals[("q8", True)][0].params)])
+    rel = np.mean(np.abs(pq - pn)) / np.mean(np.abs(pn))
+    dl = abs(finals[("q8", True)][3] - finals[("none", True)][3])
+    assert rel < 0.05, rel
+    assert dl < 0.02 * abs(finals[("none", True)][3]), dl
+    print("Q8_CONVERGENCE_OK rel", rel, "dloss", dl)
+    print("ALL_DIST_CODEC_OK")
+    """)
+    assert "ALL_DIST_CODEC_OK" in out
+
+
+@pytest.mark.slow
+def test_dist_topk_residual_checkpoint_roundtrip(tmp_path):
+    """Satellite: CommState (topk error-feedback residual) through
+    GossipTrainer save/restore on the dist engine — the resumed run must
+    CONTINUE the residual (bit-identical next step), not reset it."""
+    out = run_sub(SETUP + f"""
+    import os
+    path = os.path.join({str(tmp_path)!r}, "ck.npz")
+    tr = make_trainer("topk", p=1.0)
+    state = tr.init_state(0)
+    for b in batches[:4]:
+        state, m = tr.step(state, b)
+    res_before = [np.asarray(r) for r in jax.tree.leaves(state.comm.residual)]
+    assert sum(np.abs(a).sum() for a in res_before) > 0
+    tr.save_checkpoint(path, state, meta={{"step": 4}})
+
+    tr2 = make_trainer("topk", p=1.0)
+    restored, meta = tr2.load_checkpoint(path, tr2.init_state(0))
+    for a, b in zip(res_before, jax.tree.leaves(restored.comm.residual)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    s_resumed, _ = tr2.step(restored, batches[4])
+    s_cont, _ = tr.step(state, batches[4])
+    for a, b in zip(jax.tree.leaves(s_cont.params), jax.tree.leaves(s_resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_cont.comm.residual),
+                    jax.tree.leaves(s_resumed.comm.residual)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("TOPK_RESIDUAL_CKPT_OK")
+    """)
+    assert "TOPK_RESIDUAL_CKPT_OK" in out
+
+
+@pytest.mark.slow
+def test_facade_parity_sim_vs_dist_with_q8():
+    """The facade parity surface stays engine-exact UNDER COMPRESSION: both
+    engines derive the wire noise from (round, worker), so the sim mixing
+    oracle reproduces the dist engine's q8-compressed exchange."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.api import GossipTrainer
+        from repro.common.config import MeshConfig, ProtocolConfig
+        from repro.launch.mesh import make_worker_mesh
+
+        mcfg = MeshConfig(data=4, model=1, pods=2, workers_per_pod=4)
+        mesh = make_worker_mesh(mcfg)
+        W = mcfg.num_workers
+
+        def init_fn(key):
+            k1, k2 = jax.random.split(key)
+            return {"w": jax.random.normal(k1, (16, 8)),
+                    "b": jax.random.normal(k2, (8,))}
+
+        axes = {"w": (None, None), "b": (None,)}
+        params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (W,) + x.shape) +
+                              0.1 * jax.random.normal(jax.random.PRNGKey(7),
+                                                      (W,) + x.shape),
+                              init_fn(jax.random.PRNGKey(1)))
+        pspec = {"w": P(("pod", "worker")), "b": P(("pod", "worker"))}
+        params = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                              params, pspec)
+        active = jnp.array(np.random.RandomState(0).rand(W) < 0.6, jnp.float32)
+        dummy = lambda p, b: jnp.zeros(())
+
+        cases = [(m, "q8") for m in ("elastic_gossip", "gossiping_pull",
+                                     "gossiping_push")]
+        cases += [("elastic_gossip", "topk")]
+        for method, codec in cases:
+            proto = ProtocolConfig(method=method, comm_probability=0.5,
+                                   moving_rate=0.37, codec=codec)
+            dist = GossipTrainer(engine="dist", protocol=proto, mesh=mesh,
+                                 mesh_cfg=mcfg, model_cfg=None, loss_fn=dummy,
+                                 init_fn=init_fn, params_axes=axes,
+                                 global_batch=8, seq_len=4)
+            sim = GossipTrainer(engine="sim", protocol=proto, loss_fn=dummy,
+                                num_workers=W, mesh_cfg=mcfg)
+            for r in range(dist.num_gossip_rounds):
+                out_d = dist.gossip_exchange(params, active, r)
+                out_s = sim.gossip_exchange(params, active, r)
+                for k in ("w", "b"):
+                    np.testing.assert_allclose(np.asarray(out_d[k]),
+                                               np.asarray(out_s[k]),
+                                               rtol=1e-6, atol=1e-6,
+                                               err_msg=f"{method}/{codec} round {r} {k}")
+            print(method, codec, "CODEC_PARITY_OK")
+        print("ALL_CODEC_PARITY_OK")
+    """)
+    assert "ALL_CODEC_PARITY_OK" in out

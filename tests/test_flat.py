@@ -82,6 +82,62 @@ def test_leaves_must_share_leading_dims():
         FlatSpec.build({"a": jnp.ones((4, 3)), "b": jnp.ones((5, 3))}, leading=1)
 
 
+def test_degenerate_leaves_zero_size_and_scalar_roundtrip():
+    """Zero-size and scalar leaves must round-trip: a zero-size leaf occupies
+    a zero-width slot (offset unchanged — two leaves may share an offset) and
+    a scalar leaf occupies one lane-padded slot. Guards the codec kernels'
+    block-index math against degenerate offsets."""
+    W = 4
+    tree = {"empty": jnp.zeros((W, 0), jnp.float32),           # zero-size
+            "scalar": jnp.arange(W, dtype=jnp.float32),        # per-item ()
+            "mat": jnp.arange(W * 6, dtype=jnp.float32).reshape(W, 2, 3),
+            "empty2": jnp.zeros((W, 3, 0), jnp.float32)}
+    spec = FlatSpec.build(tree, leading=1)
+    slot = {jax.tree_util.tree_flatten_with_path(tree)[0][i][0][0].key: s
+            for i, s in enumerate(spec.slots)}
+    assert slot["empty"].size == 0 and slot["empty2"].size == 0
+    assert slot["scalar"].size == 1 and slot["scalar"].shape == ()
+    # zero-size slots consume no plane: offsets stay lane-aligned and the
+    # total is exactly the two real slots
+    assert all(s.offset % LANE == 0 for s in spec.slots)
+    assert spec.num_elements() == 2 * LANE
+    bufs = spec.flatten(tree)
+    assert bufs["float32"].shape == (W, 2 * LANE)
+    back = spec.unflatten(bufs)
+    for k in tree:
+        assert back[k].shape == tree[k].shape and back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(tree[k]), np.asarray(back[k]))
+
+
+def test_degenerate_leaves_survive_codec_roundtrip():
+    """The codec kernels tile the [W, total] plane into blocks: degenerate
+    slots (zero-size, scalar) must not corrupt neighbors through a
+    quantize/sparsify round-trip."""
+    from repro.comm import codec_seeds, resolve_codec
+    from repro.common.config import ProtocolConfig
+    W = 2
+    tree = {"empty": jnp.zeros((W, 0), jnp.float32),
+            "scalar": 100.0 + jnp.arange(W, dtype=jnp.float32),
+            "mat": jax.random.normal(jax.random.PRNGKey(0), (W, 40))}
+    spec = FlatSpec.build(tree, leading=1)
+    bufs = spec.flatten(tree)
+    seeds = codec_seeds(0, jnp.arange(W))
+    for name in ("q8", "topk"):
+        codec = resolve_codec(ProtocolConfig(codec=name, codec_block=128,
+                                             codec_topk_frac=0.5))
+        hat = {}
+        for k, b in bufs.items():
+            res = jnp.zeros(b.shape, jnp.float32) if codec.stateful else None
+            hat[k], _ = codec.roundtrip(b, seeds, residual=res)
+        back = spec.unflatten(hat)
+        assert back["empty"].shape == (W, 0)
+        # the large scalar dominates its block's scale/selection; it must
+        # reconstruct to within one quantization step
+        np.testing.assert_allclose(np.asarray(back["scalar"]),
+                                   np.asarray(tree["scalar"]), rtol=0.02,
+                                   err_msg=name)
+
+
 # ---------------------------------------------------------------------------
 # flat fused kernels (interpret mode) vs ref oracles
 # ---------------------------------------------------------------------------
