@@ -57,12 +57,12 @@ def _measure_sim(codec: str, steps: int, hidden: int):
     y = jnp.asarray(rng.randint(0, 10, (WORKERS, 32)))
     for _ in range(3):   # warmup / compile
         state, m = trainer.step(state, (x, y))
-    jax.block_until_ready(state.params)
+    jax.block_until_ready(state.theta)
     base = float(m["comm_bytes"])
     t0 = time.time()
     for _ in range(steps):
         state, m = trainer.step(state, (x, y))
-    jax.block_until_ready(state.params)
+    jax.block_until_ready(state.theta)
     dt = time.time() - t0
     accounted = (float(m["comm_bytes"]) - base) / steps
     return {"steps_per_sec": round(steps / dt, 3),
@@ -120,12 +120,12 @@ def _measure_dist(steps: int):
             state = tr.init_state(0)
             for _ in range(2):   # warmup / compile
                 state, m = tr.step(state, batch)
-            jax.block_until_ready(state.params)
+            jax.block_until_ready(state.theta)
             base = float(m["comm_bytes"])
             t0 = time.time()
             for _ in range(STEPS):
                 state, m = tr.step(state, batch)
-            jax.block_until_ready(state.params)
+            jax.block_until_ready(state.theta)
             dt = time.time() - t0
             out[codec] = {
                 "steps_per_sec": round(STEPS / dt, 3),

@@ -25,6 +25,7 @@ TABLES = {
     "comm_compress": comm_compress.main,
     "roofline": roofline_bench.main,
     "fused_step": fused_step.main,
+    "fused_step_resident": fused_step.resident_main,
 }
 
 

@@ -3,6 +3,11 @@ Elastic Gossip vs Gossiping SGD vs All-reduce on 4 workers (exact Alg. 4/5
 semantics via the simulation engine), reporting Rank-0 and Aggregate accuracy
 like Table 4.1.
 
+Everything runs through the ``repro.api.GossipTrainer`` facade over the
+flat-resident ``FlatState`` (params live as flat per-dtype buffers; the
+Rank-0 / Aggregate evaluations read the lazy ``state.params`` views at the
+end) — see examples/quickstart.py for the surface tour.
+
     PYTHONPATH=src REPRO_BENCH_STEPS=400 python examples/mnist_gossip.py
 """
 from benchmarks.common import CSV_HEADER, run_config

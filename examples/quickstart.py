@@ -13,14 +13,20 @@ production shard_map engine — see repro/launch/train.py, which is this loop
 at scale. Any protocol registered with ``@register_protocol`` works here by
 name (``available_protocols()`` lists them).
 
-Pairwise protocols run on the **flat parameter plane** by default
-(``fused_update=True``): parameters flatten into one lane-aligned buffer per
-dtype (repro/common/flat.py), the distributed gossip round is a single
-collective-permute, and NAG + the gossip displacement land in one fused
-Pallas pass (repro/kernels/fused_update.py). Pass ``fused_update=False`` to
-``GossipTrainer`` to force the per-leaf reference path — numerically
+The trainer state is a flat-RESIDENT ``repro.api.FlatState``: parameters and
+velocity LIVE as one lane-aligned buffer per dtype (repro/common/flat.py) —
+the wire layout — from ``init_state`` to checkpoint, flattened exactly once.
+``state.params`` / ``state.velocity`` are lazy slice views for the
+boundaries (eval, checkpoints, ``rank0_params``/``consensus_params``); the
+hot loop never re-flattens (zero per-step concat copies — the jaxpr is
+regression-tested). On this plane the distributed gossip round is a single
+collective-permute and NAG + the gossip displacement land in one fused
+Pallas pass with the buffers donated in place
+(repro/kernels/fused_update.py). Pass ``fused_update=False`` to
+``GossipTrainer`` to force the per-bucket reference path — numerically
 equivalent (parity-tested), just more HBM sweeps; see
-benchmarks/fused_step.py / BENCH_fused_step.json for the byte accounting.
+benchmarks/fused_step.py / BENCH_fused_step.json for the byte accounting and
+the resident-vs-reflatten steps/sec.
 
 The wire itself is compressible (repro/comm): ``codec="q8"`` quantizes the
 flat plane to stochastic-rounded int8 (+ per-block scales) before it leaves

@@ -1,6 +1,12 @@
 """repro.api — the public surface of the reproduction.
 
-Three pieces (DESIGN: ISSUE 1):
+Four pieces (DESIGN: ISSUES 1 & 4):
+
+- the **FlatState contract** (:mod:`repro.api.state`): ONE engine-agnostic,
+  flat-RESIDENT trainer state — params/velocity live as per-dtype flat
+  buffers on the wire layout from init to checkpoint; pytrees exist only as
+  lazy slice-view properties (``state.params``) at the loss/eval/checkpoint
+  boundaries;
 
 - the **protocol registry** (:mod:`repro.api.registry`): every algorithm is a
   :class:`Protocol` class registered under a name; ``available_protocols()``
@@ -40,6 +46,7 @@ from repro.api.protocols import (  # noqa: F401
     comm_cost,
     stacked_param_bytes,
 )
+from repro.api.state import FlatState  # noqa: F401
 
 # Heavier symbols (they pull in the engines) load lazily so importing
 # repro.api from core modules stays cycle-free and cheap.

@@ -172,20 +172,27 @@ class Protocol:
 
     def comm_update(self, key: jax.Array, active: jax.Array, theta_stack: PyTree,
                     state: ProtocolState, step=None,
-                    transmit: Optional[PyTree] = None) -> tuple[PyTree, ProtocolState]:
+                    transmit: Optional[PyTree] = None,
+                    wire_bytes: Optional[float] = None) -> tuple[PyTree, ProtocolState]:
         """Communication-related component on stacked params [W, ...].
 
-        ``active`` is the participation mask from :meth:`comm_gate`; ``step``
-        (optional) enables the alpha schedule (beyond-paper). ``transmit``
-        (optional) is the stacked tree peers actually RECEIVE — the codec's
+        ``theta_stack`` is ANY stacked pytree — a parameter tree, or (the
+        flat-resident engines' hot path) a dict of ``[W, N]`` flat-plane
+        buffers; the mixing is leaf-wise either way. ``active`` is the
+        participation mask from :meth:`comm_gate`; ``step`` (optional)
+        enables the alpha schedule (beyond-paper). ``transmit`` (optional) is
+        the stacked tree peers actually RECEIVE — the codec's
         decode(encode(theta)) reconstruction: the mixing keeps each worker's
         own (diagonal) contribution exact and reads the off-diagonal
         contributions from ``transmit``, exactly like the distributed engine
-        where only the wire payload is lossy. The default honors the
-        ``pairwise`` capability flag: pairwise protocols mix via
-        :meth:`mix_matrix` over :meth:`sample_peers` (so a registered subclass
-        only needs the matrix + gate/coef rule); everything else is the
-        no-communication identity.
+        where only the wire payload is lossy. ``wire_bytes`` (optional) is
+        the static per-event egress of one replica for the live accounting —
+        flat-resident callers MUST pass it (their buffers carry lane padding,
+        so deriving it from ``theta_stack`` would over-count); tree callers
+        may omit it. The default honors the ``pairwise`` capability flag:
+        pairwise protocols mix via :meth:`mix_matrix` over
+        :meth:`sample_peers` (so a registered subclass only needs the matrix
+        + gate/coef rule); everything else is the no-communication identity.
         """
         if not self.pairwise:
             return theta_stack, state
@@ -196,7 +203,7 @@ class Protocol:
         else:
             theta_new = _topology().apply_mix_split(mix, theta_stack, transmit)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-        units, bytes_ = self._accrue_bytes(state, active, theta_stack)
+        units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes)
         return theta_new, ProtocolState(state.center, rounds, units, bytes_)
 
     # ------------------------------------- pairwise (dist-engine) realization
@@ -233,12 +240,17 @@ class Protocol:
         return float(comm.wire_param_bytes(comm.resolve_codec(self.cfg), spec))
 
     def _accrue_bytes(self, state: ProtocolState, active: jax.Array,
-                      theta_stack: PyTree) -> tuple[jax.Array, jax.Array]:
+                      theta_stack: PyTree,
+                      wire_bytes: Optional[float] = None) -> tuple[jax.Array, jax.Array]:
         """(comm_units', comm_bytes'): the exact integer participation count
         plus the derived per-worker egress — one wire-compressed replica per
-        participating worker, averaged over workers."""
+        participating worker, averaged over workers. ``wire_bytes`` overrides
+        the per-replica wire size (flat-resident callers pass their cached
+        exact value; the padded buffers would over-count)."""
         W = active.shape[0]
-        per_event = self.comm_cost(self.wire_stack_bytes(theta_stack), W).bytes_per_event
+        if wire_bytes is None:
+            wire_bytes = self.wire_stack_bytes(theta_stack)
+        per_event = self.comm_cost(wire_bytes, W).bytes_per_event
         units = _saturating_units_add(state.comm_units,
                                       jnp.sum(jnp.asarray(active).astype(jnp.int32)))
         return units, (per_event / W) * units.astype(_bytes_dtype())
@@ -267,11 +279,14 @@ class AllReduceSGD(Protocol):
             lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
             grads_stack)
 
-    def comm_update(self, key, active, theta_stack, state, step=None, transmit=None):
+    def comm_update(self, key, active, theta_stack, state, step=None, transmit=None,
+                    wire_bytes=None):
         # parameters untouched, but the every-step ring all-reduce egress is
         # accounted so live runs expose the paper's communication-cost gap.
         W = active.shape[0]
-        per_event = self.comm_cost(stacked_param_bytes(theta_stack), W).bytes_per_event
+        if wire_bytes is None:
+            wire_bytes = stacked_param_bytes(theta_stack)
+        per_event = self.comm_cost(wire_bytes, W).bytes_per_event
         # every worker, every step
         units = _saturating_units_add(state.comm_units, jnp.int32(W))
         return theta_stack, state._replace(
@@ -319,11 +334,12 @@ class EASGD(Protocol):
         center_new = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
         return delta, center_new
 
-    def comm_update(self, key, active, theta_stack, state, step=None, transmit=None):
+    def comm_update(self, key, active, theta_stack, state, step=None, transmit=None,
+                    wire_bytes=None):
         delta, center_new = self.center_step(theta_stack, state.center, active, step=step)
         theta_new = jax.tree.map(lambda x, d: x + d, theta_stack, delta)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-        units, bytes_ = self._accrue_bytes(state, active, theta_stack)
+        units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes)
         return theta_new, ProtocolState(center_new, rounds, units, bytes_)
 
     def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:

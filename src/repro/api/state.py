@@ -1,0 +1,131 @@
+"""FlatState — the engine-agnostic, flat-RESIDENT trainer state contract.
+
+Both engines (``repro.core.gossip_sim`` and ``repro.train.step``) keep their
+evolving state on the flat parameter plane (:mod:`repro.common.flat`): params
+and velocity are ONE lane-aligned ``[W, total]`` buffer per dtype bucket, from
+init to checkpoint. Pytrees exist only at the boundaries — model init, the
+loss/eval callback, and checkpoint interop — as LAZY slice-view properties
+(:attr:`FlatState.params`, :attr:`FlatState.velocity`, ...), so the hot loop
+never pays the per-step flatten/unflatten concat copies the PR-2 layout paid
+(see BENCH_fused_step.json): the gossip exchange, the mixing-matrix oracle,
+the codec round-trip and the fused Pallas update all read and write the
+resident buffers directly, and the step's jaxpr contains no re-flattening
+``concatenate`` at all (guarded by tests/test_flat_state.py).
+
+The contract, engine by engine:
+
+======================  ==========================  =========================
+field                   ``engine="sim"``            ``engine="dist"``
+======================  ==========================  =========================
+``spec``                static :class:`FlatSpec` (pytree aux data, not traced)
+``theta``               ``{bucket: [W, N]}``        same, sharded on the
+                                                    leading (replica) dim
+``opt``                 ``OptState`` whose mu/nu    ``OptState`` (NAG: mu is
+                        are buffer dicts            the velocity buffers)
+``center``              (unused — lives in          EASGD center,
+                        ``proto.center``)           ``{bucket: [N]}``
+``proto``               ``ProtocolState`` (center   ``None`` (accounting is
+                        + live byte accounting)     host-side in the facade)
+``comm``                ``CommState`` — stateful-codec residual as f32 buffers
+``key``                 traced PRNG (schedule)      ``None`` (host schedule)
+``step``                int32 step counter          same
+======================  ==========================  =========================
+
+``spec`` is pytree *metadata*: two FlatStates are jit-cache-compatible iff
+their specs are equal, and tree ops (donation, sharding trees, checkpoint
+path flattening) see only the buffers. New engines implement the backend
+interface in :mod:`repro.api.trainer` against this one state type.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.common.flat import FlatSpec
+
+PyTree = Any
+Buffers = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatState:
+    """Flat-resident trainer state (see module docstring for the contract)."""
+
+    spec: FlatSpec                    # static layout — pytree aux data
+    theta: Buffers                    # resident params, [*lead, total] per dtype
+    opt: Any                          # OptState with buffer-dict mu/nu
+    center: Optional[Buffers] = None  # dist EASGD center, lead () buffers
+    proto: Optional[Any] = None       # sim ProtocolState (center + accounting)
+    comm: Any = None                  # CommState (codec residual buffers)
+    key: Optional[jax.Array] = None   # sim traced PRNG; dist None
+    step: Any = None                  # int32 step counter
+
+    # ------------------------------------------------------- lazy tree views
+    @property
+    def params(self) -> PyTree:
+        """Parameter pytree as slice/reshape VIEWS of the resident buffers —
+        boundary use only (loss/eval/checkpoint); XLA fuses the views into
+        consumers instead of materializing copies."""
+        return self.spec.unflatten(self.theta)
+
+    @property
+    def velocity(self) -> Optional[PyTree]:
+        """Velocity (NAG) / first-moment pytree view, or None (e.g. sgd)."""
+        mu = getattr(self.opt, "mu", None)
+        return self.spec.unflatten(mu) if mu else None
+
+    @property
+    def center_params(self) -> Optional[PyTree]:
+        """Single-replica EASGD center view (either engine), or None."""
+        bufs = self.center
+        if bufs is None and self.proto is not None:
+            bufs = self.proto.center
+        return None if bufs is None else self.spec.with_lead(()).unflatten(bufs)
+
+    # ------------------------------------------------------------- utilities
+    def replace(self, **kw) -> "FlatState":
+        return dataclasses.replace(self, **kw)
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Named nested-dict pytree of the traced fields — the checkpoint v2
+        payload (flat buffers under readable paths; no treedef needed to read
+        it back). ``spec`` is intentionally absent: it is static layout,
+        persisted separately as the checkpoint's FlatSpec manifest."""
+        opt = self.opt
+        return {
+            "theta": self.theta,
+            "opt": {"step": opt.step, "mu": opt.mu, "nu": opt.nu},
+            "center": self.center,
+            "proto": (None if self.proto is None else {
+                "center": self.proto.center,
+                "comm_rounds": self.proto.comm_rounds,
+                "comm_units": self.proto.comm_units,
+                "comm_bytes": self.proto.comm_bytes,
+            }),
+            "comm": {"residual": getattr(self.comm, "residual", None)},
+            "key": self.key,
+            "step": self.step,
+        }
+
+    def from_state_dict(self, d: Dict[str, Any]) -> "FlatState":
+        """Rebuild a FlatState from :meth:`state_dict` output, reusing this
+        state's spec and the container types of its opt/proto/comm fields."""
+        opt = type(self.opt)(d["opt"]["step"], d["opt"]["mu"], d["opt"]["nu"])
+        proto = self.proto
+        if proto is not None:
+            proto = type(proto)(d["proto"]["center"], d["proto"]["comm_rounds"],
+                                d["proto"]["comm_units"], d["proto"]["comm_bytes"])
+        comm = self.comm
+        if comm is not None:
+            comm = type(comm)(d["comm"]["residual"])
+        return FlatState(spec=self.spec, theta=d["theta"], opt=opt,
+                         center=d["center"], proto=proto, comm=comm,
+                         key=d["key"], step=d["step"])
+
+
+jax.tree_util.register_dataclass(
+    FlatState,
+    data_fields=["theta", "opt", "center", "proto", "comm", "key", "step"],
+    meta_fields=["spec"])

@@ -26,6 +26,13 @@ The facade owns everything the old drivers leaked to callers:
   ``engine="sim"``) over the same matching schedule, so engines are testable
   against each other purely through this facade.
 
+Both engines speak ONE state type — :class:`repro.api.state.FlatState` — the
+flat-RESIDENT contract: params/velocity are per-dtype flat buffers on the
+wire layout from :meth:`init_state` to :meth:`save_checkpoint`; pytrees
+appear only as lazy views (``state.params``) at the boundaries. Backends
+implement init_state/step/gossip_exchange/schedule_state against FlatState
+natively.
+
 Engines:
 
 - ``engine="sim"``  exact Alg. 1-6 on stacked replicas
@@ -187,22 +194,25 @@ class GossipTrainer:
     # ---------------------------------------------------------- checkpointing
     def save_checkpoint(self, path: str, state, meta: Optional[dict] = None) -> None:
         """Trainer state + schedule state + host accounting + protocol
-        config, atomically (schedule rides in the metadata via io.save)."""
+        config, atomically, in checkpoint format v2: the resident flat
+        buffers plus a FlatSpec manifest (schedule rides in the metadata via
+        io.save_state)."""
         from repro.checkpoint import io
         meta = dict(meta or {})
         meta.setdefault("protocol", dataclasses.asdict(self.protocol))
         meta.update(self._backend.checkpoint_extra())
-        io.save(path, state._asdict(), meta=meta,
-                schedule=getattr(self._backend, "sched", None))
+        io.save_state(path, state, meta=meta,
+                      schedule=getattr(self._backend, "sched", None))
 
     def load_checkpoint(self, path: str, state_like):
-        """Restore a checkpoint into the structure of ``state_like`` AND
-        rewind the communication schedule / host-side accounting to the saved
-        position. Returns (state, meta)."""
+        """Restore a checkpoint into the FlatState structure of
+        ``state_like`` AND rewind the communication schedule / host-side
+        accounting to the saved position. Legacy (pre-FlatState) pytree
+        checkpoints are converted bit-exactly on load. Returns (state, meta).
+        """
         from repro.checkpoint import io
-        restored = io.restore(path, state_like._asdict())
-        state = type(state_like)(**restored)
         meta = io.load_meta(path)
+        state = io.restore_state(path, state_like, meta=meta)
         sched = getattr(self._backend, "sched", None)
         if sched is not None:
             io.restore_schedule(path, sched)
@@ -311,7 +321,7 @@ class _SimBackend(_MatchingScheduleMixin):
         return {}
 
     def restore_schedule(self, sched_state: dict) -> None:
-        pass  # sim scheduling lives in SimState.key, restored with the state
+        pass  # sim scheduling lives in FlatState.key, restored with the state
 
     def checkpoint_extra(self) -> dict:
         return {}  # comm_bytes lives in ProtocolState, saved with the state

@@ -1,19 +1,31 @@
 """Checkpointing: flat-key npz for pytrees + json metadata.
 
-Handles the trainer's full state (stacked replicas, velocity, EASGD center,
-step) and the gossip scheduler's host-side state, so a run can resume with
-bit-identical protocol behavior (same PRNG stream position):
-:func:`save` accepts ``schedule=sched`` to persist
-:meth:`repro.core.scheduler.GossipSchedule.state` in the metadata and
-:func:`restore_schedule` rewinds a scheduler from it. The
-``repro.api.GossipTrainer`` facade calls both from its
+Two generations:
+
+- **v2 (flat-resident)** — :func:`save_state` / :func:`restore_state` persist
+  a :class:`repro.api.state.FlatState` AS ITS FLAT BUFFERS (one ``[W, total]``
+  array per dtype bucket under readable paths like ``theta::float32``),
+  together with a JSON **FlatSpec manifest** (leaf paths, offsets, shapes,
+  dtypes) in the metadata — the checkpoint is the wire layout, written with
+  zero per-leaf traffic, and self-describing enough to be re-assembled into
+  pytrees without the producing code.
+- **v1 (legacy pytree)** — :func:`save` / :func:`restore`: one npz entry per
+  tree leaf. :func:`restore_state` detects v1 payloads and converts them
+  bit-exactly into the requested FlatState (flattening is deterministic), so
+  pre-FlatState checkpoints resume seamlessly.
+
+Both generations persist the gossip scheduler's host-side state so a run can
+resume with bit-identical protocol behavior (same PRNG stream position):
+``schedule=sched`` stores :meth:`repro.core.scheduler.GossipSchedule.state`
+in the metadata and :func:`restore_schedule` rewinds a scheduler from it. The
+``repro.api.GossipTrainer`` facade calls these from its
 ``save_checkpoint``/``load_checkpoint``.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,14 +34,19 @@ import numpy as np
 PyTree = Any
 SEP = "::"
 
+FLAT_FORMAT = 2       # checkpoint format version written by save_state
+
+
+def _path_key(path) -> str:
+    return SEP.join(
+        str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+        for p in path)
+
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
-            for p in path)
-        flat[key or "_root"] = np.asarray(leaf)
+        flat[_path_key(path) or "_root"] = np.asarray(leaf)
     return flat
 
 
@@ -56,13 +73,139 @@ def restore(path: str, like: PyTree) -> PyTree:
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path_keys, ref in paths:
-        key = SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
-            for p in path_keys) or "_root"
+        key = _path_key(path_keys) or "_root"
         arr = flat[key]
         assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
         leaves.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint v2: flat-resident FlatState payloads + FlatSpec manifest
+# ---------------------------------------------------------------------------
+
+def _leaf_keys(spec) -> List[str]:
+    """Per-slot path-key strings of the spec's parameter tree, flatten order
+    (matches the v1 per-leaf npz keys under any given prefix)."""
+    token = jax.tree_util.tree_unflatten(spec.treedef, list(range(len(spec.slots))))
+    entries = jax.tree_util.tree_flatten_with_path(token)[0]
+    keys = [None] * len(spec.slots)
+    for path, idx in entries:
+        keys[idx] = _path_key(path)
+    return keys
+
+
+def flat_spec_manifest(spec) -> dict:
+    """JSON-serializable description of a FlatSpec: enough to locate every
+    parameter inside the saved flat buffers without the producing code."""
+    return {
+        "leading": spec.leading,
+        "lead_shape": list(spec.lead_shape),
+        "align": spec.align,
+        "totals": {k: int(n) for k, n in spec.totals.items()},
+        "slots": [{"path": key, "bucket": s.bucket, "offset": s.offset,
+                   "size": s.size, "shape": list(s.shape), "dtype": s.dtype.name}
+                  for key, s in zip(_leaf_keys(spec), spec.slots)],
+    }
+
+
+def save_state(path: str, state, meta: Optional[dict] = None,
+               schedule=None) -> None:
+    """Persist a :class:`repro.api.state.FlatState` in checkpoint format v2:
+    the resident flat buffers under named paths plus the FlatSpec manifest
+    (and optionally the gossip schedule) in the metadata."""
+    meta = dict(meta or {})
+    meta["format"] = FLAT_FORMAT
+    meta["flat_spec"] = flat_spec_manifest(state.spec)
+    save(path, state.state_dict(), meta=meta, schedule=schedule)
+
+
+def _legacy_to_state(flat: Dict[str, np.ndarray], like):
+    """Convert a v1 per-leaf-pytree payload (SimState/TrainState era) into
+    ``like``'s FlatState structure, bit-exactly (flattening is
+    deterministic). Handles both legacy layouts: the sim engine's
+    ``{params, opt(step, mu, nu), proto, key, step, comm}`` NamedTuple dump
+    and the dist engine's ``{params, velocity, center, step, comm}``."""
+    spec = like.spec
+    leaf_keys = _leaf_keys(spec)
+
+    def tree_bufs(prefix: str, lead: bool = True):
+        keys = [prefix + SEP + k if k else prefix for k in leaf_keys]
+        if not all(k in flat for k in keys):
+            return None
+        leaves = [jnp.asarray(flat[k]) for k in keys]
+        tree = jax.tree_util.tree_unflatten(spec.treedef, leaves)
+        return (spec if lead else spec.with_lead(())).flatten(tree)
+
+    def scalar(key, ref):
+        return jnp.asarray(flat[key], dtype=ref.dtype) if key in flat else ref
+
+    theta = tree_bufs("params")
+    assert theta is not None, "legacy checkpoint is missing the params tree"
+    # velocity: the sim engine stored it as the opt NamedTuple's ``mu``
+    # attribute (keys ``opt::.mu::<leaf>``), the dist engine as a top-level
+    # ``velocity`` field
+    mu = tree_bufs("velocity")
+    if mu is None:
+        mu = tree_bufs(f"opt{SEP}.mu")
+    assert mu is not None or not getattr(like.opt, "mu", None), (
+        "legacy checkpoint is missing the velocity tree")
+    nu = tree_bufs(f"opt{SEP}.nu")
+    # the dist v1 layout had no optimizer step of its own — fall back to the
+    # trainer step so the two (redundant) counters resume in agreement
+    opt = type(like.opt)(scalar(f"opt{SEP}.step", scalar("step", like.opt.step)),
+                         mu if mu is not None else {},
+                         nu if nu is not None else {})
+    proto = like.proto
+    if proto is not None:
+        proto = type(proto)(
+            tree_bufs(f"proto{SEP}.center", lead=False),
+            scalar(f"proto{SEP}.comm_rounds", proto.comm_rounds),
+            scalar(f"proto{SEP}.comm_units", proto.comm_units),
+            scalar(f"proto{SEP}.comm_bytes", proto.comm_bytes))
+    comm = like.comm
+    if comm is not None and getattr(comm, "residual", None) is not None:
+        comm = type(comm)(tree_bufs(f"comm{SEP}.residual"))
+    center = tree_bufs("center", lead=False) if like.center is not None else None
+    key = jnp.asarray(flat["key"]) if "key" in flat else like.key
+    return like.replace(theta=theta, opt=opt, proto=proto, comm=comm,
+                        center=center, key=key,
+                        step=scalar("step", like.step))
+
+
+def restore_state(path: str, like, meta: Optional[dict] = None):
+    """Restore a checkpoint into the FlatState structure of ``like``.
+
+    The generation comes from ``meta['format']`` (written by
+    :func:`save_state`; pass an already-loaded ``meta`` to skip re-reading
+    it); checkpoints without metadata fall back to payload sniffing (a
+    ``theta::<bucket>`` key exists only in v2). v2 payloads restore the flat
+    buffers directly; v1 (legacy pytree) payloads convert through
+    :func:`_legacy_to_state` — an old checkpoint resumes into the resident
+    layout bit-exactly."""
+    if meta is None:
+        meta = load_meta(path) or {}
+    fmt = meta.get("format")
+    if fmt is None:
+        with np.load(path) as data:
+            fmt = (FLAT_FORMAT if any(k.startswith("theta" + SEP) or k == "theta"
+                                      for k in data.files) else 1)
+    if int(fmt) >= FLAT_FORMAT:
+        # v2 stores whole planes under bucket keys, so leaf identity lives in
+        # the manifest, not the npz keys (v1 failed loudly on renamed leaves
+        # via its per-leaf path keys) — validate it or risk silently slicing
+        # the saved plane with a reordered layout
+        saved = meta.get("flat_spec")
+        if saved is not None and saved != flat_spec_manifest(like.spec):
+            raise ValueError(
+                "checkpoint FlatSpec manifest does not match the target "
+                "state's layout (parameter tree renamed/reordered/resized "
+                "since the checkpoint was written?) — refusing to slice the "
+                f"saved plane with a different layout: {path}")
+        return like.from_state_dict(restore(path, like.state_dict()))
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    return _legacy_to_state(flat, like)
 
 
 def restore_schedule(path: str, schedule) -> bool:

@@ -24,6 +24,7 @@ per-replica scalars (gossip gates/coefficients) broadcast along axis 0.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -79,6 +80,21 @@ class FlatSpec:
             offsets[bucket] = off + _align(size, align)
         return FlatSpec(treedef, leading, lead_shape, tuple(slots), dict(offsets), align)
 
+    # FlatSpec rides as STATIC pytree metadata (the aux_data of
+    # repro.api.state.FlatState), so it must be hashable; the auto-generated
+    # frozen-dataclass hash would choke on the ``totals`` dict.
+    def __hash__(self):
+        return hash((self.treedef, self.leading, self.lead_shape, self.slots,
+                     tuple(sorted(self.totals.items())), self.align))
+
+    def with_lead(self, lead_shape: Tuple[int, ...]) -> "FlatSpec":
+        """The same layout bound to different leading (replica) dims — slots
+        and totals are per-item, so only the pass-through dims change. Used at
+        the boundaries: ``with_lead(())`` unflattens one replica row or an
+        EASGD center, ``with_lead((W,))`` a whole stacked plane."""
+        return dataclasses.replace(self, leading=len(lead_shape),
+                                   lead_shape=tuple(int(d) for d in lead_shape))
+
     # ------------------------------------------------------------------ sizes
     @property
     def buckets(self) -> Tuple[str, ...]:
@@ -123,3 +139,39 @@ class FlatSpec:
             v = jax.lax.slice_in_dim(b, s.offset, s.offset + s.size, axis=-1)
             leaves.append(jnp.reshape(v, self.lead_shape + s.shape).astype(dt))
         return jax.tree.unflatten(self.treedef, leaves)
+
+    def views(self, bufs: Dict[str, jax.Array]) -> PyTree:
+        """:meth:`unflatten` with a SCATTER-based VJP — the flat-resident
+        engines' loss boundary. Differentiating a loss through plain slice
+        views gives each leaf a ``pad``-to-full-plane cotangent that XLA
+        materializes separately (temp memory ∝ leaves x plane); this variant
+        lands every leaf's cotangent in ONE zeros buffer per dtype bucket via
+        in-place ``dynamic_update_slice`` (slots are disjoint), so gradients
+        arrive already flat at plane-sized memory, with no concatenate and no
+        per-leaf pads — step memory stays independent of tree depth."""
+        return _views(self, bufs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _views(spec: FlatSpec, bufs: Dict[str, jax.Array]) -> PyTree:
+    return spec.unflatten(bufs)
+
+
+def _views_fwd(spec, bufs):
+    return _views(spec, bufs), None
+
+
+def _views_bwd(spec, _res, ct):
+    leaves = jax.tree.flatten(ct)[0]
+    out = {k: jnp.zeros(spec.lead_shape + (n,), jnp.dtype(k))
+           for k, n in spec.totals.items()}
+    for g, s in zip(leaves, spec.slots):
+        if s.size == 0:
+            continue
+        flat = jnp.reshape(g, spec.lead_shape + (s.size,)).astype(jnp.dtype(s.bucket))
+        out[s.bucket] = jax.lax.dynamic_update_slice_in_dim(
+            out[s.bucket], flat, s.offset, axis=len(spec.lead_shape))
+    return (out,)
+
+
+_views.defvjp(_views_fwd, _views_bwd)

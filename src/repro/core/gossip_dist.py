@@ -8,10 +8,16 @@ replica shard along a matching, followed by the (fusable) elastic update:
     theta <- theta - coef * gate * (theta - theta_peer)
 
 The exchange runs on the **flat parameter plane** (repro.common.flat): the
-replica shard is flattened into one lane-aligned buffer per dtype and the
-participation gate rides in the tail element of the first buffer, so a round
-is exactly ONE ppermute per dtype bucket (ONE total for the usual
-homogeneous-dtype tree) instead of one per leaf plus one for the gate.
+replica shard is one lane-aligned buffer per dtype and the participation gate
+rides in the tail element of the first buffer, so a round is exactly ONE
+ppermute per dtype bucket (ONE total for the usual homogeneous-dtype tree)
+instead of one per leaf plus one for the gate. Since the flat-resident
+redesign the trainers pass the RESIDENT buffer dicts of
+:class:`repro.api.state.FlatState` straight in — the internal
+``FlatSpec.build``/``flatten``/``unflatten`` become structural no-ops
+(single pre-aligned leaf per bucket: no pad, no concatenate, no copy) — while
+plain parameter pytrees (the parity/oracle surface and older callers) still
+flatten on entry exactly as before.
 
 Matching schedules decompose over the mesh's gossip axes (hypercube dims on
 'worker' then 'pod' — so cross-pod/DCN rounds are a distinct, less frequent
@@ -81,7 +87,10 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
     """Build gossip_step(params_stack, active[Wtot], round_idx).
 
     params_stack leaves: [Wtot_local..., ...] sharded per param_specs (leading
-    dim over ('pod','worker')). active: float32 [num_workers] participation.
+    dim over ('pod','worker')) — either a parameter pytree or, the trainers'
+    hot path, the resident flat-plane buffer dict of a FlatState (for which
+    the flatten below is the identity: no per-step copies). active: float32
+    [num_workers] participation.
 
     mode="apply": returns the exchanged params_stack (elastic move applied in
     the exchange program — the facade parity surface and the unfused path).

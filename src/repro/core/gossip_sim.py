@@ -1,51 +1,52 @@
 """Simulation engine: exact Algorithms 1-6 on stacked replicas.
 
-Replicas are stacked on a leading worker axis ([W, ...] per leaf) and stepped
-with a single jitted function: per-worker gradients via vmap, the protocol's
-gradient transform, the NAG velocity update (Alg. 5 line 3), the gated
-communication-related component (line 7), and the parameter update (line 9) —
-all computed simultaneously from the step-t state, exactly as the paper
-specifies (§2.3). This is the engine used for the paper-reproduction
-benchmarks (W in {4, 8}, like the thesis); the distributed shard_map engine
-(gossip_dist.py) is validated against it.
+Replicas live RESIDENT on the flat parameter plane (:mod:`repro.common.flat`):
+the trainer state is a :class:`repro.api.state.FlatState` whose params and
+velocity are ONE lane-aligned ``[W, total]`` buffer per dtype bucket,
+flattened once at :meth:`SimTrainer.init` and never re-flattened per step.
+One jitted step does: per-worker gradients via vmap — differentiated directly
+w.r.t. the resident buffers, so gradient buffers arrive already flat through
+the unflatten views at the loss boundary — the protocol's gradient transform,
+the NAG velocity update (Alg. 5 line 3), the gated communication-related
+component (line 7, a mixing einsum per dtype bucket instead of per leaf), and
+the parameter update (line 9) — all computed simultaneously from the step-t
+state, exactly as the paper specifies (§2.3). Pytrees appear only at the
+boundaries (``state.params`` lazy views for eval/checkpoint).
+
+This is the engine used for the paper-reproduction benchmarks (W in {4, 8},
+like the thesis); the distributed shard_map engine (gossip_dist.py) is
+validated against it.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro import comm
 from repro.api import registry
+from repro.api.state import FlatState
 from repro.common import flat as flat_plane
 from repro.common.config import OptimizerConfig, ProtocolConfig
 from repro.common.pytree import tree_mean_leading, tree_take_leading
 from repro.core import protocols
-from repro.core.protocols import ProtocolState
 from repro.kernels import ops
 from repro.optim.optimizers import OptState, _clip, make_optimizer, param_update, velocity_update
 from repro.optim.schedule import lr_at
 
 PyTree = Any
 
-
-class SimState(NamedTuple):
-    params: PyTree            # stacked [W, ...]
-    opt: OptState
-    proto: ProtocolState
-    key: jax.Array
-    step: jax.Array
-    # codec state (repro.comm): error-feedback residual of a stateful codec
-    # (params-shaped f32 tree) or an empty CommState — checkpointed with the
-    # rest of the state so resumed runs continue the residual.
-    comm: comm.CommState = comm.CommState(None)
+# Deprecated alias: the sim engine's state IS the engine-agnostic FlatState
+# (repro.api.state) since the flat-resident redesign.
+SimState = FlatState
 
 
 class SimTrainer:
     """Single-controller trainer over W simulated workers.
 
-    loss_fn(params, x, y) -> scalar loss for ONE worker's replica/batch.
+    loss_fn(params, x, y) -> scalar loss for ONE worker's replica/batch
+    (``params`` is the single-replica pytree view of the resident plane).
     """
 
     def __init__(self, loss_fn: Callable, num_workers: int,
@@ -56,106 +57,130 @@ class SimTrainer:
         self.protocol = protocol
         self.optimizer_cfg = optimizer
         self.optimizer = make_optimizer(optimizer)
+        self._impl = registry.resolve(protocol)
         # fused flat-plane path (one pass for Alg. 5 lines 3/7/9): pairwise
-        # protocols + NAG only — allreduce/EASGD/none keep the per-leaf path
+        # protocols + NAG only — allreduce/EASGD/none keep the per-bucket path
         # (registry capability flags, not method strings).
         self.fused_update = (fused_update and optimizer.name == "nag"
-                             and registry.resolve(protocol).pairwise)
+                             and self._impl.pairwise)
         # gossip-compression codec (repro.comm): pairwise protocols only
         # (enforced by Protocol.__init__); None when cfg.codec == "none"
         self.codec = comm.active_codec(protocol)
-        self._flat_spec = None   # FlatSpec, cached per trainer at init()
-        # donate the stacked state so params/velocity update in place instead
-        # of doubling HBM residency every step
+        # registered THIRD-PARTY protocols may override comm_update with the
+        # pre-FlatState signature (no wire_bytes kwarg) — detect once and
+        # fall back to the tree-derived accounting for them
+        try:
+            import inspect
+            sig = inspect.signature(self._impl.comm_update).parameters.values()
+            self._pass_wire_bytes = any(
+                p.name == "wire_bytes" or p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in sig)
+        except (TypeError, ValueError):
+            self._pass_wire_bytes = False
+        # donate the resident state so the flat buffers update in place
+        # instead of doubling HBM residency every step
         self._step_fn = jax.jit(self._step, donate_argnums=(0,))
 
-    def init(self, params_stack: PyTree, seed: int = 0) -> SimState:
-        if self.fused_update or self.codec is not None:
-            self._flat_spec = flat_plane.FlatSpec.build(params_stack, leading=1)
-        return SimState(
-            params=params_stack,
-            opt=self.optimizer.init(params_stack),
-            proto=protocols.init_state(self.protocol, params_stack),
+    def _wire_bytes(self, spec: flat_plane.FlatSpec) -> float:
+        """Exact per-replica wire bytes from the STATIC spec (trace-time
+        shape math, no cache): the resident buffers carry lane padding, so
+        deriving raw bytes from their shapes would over-count — the raw size
+        sums the unpadded slot sizes; a codec wire is genuinely the padded
+        plane (what actually ships)."""
+        if self.codec is None:
+            return float(sum(s.size * s.dtype.itemsize for s in spec.slots))
+        return float(comm.wire_param_bytes(self.codec, spec))
+
+    def init(self, params_stack: PyTree, seed: int = 0) -> FlatState:
+        """Flatten ONCE: the returned state holds the resident buffers; the
+        ``params_stack`` pytree is not referenced again."""
+        spec = flat_plane.FlatSpec.build(params_stack, leading=1)
+        theta = spec.flatten(params_stack)
+        return FlatState(
+            spec=spec,
+            theta=theta,
+            opt=self.optimizer.init(theta),
+            proto=self._impl.init_state(theta),
+            comm=comm.init_comm_state(self.codec, theta),
             key=jax.random.PRNGKey(seed),
-            step=jnp.zeros((), jnp.int32),
-            comm=comm.init_comm_state(self.codec, params_stack),
-        )
+            step=jnp.zeros((), jnp.int32))
 
-    def _spec(self, params_stack) -> flat_plane.FlatSpec:
-        if self._flat_spec is None:
-            self._flat_spec = flat_plane.FlatSpec.build(params_stack, leading=1)
-        return self._flat_spec
-
-    def _codec_transmit(self, state: SimState, active):
-        """decode(encode(theta)) on the flat plane: what peers RECEIVE this
-        round, plus the advanced error-feedback residual. Seeds derive from
-        (comm round counter, worker index) — the same stream the dist engine
-        uses. Wrapped in lax.cond so non-firing steps skip the whole
-        encode/decode pass (the identity mix would ignore the transmit
-        anyway); inside a firing round, a stateful codec's residual advances
-        per worker, gated by that worker's OWN participation (matching the
-        dist engine) so wire mass a receiver discards is carried forward."""
-        codec, spec = self.codec, self._spec(state.params)
+    def _codec_transmit(self, state: FlatState, active):
+        """decode(encode(theta)) on the resident plane: what peers RECEIVE
+        this round, plus the advanced error-feedback residual (already flat
+        f32 buffers in ``state.comm``). Seeds derive from (comm round counter,
+        worker index) — the same stream the dist engine uses. Wrapped in
+        lax.cond so non-firing steps skip the whole encode/decode pass (the
+        identity mix would ignore the transmit anyway); inside a firing
+        round, a stateful codec's residual advances per worker, gated by that
+        worker's OWN participation (matching the dist engine) so wire mass a
+        receiver discards is carried forward."""
+        codec = self.codec
 
         def fire():
-            bufs = spec.flatten(state.params)
-            res_bufs = (spec.flatten(state.comm.residual)
-                        if codec.stateful else None)
             seeds = comm.codec_seeds(state.proto.comm_rounds,
                                      jnp.arange(self.num_workers))
             hat, new_res = comm.roundtrip_bufs(
-                codec, bufs, seeds, res_bufs,
+                codec, state.theta, seeds,
+                state.comm.residual if codec.stateful else None,
                 gate=jnp.asarray(active).reshape(-1, 1))
-            comm_new = state.comm
-            if codec.stateful:
-                comm_new = comm.CommState(
-                    spec.unflatten(new_res, like=state.comm.residual))
-            return spec.unflatten(hat), comm_new
+            # decode reconstructs in f32; match the storage dtype so both
+            # cond branches agree (and mixing casts exactly like the wire)
+            hat = {k: v.astype(state.theta[k].dtype) for k, v in hat.items()}
+            comm_new = comm.CommState(new_res) if codec.stateful else state.comm
+            return hat, comm_new
 
         def skip():
             # transmit := theta makes apply_mix_split exactly apply_mix
-            return state.params, state.comm
+            return state.theta, state.comm
 
         return jax.lax.cond(jnp.any(active), fire, skip)
 
     # -- one synchronous step across all workers ---------------------------
-    def _step(self, state: SimState, x, y):
+    def _step(self, state: FlatState, x, y):
         cfg = self.protocol
+        spec = state.spec
+        row_spec = spec.with_lead(())
         key, sel_key, gate_key = jax.random.split(state.key, 3)
 
-        # gradient-related component (Alg. 5 line 2), per worker
-        def one_loss(p, xi, yi):
-            return self.loss_fn(p, xi, yi)
+        # gradient-related component (Alg. 5 line 2), per worker — the loss
+        # reads the single-replica pytree VIEW of its buffer row, and autodiff
+        # through the views returns the gradients already on the flat plane
+        def one_loss(bufs, xi, yi):
+            return self.loss_fn(row_spec.views(bufs), xi, yi)
 
-        losses, grads = jax.vmap(jax.value_and_grad(one_loss))(state.params, x, y)
+        losses, grads = jax.vmap(jax.value_and_grad(one_loss))(state.theta, x, y)
         grads = protocols.gradient_transform(cfg, grads)
 
-        # communication-related component (lines 4-8), simultaneous
+        # communication-related component (lines 4-8), simultaneous, directly
+        # on the resident buffers (one mixing einsum per dtype bucket)
         active = protocols.comm_gate(cfg, gate_key, state.step, self.num_workers)
         transmit, comm_new = (self._codec_transmit(state, active)
                               if self.codec is not None else (None, state.comm))
-        theta_comm, proto_new = protocols.comm_update(cfg, sel_key, active, state.params,
-                                                      state.proto, step=state.step,
-                                                      transmit=transmit)
+        kw = ({"wire_bytes": self._wire_bytes(spec)} if self._pass_wire_bytes
+              else {})
+        theta_comm, proto_new = protocols.comm_update(
+            cfg, sel_key, active, state.theta, state.proto, step=state.step,
+            transmit=transmit, **kw)
 
         if self.fused_update:
             # fused flat-plane path: lines 3, 7 and 9 in ONE pass per dtype
-            # bucket. Setting peer := theta_comm and coef := 1 makes the
-            # kernel's elastic term exactly the comm displacement
-            # theta_comm - theta, for ANY pairwise mixing (incl. fan-in > 1).
+            # bucket, in place (donated buffers alias the kernel outputs).
+            # Setting peer := theta_comm and coef := 1 makes the kernel's
+            # elastic term exactly the comm displacement theta_comm - theta,
+            # for ANY pairwise mixing (incl. fan-in > 1).
             ocfg = self.optimizer_cfg
             grads_c = _clip(ocfg, grads)
             eta = lr_at(ocfg, state.opt.step)
-            spec = self._spec(state.params)
-            params_new, v_new = ops.fused_tree_elastic_nag(
-                state.params, theta_comm, state.opt.mu, grads_c,
+            theta_new, v_new = ops.fused_bufs_elastic_nag(
+                state.theta, theta_comm, state.opt.mu, grads_c,
                 jnp.ones((self.num_workers,), jnp.float32),
-                eta=eta, mu=ocfg.momentum, spec=spec)
+                eta, ocfg.momentum)
             opt_new = OptState(state.opt.step + 1, v_new, {})
         else:
-            # per-leaf reference path (the fused path's parity target)
+            # per-bucket reference path (the fused path's parity target)
             # elastic/gossip displacement relative to theta_t:
-            comm_delta = jax.tree.map(lambda a, b: a - b, theta_comm, state.params)
+            comm_delta = jax.tree.map(lambda a, b: a - b, theta_comm, state.theta)
 
             # optimizer update (lines 3 & 9)
             if self.optimizer_cfg.name == "nag":
@@ -164,29 +189,30 @@ class SimTrainer:
                 # and make_optimizer("nag") uses the clipped grads for BOTH
                 # terms — so must line 9 here (and the fused path does)
                 theta_grad = param_update(self.optimizer_cfg, state.opt.step,
-                                          state.params,
+                                          state.theta,
                                           _clip(self.optimizer_cfg, grads), v_new)
             else:
-                theta_grad, opt_new = self.optimizer.update(grads, state.opt, state.params)
+                theta_grad, opt_new = self.optimizer.update(grads, state.opt, state.theta)
 
-            params_new = jax.tree.map(lambda tg, d: tg + d.astype(tg.dtype),
-                                      theta_grad, comm_delta)
+            theta_new = jax.tree.map(lambda tg, d: tg + d.astype(tg.dtype),
+                                     theta_grad, comm_delta)
 
         metrics = {
             "loss_mean": jnp.mean(losses),
             "loss_max": jnp.max(losses),
             "comm_active": jnp.sum(active.astype(jnp.int32)),
         }
-        return SimState(params_new, opt_new, proto_new, key, state.step + 1,
-                        comm_new), metrics
+        return state.replace(theta=theta_new, opt=opt_new, proto=proto_new,
+                             comm=comm_new, key=key,
+                             step=state.step + 1), metrics
 
-    def step(self, state: SimState, x, y):
+    def step(self, state: FlatState, x, y):
         return self._step_fn(state, x, y)
 
-    # -- evaluation helpers --------------------------------------------------
-    def rank0_params(self, state: SimState) -> PyTree:
+    # -- evaluation helpers (pytree boundary: lazy views) --------------------
+    def rank0_params(self, state: FlatState) -> PyTree:
         return tree_take_leading(state.params, 0)
 
-    def aggregate_params(self, state: SimState) -> PyTree:
+    def aggregate_params(self, state: FlatState) -> PyTree:
         """Parameter average across workers (paper 'Aggregate Accuracy')."""
         return tree_mean_leading(state.params)

@@ -47,11 +47,16 @@ def gradient_transform(cfg: ProtocolConfig, grads_stack: PyTree) -> PyTree:
 
 
 def comm_update(cfg: ProtocolConfig, key, active, theta_stack: PyTree,
-                state: ProtocolState, step=None, transmit=None):
-    """Communication-related component on stacked params [W, ...];
-    ``transmit`` (optional) is the codec-reconstructed tree peers receive."""
+                state: ProtocolState, step=None, transmit=None, wire_bytes=None):
+    """Communication-related component on stacked params [W, ...] (a tree or
+    a dict of flat-plane buffers); ``transmit`` (optional) is the
+    codec-reconstructed tree peers receive, ``wire_bytes`` (optional) the
+    static per-event egress override for the live accounting — only forwarded
+    when set, so registered protocols overriding ``comm_update`` with the
+    pre-FlatState signature keep working."""
+    kw = {} if wire_bytes is None else {"wire_bytes": wire_bytes}
     return registry.resolve(cfg).comm_update(key, active, theta_stack, state,
-                                             step=step, transmit=transmit)
+                                             step=step, transmit=transmit, **kw)
 
 
 def comm_cost(cfg: ProtocolConfig, param_bytes: int, num_workers: int) -> CommCost:

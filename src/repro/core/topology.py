@@ -111,7 +111,10 @@ def apply_mix_split(mix: jax.Array, theta_stack, transmit_stack):
 
         theta'[w] = mix[w,w] * theta[w] + sum_{v!=w} mix[w,v] * transmit[v]
     """
-    d = jnp.diagonal(mix)
+    # masked-sum diagonal: jnp.diagonal lowers through a concatenate, which
+    # would be the ONLY concat in the resident engines' codec step (the
+    # zero-concat jaxpr regression in tests/test_flat_state.py counts them)
+    d = jnp.sum(mix * jnp.eye(mix.shape[0], dtype=mix.dtype), axis=1)
     off = mix - jnp.diag(d)
 
     def one(x, t):

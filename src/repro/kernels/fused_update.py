@@ -107,10 +107,40 @@ def _flat_nag_kernel(theta_ref, v_ref, g_ref, sc_ref, theta_out_ref, v_out_ref):
     v_out_ref[...] = v_new.astype(v_out_ref.dtype)
 
 
-def _pad_blocks(x, n: int, block: int):
-    nblocks = max(1, (n + block - 1) // block)
+LANE = 128        # lane width (elements): flat-plane totals are multiples of it
+MIN_TILE = 8 * LANE   # one full f32 (sublane x lane) register tile
+
+
+def _tile(n: int, block: int):
+    """(block', nblocks, padded) tiling of an ``n``-element plane row.
+
+    The flat-resident plane makes in-place updates possible: when the tiles
+    cover ``n`` exactly, the kernel inputs alias the outputs
+    (``input_output_aliases``) and no pad copy is made — theta/v update in
+    place. ``n <= block`` collapses to one exact tile; larger planes tile at
+    ``block`` when it divides ``n``, else at the largest lane-multiple
+    divisor of ``n`` that fits (flat totals are always lane multiples, so one
+    exists; e.g. n = 925*128 tiles at 185*128). Only when every exact tile
+    would be degenerate (< one sublane x lane register tile, or below an
+    explicitly smaller caller block) does it fall back to the padded,
+    non-aliased layout.
+    """
+    if n == 0 or n <= block:
+        return max(n, 1), 1, n == 0
+    if n % block == 0:
+        return block, n // block, False
+    if n % LANE == 0:
+        floor = min(MIN_TILE, block)
+        m, cap = n // LANE, block // LANE
+        for d in range(cap, 0, -1):
+            if m % d == 0 and d * LANE >= floor:
+                return d * LANE, n // (d * LANE), False
+    return block, (n + block - 1) // block, True
+
+
+def _pad_blocks(x, n: int, nblocks: int, block: int):
     pad = nblocks * block - n
-    return (jnp.pad(x, ((0, 0), (0, pad))) if pad else x), nblocks
+    return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
 
 
 def _scalar_rows(W: int, *cols) -> jnp.ndarray:
@@ -128,11 +158,15 @@ def fused_flat_elastic_nag_update(theta, peer, v, g, coef, eta, mu, *,
     theta/peer/v/g: [W, N] flat replica buffers (repro.common.flat layout);
     coef: scalar or [W] per-replica moving rate * participation gate;
     eta/mu: scalars (traced values OK — they ride in a VMEM scalar row, so lr
-    schedules don't retrigger compilation). Returns (theta', v') [W, N].
+    schedules don't retrigger compilation). Returns (theta', v') [W, N] —
+    when the tiling covers N exactly (any N <= block, or block | N) the theta
+    and v inputs are ALIASED to the outputs, so donated resident buffers
+    update truly in place (no double HBM residency).
     """
     W, n = theta.shape
-    (tf, nblocks), (pf, _) = _pad_blocks(theta, n, block), _pad_blocks(peer, n, block)
-    (vf, _), (gf, _) = _pad_blocks(v, n, block), _pad_blocks(g, n, block)
+    block, nblocks, padded = _tile(n, block)
+    tf, pf = _pad_blocks(theta, n, nblocks, block), _pad_blocks(peer, n, nblocks, block)
+    vf, gf = _pad_blocks(v, n, nblocks, block), _pad_blocks(g, n, nblocks, block)
     sc = _scalar_rows(W, coef, eta, mu)
 
     spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
@@ -144,6 +178,7 @@ def fused_flat_elastic_nag_update(theta, peer, v, g, coef, eta, mu, *,
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((W, nblocks * block), theta.dtype),
                    jax.ShapeDtypeStruct((W, nblocks * block), v.dtype)],
+        input_output_aliases={} if padded else {0: 0, 2: 1},
         interpret=interpret,
     )(tf, pf, vf, gf, sc)
     return t_new[:, :n], v_new[:, :n]
@@ -154,10 +189,13 @@ def fused_flat_nag_update(theta, v, g, eta, mu, *,
                           block: int = BLOCK, interpret: bool = False):
     """Pure-NAG whole-plane update (no peer stream): the non-communicating
     step of pairwise protocols. theta/v/g: [W, N]; eta/mu scalars (traced OK).
-    Returns (theta', v')."""
+    Returns (theta', v'), with theta/v aliased into the outputs (in-place)
+    whenever the tiling covers N exactly — see
+    :func:`fused_flat_elastic_nag_update`."""
     W, n = theta.shape
-    (tf, nblocks), (vf, _) = _pad_blocks(theta, n, block), _pad_blocks(v, n, block)
-    gf, _ = _pad_blocks(g, n, block)
+    block, nblocks, padded = _tile(n, block)
+    tf, vf = _pad_blocks(theta, n, nblocks, block), _pad_blocks(v, n, nblocks, block)
+    gf = _pad_blocks(g, n, nblocks, block)
     sc = _scalar_rows(W, eta, mu)
 
     spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
@@ -169,6 +207,7 @@ def fused_flat_nag_update(theta, v, g, eta, mu, *,
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((W, nblocks * block), theta.dtype),
                    jax.ShapeDtypeStruct((W, nblocks * block), v.dtype)],
+        input_output_aliases={} if padded else {0: 0, 1: 1},
         interpret=interpret,
     )(tf, vf, gf, sc)
     return t_new[:, :n], v_new[:, :n]

@@ -73,9 +73,12 @@ def fused_flat_nag_update(theta, v, g, eta, mu, *,
 def fused_bufs_elastic_nag(theta_bufs, peer_bufs, v_bufs, g_bufs, coef, eta, mu,
                            *, use_kernel: Optional[bool] = None,
                            interpret: Optional[bool] = None):
-    """Per-dtype-bucket dispatch of the fused update over flat-buffer dicts
-    (the shared core of :func:`fused_tree_elastic_nag` and the dist engine's
-    shard-mapped ``gossip_dist`` fused mode). Returns (theta'_bufs, v'_bufs)."""
+    """Per-dtype-bucket dispatch of the fused update over flat-buffer dicts —
+    the flat-resident engines' communicating hot path (the sim engine calls
+    it on the resident FlatState buffers; the dist engine through the
+    shard-mapped ``gossip_dist`` fused mode). The kernel aliases theta/v into
+    its outputs, so donated resident buffers update in place. Returns
+    (theta'_bufs, v'_bufs)."""
     out_t, out_v = {}, {}
     for k in theta_bufs:
         out_t[k], out_v[k] = fused_flat_elastic_nag_update(
@@ -88,8 +91,13 @@ def fused_tree_elastic_nag(theta: PyTree, peer: PyTree, v: PyTree, g: PyTree,
                            coef, *, eta, mu, spec: Optional[FlatSpec] = None,
                            use_kernel: Optional[bool] = None,
                            interpret: Optional[bool] = None):
-    """Tree-level fused update: the engines' hot loop in ONE pass per dtype
-    bucket over the flat plane (Alg. 5 lines 3/7/9, simultaneous).
+    """Tree-level fused update in ONE pass per dtype bucket over the flat
+    plane (Alg. 5 lines 3/7/9, simultaneous). Since the flat-resident
+    FlatState redesign the engines call :func:`fused_bufs_elastic_nag` on
+    their resident buffers directly; this tree wrapper remains the
+    oracle/benchmark surface (and measures exactly the per-call
+    flatten/unflatten cost the resident layout deleted — see
+    benchmarks/fused_step.py ``update_phase``).
 
     All four trees share ``theta``'s structure, stacked ``[W, ...]``; ``coef``
     is the per-replica moving rate * gate (scalar or [W]); ``spec`` is the
@@ -110,6 +118,20 @@ def fused_tree_elastic_nag(theta: PyTree, peer: PyTree, v: PyTree, g: PyTree,
     return spec.unflatten(out_t, like=theta), spec.unflatten(out_v, like=v)
 
 
+def fused_bufs_nag(theta_bufs, v_bufs, g_bufs, eta, mu, *,
+                   use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None):
+    """Per-dtype-bucket pure-NAG update over flat-buffer dicts — the
+    flat-resident engines' non-firing hot path (no flatten, and the kernel
+    aliases theta/v into its outputs for a true in-place update)."""
+    out_t, out_v = {}, {}
+    for k in theta_bufs:
+        out_t[k], out_v[k] = fused_flat_nag_update(
+            theta_bufs[k], v_bufs[k], g_bufs[k], eta, mu,
+            use_kernel=use_kernel, interpret=interpret)
+    return out_t, out_v
+
+
 def fused_tree_nag(theta: PyTree, v: PyTree, g: PyTree, *, eta, mu,
                    spec: Optional[FlatSpec] = None,
                    use_kernel: Optional[bool] = None,
@@ -118,11 +140,9 @@ def fused_tree_nag(theta: PyTree, v: PyTree, g: PyTree, *, eta, mu,
     protocols): velocity + parameter update in one pass, 5 streams."""
     if spec is None:
         spec = FlatSpec.build(theta, leading=1)
-    tb, vb, gb = spec.flatten(theta), spec.flatten(v), spec.flatten(g)
-    out_t, out_v = {}, {}
-    for k in tb:
-        out_t[k], out_v[k] = fused_flat_nag_update(
-            tb[k], vb[k], gb[k], eta, mu, use_kernel=use_kernel, interpret=interpret)
+    out_t, out_v = fused_bufs_nag(spec.flatten(theta), spec.flatten(v),
+                                  spec.flatten(g), eta, mu,
+                                  use_kernel=use_kernel, interpret=interpret)
     return spec.unflatten(out_t, like=theta), spec.unflatten(out_v, like=v)
 
 

@@ -2,11 +2,14 @@
 
 The driver is protocol-agnostic: it constructs a
 :class:`repro.api.GossipTrainer` with ``engine="dist"`` and calls ONE method
-per step — ``trainer.step(state, batch)``. Scheduling (fire/active/round
-polling and the train vs. train+gossip program selection), communication-byte
-accounting and checkpoint/schedule persistence all live inside the facade;
-protocol names come from the registry, so a newly registered protocol is
-immediately launchable with ``--method <name>``.
+per step — ``trainer.step(state, batch)`` over the flat-resident
+:class:`repro.api.FlatState` (params live as flat per-dtype buffers; the
+driver's divergence diagnostics read ``state.theta`` directly and checkpoints
+are written in the flat v2 format). Scheduling (fire/active/round polling and
+the train vs. train+gossip program selection), communication-byte accounting
+and checkpoint/schedule persistence all live inside the facade; protocol
+names come from the registry, so a newly registered protocol is immediately
+launchable with ``--method <name>``.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
         --reduced --steps 50 --method elastic_gossip --p 0.25
@@ -97,7 +100,10 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
     for i in range(steps):
         state, m = trainer.step(state, next(batches))
         if i % log_every == 0 or i == steps - 1:
-            div = divergence_metrics(state.params)
+            # diagnostics read the resident flat plane directly (identical
+            # numbers to the per-leaf tree: padding is zeros on both sides of
+            # the consensus difference) — no pytree views on the log path
+            div = divergence_metrics(state.theta)
             rec = {"step": i, "loss": float(m["loss"]),
                    "consensus_rel": float(div["consensus_rel"]),
                    "fired": bool(m["fired"]),

@@ -1,8 +1,14 @@
 """Distributed training step: per-worker replicas on the production mesh.
 
-Parameters are stacked on a leading worker dim (replica index) sharded over
-('pod','worker'); inside a replica group the usual FSDP ('fsdp') + tensor
-('model') sharding applies — GSPMD propagates from the parameter shardings.
+The trainer state is the engine-agnostic :class:`repro.api.state.FlatState`:
+parameters and velocity live RESIDENT on the flat parameter plane
+(:mod:`repro.common.flat`) — one lane-aligned ``[W, total]`` buffer per dtype
+bucket, sharded on the leading (replica) dim over ('pod','worker'), flattened
+once at :meth:`DistTrainer.init_state`. The gossip exchange, the fused Pallas
+update and the NAG sweeps all consume the buffers directly (no per-step
+flatten/unflatten); the parameter *pytree* exists only as lazy slice views at
+the loss boundary (per-worker, inside the gradient vmap) and for
+eval/checkpoint via ``state.params``.
 
 Two compiled programs (DESIGN.md §4):
 
@@ -20,6 +26,11 @@ Two compiled programs (DESIGN.md §4):
 Keeping them separate keeps gossip collectives out of the steady-state HLO, so
 the dry-run roofline can amortize gossip cost by its true expected frequency
 (p or 1/tau) instead of baking it into every step.
+
+Sharding contract of the resident plane: the replica dim shards over
+('pod','worker'); the plane dim is replicated within a replica group
+(fsdp/model sharding of the buffers is an open roadmap item — the per-leaf
+``params_axes`` are still accepted and used for batch/loss shardings).
 """
 from __future__ import annotations
 
@@ -33,25 +44,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import comm
 from repro.api import registry
+from repro.api.state import FlatState
+from repro.common import flat as flat_plane
 from repro.common.config import MeshConfig, ModelConfig, ProtocolConfig, TrainConfig
 from repro.core import gossip_dist
 from repro.kernels import ops
 from repro.launch import sharding as shr
+from repro.optim.optimizers import OptState
 from repro.optim.schedule import lr_at
 from repro.train import losses
 
 PyTree = Any
 
-
-class TrainState(NamedTuple):
-    params: PyTree            # [W, ...] stacked replicas
-    velocity: PyTree          # NAG velocity, same structure
-    center: Optional[PyTree]  # EASGD center (no W dim) or None
-    step: jax.Array
-    # codec state (repro.comm): error-feedback residual of a stateful codec,
-    # params-shaped f32 (sharded/donated/checkpointed like the params), or an
-    # empty CommState for stateless codecs.
-    comm: comm.CommState = comm.CommState(None)
+# Deprecated alias: the dist engine's state IS the engine-agnostic FlatState
+# (repro.api.state) since the flat-resident redesign.
+TrainState = FlatState
 
 
 class DistTrainer:
@@ -74,54 +81,69 @@ class DistTrainer:
         self._codec_stateful = self._codec is not None and self._codec.stateful
         assert self.opt.name == "nag", "distributed trainer implements the paper's NAG (Alg. 5)"
 
-        stacked_axes = shr.with_worker_dim(params_axes)
         single_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
         self.param_shapes = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((self.W,) + s.shape, s.dtype), single_shapes)
-        self.param_specs = shr.tree_specs(self.param_shapes, stacked_axes, mesh)
-        self.center_specs = shr.tree_specs(single_shapes, params_axes, mesh)
-        self.state_specs = TrainState(
-            params=self.param_specs, velocity=self.param_specs,
-            center=self.center_specs if self._impl.uses_center else None,
-            step=P(),
-            comm=comm.CommState(self.param_specs if self._codec_stateful else None))
+        # per-leaf axes kept for batch/loss shardings; the RESIDENT state is
+        # the flat plane, sharded on the replica dim only
+        self.params_axes = params_axes
+        self.flat_spec = flat_plane.FlatSpec.build(self.param_shapes, leading=1)
+        lead_axes = tuple(a for a in ("pod", "worker") if a in mesh.axis_names)
+        self.buf_specs = {k: P(lead_axes) for k in self.flat_spec.buckets}
+        self.center_buf_specs = {k: P() for k in self.flat_spec.buckets}
+        self.state_specs = FlatState(
+            spec=self.flat_spec,
+            theta=self.buf_specs,
+            opt=OptState(P(), dict(self.buf_specs), {}),
+            center=dict(self.center_buf_specs) if self._impl.uses_center else None,
+            comm=comm.CommState(dict(self.buf_specs) if self._codec_stateful else None),
+            step=P())
         self._gossip_exchange = None
         self._fused_gossip = None
         self._fused_nag = None
         # fused flat-plane update (TrainConfig.fused_update, default on):
-        # pairwise protocols only — allreduce/EASGD keep the per-leaf path
+        # pairwise protocols only — allreduce/EASGD keep the per-bucket path
         # (registry capability flags, not method strings).
         self.fused_update = bool(train_cfg.fused_update) and self._impl.pairwise
 
     # ------------------------------------------------------------------ init
-    def init_state(self, key) -> TrainState:
+    def _constrain_bufs(self, bufs, specs=None):
+        specs = specs or self.buf_specs
+        return jax.lax.with_sharding_constraint(
+            bufs, {k: NamedSharding(self.mesh, specs[k]) for k in bufs})
+
+    def init_state(self, key) -> FlatState:
+        """Flatten ONCE into the resident plane; pytrees do not survive init."""
         single = self.init_fn(key)
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (self.W,) + x.shape), single)
-        stacked = jax.lax.with_sharding_constraint(
-            stacked, jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.param_specs,
-                                  is_leaf=lambda x: isinstance(x, P)))
-        vel = jax.tree.map(jnp.zeros_like, stacked)
-        center = (jax.tree.map(lambda x: x.copy(), single)
+        theta = self._constrain_bufs(self.flat_spec.flatten(stacked))
+        vel = jax.tree.map(jnp.zeros_like, theta)
+        center = (self.flat_spec.with_lead(()).flatten(single)
                   if self._impl.uses_center else None)
         comm_state = comm.CommState(None)
         if self._codec_stateful:
-            res = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), stacked)
-            res = jax.lax.with_sharding_constraint(
-                res, jax.tree.map(lambda s: NamedSharding(self.mesh, s),
-                                  self.param_specs,
-                                  is_leaf=lambda x: isinstance(x, P)))
-            comm_state = comm.CommState(res)
-        return TrainState(stacked, vel, center, jnp.zeros((), jnp.int32), comm_state)
+            res = {k: jnp.zeros(b.shape, jnp.float32) for k, b in theta.items()}
+            comm_state = comm.CommState(self._constrain_bufs(res))
+        return FlatState(spec=self.flat_spec, theta=theta,
+                         opt=OptState(jnp.zeros((), jnp.int32), vel, {}),
+                         center=center, comm=comm_state,
+                         step=jnp.zeros((), jnp.int32))
 
-    def state_shapes(self) -> TrainState:
+    def state_shapes(self) -> FlatState:
         """ShapeDtypeStructs for the dry-run (no allocation)."""
-        single = jax.eval_shape(self.init_fn, jax.random.PRNGKey(0))
-        center = single if self._impl.uses_center else None
+        def bufs_sds(dtype=None):
+            return {k: jax.ShapeDtypeStruct((self.W, n),
+                                            jnp.dtype(dtype or k))
+                    for k, n in self.flat_spec.totals.items()}
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        center = ({k: jax.ShapeDtypeStruct((n,), jnp.dtype(k))
+                   for k, n in self.flat_spec.totals.items()}
+                  if self._impl.uses_center else None)
         comm_state = comm.CommState(
-            jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
-                         self.param_shapes) if self._codec_stateful else None)
-        return TrainState(self.param_shapes, self.param_shapes, center,
-                          jax.ShapeDtypeStruct((), jnp.int32), comm_state)
+            bufs_sds(jnp.float32) if self._codec_stateful else None)
+        return FlatState(spec=self.flat_spec, theta=bufs_sds(),
+                         opt=OptState(scalar, bufs_sds(), {}),
+                         center=center, comm=comm_state, step=scalar)
 
     # --------------------------------------------------------------- batches
     def batch_specs(self):
@@ -141,69 +163,79 @@ class DistTrainer:
         self._gb, self._seq = global_batch, seq_len
 
     # ------------------------------------------------------- gradient engine
-    def _grads_and_loss(self, params, batch):
-        """Per-worker grads via vmap over the replica dim, with microbatch
-        accumulation (jax.checkpoint'ed model already limits live activations)."""
+    def _grads_and_loss(self, theta_bufs, batch):
+        """Per-worker grads via vmap over the replica dim of the resident
+        buffers. The loss reads the single-replica pytree VIEW of its row and
+        autodiff through the views lands the gradients directly on the flat
+        plane — no per-step flatten. Microbatch accumulation as before
+        (jax.checkpoint'ed model already limits live activations)."""
         A = self.grad_accum
+        row_spec = self.flat_spec.with_lead(())
 
-        def one_worker(p, b):
+        def loss_of(bufs, b):
+            return self.loss_fn(row_spec.views(bufs), b)
+
+        def one_worker(bufs, b):
             if A == 1:
-                return jax.value_and_grad(self.loss_fn)(p, b)
+                return jax.value_and_grad(loss_of)(bufs, b)
 
             def micro(carry, mb):
                 tot, acc = carry
-                l, g = jax.value_and_grad(self.loss_fn)(p, mb)
+                l, g = jax.value_and_grad(loss_of)(bufs, mb)
                 return (tot + l, jax.tree.map(jnp.add, acc, g)), None
 
             micro_b = jax.tree.map(
                 lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), b)
-            zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+            zero = {k: jnp.zeros(x.shape, jnp.float32) for k, x in bufs.items()}
             (tot, acc), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), micro_b)
             return tot / A, jax.tree.map(lambda g_: g_ / A, acc)
 
-        return jax.vmap(one_worker)(params, batch)
+        return jax.vmap(one_worker)(theta_bufs, batch)
 
-    def _nag(self, params, velocity, grads, step):
+    def _nag(self, theta, velocity, grads, step):
         eta = lr_at(self.opt, step)
         mu = self.opt.momentum
         v_new = jax.tree.map(lambda v, g: mu * v - eta * g.astype(v.dtype), velocity, grads)
         p_new = jax.tree.map(lambda p, g, v: p - eta * g.astype(p.dtype) + mu * v.astype(p.dtype),
-                             params, grads, v_new)
+                             theta, grads, v_new)
         return p_new, v_new
 
     # ------------------------------------------------------------- programs
-    def _train_step(self, state: TrainState, batch, active):
-        loss, grads = self._grads_and_loss(state.params, batch)
+    def _train_step(self, state: FlatState, batch, active):
+        loss, grads = self._grads_and_loss(state.theta, batch)
         grads = self._impl.gradient_transform(grads)
         center_new = state.center
         comm_delta = None
         if self._impl.uses_center:
-            # center exchange (Alg. 2 lines 5-7), gated by the host scheduler
+            # center exchange (Alg. 2 lines 5-7), gated by the host scheduler,
+            # directly on the resident buffers ([W, N] vs [N] center)
             comm_delta, center_new = self._impl.center_step(
-                state.params, state.center, active)
+                state.theta, state.center, active)
         if self.fused_update and comm_delta is None:
             # flat-plane fused NAG: velocity + parameter update in ONE pass
-            # (5 streams) instead of two per-leaf sweeps
+            # (5 streams) instead of two per-bucket sweeps
             p_new, v_new = self.fused_nag(
-                state.params, state.velocity, grads,
+                state.theta, state.opt.mu, grads,
                 lr_at(self.opt, state.step), jnp.float32(self.opt.momentum))
         else:
-            p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
+            p_new, v_new = self._nag(state.theta, state.opt.mu, grads, state.step)
             if comm_delta is not None:
                 p_new = jax.tree.map(jnp.add, p_new, comm_delta)
         metrics = {"loss": jnp.mean(loss)}
-        return TrainState(p_new, v_new, center_new, state.step + 1, state.comm), metrics
+        return state.replace(theta=p_new,
+                             opt=OptState(state.opt.step + 1, v_new, {}),
+                             center=center_new, step=state.step + 1), metrics
 
-    def _train_gossip_step(self, state: TrainState, batch, active, round_idx):
+    def _train_gossip_step(self, state: FlatState, batch, active, round_idx):
         """Simultaneous composition: grads and the elastic move both read the
-        step-t params (paper §2.3)."""
-        loss, grads = self._grads_and_loss(state.params, batch)
+        step-t resident buffers (paper §2.3)."""
+        loss, grads = self._grads_and_loss(state.theta, batch)
         comm_new = state.comm
         if self.fused_update:
             # flat-plane path: ONE shard-mapped program does the single
             # ppermute (peer replica + gate in one buffer) AND the fused
             # NAG + elastic displacement (Alg. 5 lines 3/7/9, simultaneous —
-            # both read the step-t params), with the per-replica gate*coef
+            # both read the step-t buffers), with the per-replica gate*coef
             # folded into the kernel's coefficient. Keeping the kernel inside
             # the shard_map is load-bearing: pallas_call has no GSPMD
             # sharding rule, so outside it XLA would all-gather the stacked
@@ -211,49 +243,56 @@ class DistTrainer:
             eta, mu = lr_at(self.opt, state.step), jnp.float32(self.opt.momentum)
             if self._codec_stateful:
                 p_new, v_new, res_new = self.fused_gossip(
-                    state.params, state.velocity, grads, state.comm.residual,
+                    state.theta, state.opt.mu, grads, state.comm.residual,
                     active, round_idx, eta, mu)
                 comm_new = comm.CommState(res_new)
             else:
                 p_new, v_new = self.fused_gossip(
-                    state.params, state.velocity, grads, active, round_idx, eta, mu)
+                    state.theta, state.opt.mu, grads, active, round_idx, eta, mu)
         else:
             if self._codec_stateful:
                 exchanged, res_new = self._apply_gossip(
-                    state.params, state.comm.residual, active, round_idx)
+                    state.theta, state.comm.residual, active, round_idx)
                 comm_new = comm.CommState(res_new)
             else:
-                exchanged = self._apply_gossip(state.params, active, round_idx)
-            comm_delta = jax.tree.map(lambda a, b: a - b, exchanged, state.params)
-            p_new, v_new = self._nag(state.params, state.velocity, grads, state.step)
+                exchanged = self._apply_gossip(state.theta, active, round_idx)
+            comm_delta = jax.tree.map(lambda a, b: a - b, exchanged, state.theta)
+            p_new, v_new = self._nag(state.theta, state.opt.mu, grads, state.step)
             p_new = jax.tree.map(lambda p, d: p + d.astype(p.dtype), p_new, comm_delta)
         metrics = {"loss": jnp.mean(loss)}
-        return TrainState(p_new, v_new, state.center, state.step + 1, comm_new), metrics
+        return state.replace(theta=p_new,
+                             opt=OptState(state.opt.step + 1, v_new, {}),
+                             comm=comm_new, step=state.step + 1), metrics
 
     def _make_gossip(self, mode: str):
         return gossip_dist.make_gossip_step(
-            self.mesh, self.mesh_cfg, self.protocol, self.param_specs,
+            self.mesh, self.mesh_cfg, self.protocol, self.buf_specs,
             schedule_kind="hypercube" if self.protocol.topology == "matching" else "random",
             mode=mode)
 
     @property
     def _apply_gossip(self):
-        """The raw mode="apply" program; with a stateful codec its signature
-        is (params, residual, active, round) -> (exchanged, residual')."""
+        """The raw mode="apply" program over flat-plane buffer dicts; with a
+        stateful codec its signature is (bufs, residual_bufs, active, round)
+        -> (exchanged_bufs, residual_bufs')."""
         if self._gossip_exchange is None:
             self._gossip_exchange = self._make_gossip("apply")
         return self._gossip_exchange
 
     def gossip_exchange(self, params_stack, active, round_idx):
-        """ONE communication round applied to the stacked params — the facade
-        parity surface. Stateful codecs run against a zero residual here (the
-        live residual only advances inside the training step)."""
+        """ONE communication round applied to a stacked params PYTREE — the
+        facade parity surface (a boundary: flatten in, unflatten out; the
+        training loop itself never leaves the resident buffers). Stateful
+        codecs run against a zero residual here (the live residual only
+        advances inside the training step)."""
+        spec = flat_plane.FlatSpec.build(params_stack, leading=1)
+        bufs = spec.flatten(params_stack)
         if self._codec_stateful:
-            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
-                                 params_stack)
-            exchanged, _ = self._apply_gossip(params_stack, zeros, active, round_idx)
-            return exchanged
-        return self._apply_gossip(params_stack, active, round_idx)
+            zeros = {k: jnp.zeros(b.shape, jnp.float32) for k, b in bufs.items()}
+            out, _ = self._apply_gossip(bufs, zeros, active, round_idx)
+        else:
+            out = self._apply_gossip(bufs, active, round_idx)
+        return spec.unflatten(out, like=params_stack)
 
     @property
     def fused_gossip(self):
@@ -264,16 +303,16 @@ class DistTrainer:
     @property
     def fused_nag(self):
         """Shard-mapped flat-plane NAG (full-manual: the Pallas kernel must
-        only see local shards) — fused_nag(params, velocity, grads, eta, mu)
-        -> (params', velocity')."""
+        only see local shards) — fused_nag(theta_bufs, v_bufs, g_bufs, eta,
+        mu) -> (theta'_bufs, v'_bufs)."""
         if self._fused_nag is None:
             from repro.common import compat
-            pspecs = self.param_specs
+            bspecs = self.buf_specs
             self._fused_nag = compat.shard_map(
-                lambda p, v, g, eta, mu: ops.fused_tree_nag(p, v, g, eta=eta, mu=mu),
+                lambda p, v, g, eta, mu: ops.fused_bufs_nag(p, v, g, eta, mu),
                 self.mesh,
-                in_specs=(pspecs, pspecs, pspecs, P(), P()),
-                out_specs=(pspecs, pspecs),
+                in_specs=(bspecs, bspecs, bspecs, P(), P()),
+                out_specs=(bspecs, bspecs),
                 manual_axes=set(self.mesh.axis_names))
         return self._fused_nag
 

@@ -82,6 +82,57 @@ def test_leaves_must_share_leading_dims():
         FlatSpec.build({"a": jnp.ones((4, 3)), "b": jnp.ones((5, 3))}, leading=1)
 
 
+def test_with_lead_rebinds_leading_dims_only():
+    tree = mixed_tree()
+    spec = FlatSpec.build(tree, leading=1)
+    row = spec.with_lead(())
+    assert row.slots == spec.slots and row.totals == spec.totals
+    assert row.leading == 0 and row.lead_shape == ()
+    one = row.unflatten({k: b[2] for k, b in spec.flatten(tree).items()})
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k][2]), np.asarray(one[k]))
+    # specs are hashable + comparable (FlatState carries them as pytree aux)
+    assert hash(spec) == hash(FlatSpec.build(tree, leading=1))
+    assert spec == FlatSpec.build(tree, leading=1) and spec != row
+
+
+def test_views_match_unflatten_and_grads_land_flat():
+    """FlatSpec.views == unflatten in value, and its scatter VJP returns the
+    cotangent already on the plane — identical to flatten(tree grads), with
+    zero pad/concatenate per leaf."""
+    tree = {k: v for k, v in mixed_tree().items() if k != "h"}  # f32 bucket
+    spec = FlatSpec.build(tree, leading=1)
+    bufs = spec.flatten(tree)
+    out = spec.views(bufs)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]), np.asarray(out[k]))
+
+    def f_bufs(b):
+        return sum(jnp.sum(jnp.sin(l)) for l in jax.tree.leaves(spec.views(b)))
+
+    def f_tree(t):
+        return sum(jnp.sum(jnp.sin(l)) for l in jax.tree.leaves(t))
+
+    g_bufs = jax.grad(f_bufs)(bufs)
+    g_ref = spec.flatten(jax.grad(f_tree)(tree))
+    for k in g_bufs:
+        np.testing.assert_allclose(np.asarray(g_bufs[k]), np.asarray(g_ref[k]),
+                                   rtol=1e-6, atol=0)
+    jaxpr = jax.make_jaxpr(jax.grad(f_bufs))(bufs)
+
+    def count(jx, name):
+        n = sum(1 for e in jx.eqns if e.primitive.name == name)
+        for e in jx.eqns:
+            for v in e.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(sub, "jaxpr"):
+                        n += count(sub.jaxpr, name)
+        return n
+
+    assert count(jaxpr.jaxpr, "concatenate") == 0
+    assert count(jaxpr.jaxpr, "pad") == 0
+
+
 def test_degenerate_leaves_zero_size_and_scalar_roundtrip():
     """Zero-size and scalar leaves must round-trip: a zero-size leaf occupies
     a zero-width slot (offset unchanged — two leaves may share an offset) and
