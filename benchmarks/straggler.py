@@ -1,0 +1,186 @@
+"""Straggler resilience: virtual-time-to-loss for async gossip vs. the
+synchronous barrier under one 4x-slow worker. Writes ``BENCH_straggler.json``
+at the repo root.
+
+Scenario (repro.hetero ``slow_node`` model): W workers, worker 0 runs 4x
+slower than the rest. The **synchronous-barrier baseline** is
+``engine="sim"`` — every global step waits for the straggler, so its virtual
+time advances ``slow_factor * mean_step_time`` per step. The **async engine**
+(``engine="async"``) lets the three fast workers keep stepping and gossiping
+while the straggler contributes every fourth tick; the protocol (Elastic
+Gossip) re-absorbs its stale rows through the same mixing kernels.
+
+Reported, per engine: virtual time (and device steps / event windows) until
+the consensus-parameter evaluation loss first reaches a fixed target, plus —
+async only — the per-exchange staleness histograms (virtual-time and
+step-count gaps) accumulated by ``ProtocolState``. The headline assertion:
+async gossip reaches the target in LESS virtual time than the synchronous
+barrier.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO, "BENCH_straggler.json")
+
+WORKERS = 4
+SLOW_FACTOR = 4.0
+MEAN_STEP_TIME = 1.0
+
+
+def _problem(n=64, d=10, classes=3, seed=0):
+    """Gaussian-cluster classification (per-worker batches): loss drops fast
+    and deterministically on CPU."""
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(classes, d) * 2
+    y = rng.randint(0, classes, (WORKERS, n)).astype(np.int32)
+    x = protos[y] + rng.randn(WORKERS, n, d).astype(np.float32)
+    ye = rng.randint(0, classes, (256,)).astype(np.int32)
+    xe = protos[ye] + rng.randn(256, d).astype(np.float32)
+    return (jnp.asarray(x, jnp.float32), jnp.asarray(y),
+            jnp.asarray(xe, jnp.float32), jnp.asarray(ye))
+
+
+def _make_trainer(engine, hetero=None):
+    from repro.api import GossipTrainer
+    from repro.common.config import OptimizerConfig, ProtocolConfig
+    from repro.models import simple
+
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=0.25,
+                           moving_rate=0.5, topology="uniform")
+    return GossipTrainer(
+        engine=engine, protocol=proto,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=lambda p, x, y: simple.xent_loss(simple.mlp_logits(p, x), y),
+        num_workers=WORKERS, hetero=hetero,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=24, depth=2,
+                                            num_classes=3)[0])
+
+
+def _eval_fn():
+    from repro.models import simple
+
+    @jax.jit
+    def ev(params, xe, ye):
+        return simple.xent_loss(simple.mlp_logits(params, xe), ye)
+    return ev
+
+
+def _run_until(trainer, batch, xe, ye, target, max_steps, virtual_time_of,
+               collect_staleness=False):
+    """Step until the consensus eval loss reaches ``target``; returns the
+    record (virtual time at hit, steps, final loss, staleness)."""
+    ev = _eval_fn()
+    state = trainer.init_state(0)
+    hit = None
+    prev = {"stale_time": 0.0, "stale_steps": 0, "stale_events": 0}
+    tgap_samples, sgap_samples = [], []
+    loss = float(ev(trainer.consensus_params(state), xe, ye))
+    for i in range(max_steps):
+        state, m = trainer.step(state, batch)
+        loss = float(ev(trainer.consensus_params(state), xe, ye))
+        if collect_staleness:
+            cur = {k: float(m[k]) for k in prev}
+            ev_d = cur["stale_events"] - prev["stale_events"]
+            if ev_d > 0:   # mean per-exchange gap inside this window
+                tgap_samples += [(cur["stale_time"] - prev["stale_time"]) / ev_d] * int(ev_d)
+                sgap_samples += [(cur["stale_steps"] - prev["stale_steps"]) / ev_d] * int(ev_d)
+            prev = cur
+        if hit is None and loss <= target:
+            hit = (virtual_time_of(i, m), i + 1)
+            if not collect_staleness:
+                break
+    rec = {"target_loss": target,
+           "virtual_time_to_target": None if hit is None else hit[0],
+           "steps_to_target": None if hit is None else hit[1],
+           "final_eval_loss": loss}
+    if collect_staleness:
+        for name, samples in (("stale_time_gap", tgap_samples),
+                              ("stale_step_gap", sgap_samples)):
+            arr = np.asarray(samples, np.float64)
+            counts, edges = np.histogram(arr, bins=8) if len(arr) else ([], [0.0])
+            rec[name + "_hist"] = {"edges": [round(float(e), 4) for e in np.asarray(edges)],
+                                   "counts": [int(c) for c in np.asarray(counts)]}
+            rec[name + "_mean"] = round(float(arr.mean()), 4) if len(arr) else 0.0
+        st = trainer._backend.sim  # final cumulative staleness (ProtocolState)
+        rec["host_clocks"] = [round(float(c), 3) for c in st.clocks]
+        rec["worker_steps"] = [int(s) for s in st.steps_done]
+    return rec
+
+
+def main(quick: bool = True) -> None:
+    from repro.common.config import HeteroConfig
+
+    max_steps = 80 if quick else 400
+    x, y, xe, ye = _problem()
+    ev = _eval_fn()
+
+    # the fixed loss target: what the synchronous baseline reaches within its
+    # budget (taken at 60% of its trajectory so both runs can reach it)
+    sync = _make_trainer("sim")
+    state = sync.init_state(0)
+    losses = [float(ev(sync.consensus_params(state), xe, ye))]
+    for _ in range(max_steps):
+        state, _ = sync.step(state, (x, y))
+        losses.append(float(ev(sync.consensus_params(state), xe, ye)))
+    target = float(losses[int(max_steps * 0.6)])
+
+    t0 = time.time()
+    # synchronous barrier: EVERY global step completes when the slowest worker
+    # does -> virtual time = (i+1) * slow_factor * mean_step_time
+    sync_rec = _run_until(
+        _make_trainer("sim"), (x, y), xe, ye, target, max_steps,
+        lambda i, m: (i + 1) * SLOW_FACTOR * MEAN_STEP_TIME)
+    sync_rec["virtual_time_per_step"] = SLOW_FACTOR * MEAN_STEP_TIME
+
+    hetero = HeteroConfig(time_model="slow_node", mean_step_time=MEAN_STEP_TIME,
+                          slow_worker=0, slow_factor=SLOW_FACTOR)
+    async_rec = _run_until(
+        _make_trainer("async", hetero), (x, y), xe, ye, target,
+        int(max_steps * SLOW_FACTOR), lambda i, m: float(m["virtual_time"]),
+        collect_staleness=True)
+
+    assert sync_rec["virtual_time_to_target"] is not None, sync_rec
+    assert async_rec["virtual_time_to_target"] is not None, async_rec
+    speedup = (sync_rec["virtual_time_to_target"]
+               / async_rec["virtual_time_to_target"])
+    # the acceptance claim: async gossip beats the barrier under a straggler
+    assert speedup > 1.0, (sync_rec, async_rec)
+
+    result = {
+        "workers": WORKERS, "slow_factor": SLOW_FACTOR,
+        "mean_step_time": MEAN_STEP_TIME, "target_loss": target,
+        "sync_barrier": sync_rec, "async_gossip": async_rec,
+        "virtual_time_speedup": round(speedup, 3),
+        "wall_seconds": round(time.time() - t0, 1),
+        "notes": (
+            "slow_node fleet: worker 0 is 4x slower. The synchronous barrier "
+            "(engine=sim) pays slow_factor*mean_step_time of virtual time per "
+            "step; engine=async lets the fast workers keep stepping/gossiping "
+            "(one masked fused pass per event window over the resident flat "
+            "plane) while ProtocolState accumulates per-exchange staleness. "
+            "Histograms bin the per-exchange virtual-time and step-count gaps "
+            "between partners."),
+    }
+    print("engine,virtual_time_to_target,steps_to_target,final_eval_loss")
+    print(f"sync_barrier,{sync_rec['virtual_time_to_target']},"
+          f"{sync_rec['steps_to_target']},{sync_rec['final_eval_loss']:.4f}")
+    print(f"async_gossip,{async_rec['virtual_time_to_target']},"
+          f"{async_rec['steps_to_target']},{async_rec['final_eval_loss']:.4f}")
+    print(f"# virtual-time speedup under 4x straggler: {speedup:.2f}x "
+          f"(mean step-gap staleness {async_rec['stale_step_gap_mean']})")
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main(quick="--full" not in sys.argv)

@@ -37,13 +37,22 @@ is measured, not assumed. ``codec="topk"`` (magnitude top-k + error-feedback
 residual) pushes further; ``@register_codec`` adds your own
 (benchmarks/comm_compress.py / BENCH_comm_compress.json for the numbers).
 
+Heterogeneous fleets are one keyword away (repro.hetero): ``engine="async"``
+plus a ``HeteroConfig`` runs the SAME protocol on an event-driven virtual-time
+simulator — each worker's clock advances by a pluggable compute-time model
+(lognormal stragglers below), local steps fire per worker, exchanges carry
+per-exchange staleness accounting in ``ProtocolState``, and a homogeneous
+``constant`` model reproduces ``engine="sim"`` bit-exactly
+(tests/test_hetero.py). See benchmarks/straggler.py / BENCH_straggler.json
+for the virtual-time win over the synchronous barrier under a 4x straggler.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
 from repro.api import GossipTrainer, available_protocols
-from repro.common.config import OptimizerConfig, ProtocolConfig
+from repro.common.config import HeteroConfig, OptimizerConfig, ProtocolConfig
 from repro.data.partition import batches_for_step, partition_iid
 from repro.data.synthetic import load_mnist
 from repro.models import simple
@@ -79,6 +88,42 @@ def train_one(method: str, train, test, codec: str = "none", **proto_kw):
     return acca, mb
 
 
+def train_one_async(method: str, train, test, **proto_kw):
+    """The same protocol on the virtual-time async engine under lognormal
+    stragglers: one facade ``step`` = one event window; metrics gain
+    ``virtual_time`` and the live staleness accumulators."""
+    proto = ProtocolConfig(method=method, topology="uniform", **proto_kw)
+    params0, _ = simple.init_mlp(jax.random.PRNGKey(0), in_dim=784, hidden=128,
+                                 depth=2, num_classes=10)
+
+    def loss_fn(params, x, y):
+        return simple.xent_loss(simple.mlp_logits(params, x), y)
+
+    trainer = GossipTrainer(
+        engine="async", protocol=proto,
+        hetero=HeteroConfig(time_model="lognormal", sigma=0.6),
+        optimizer=OptimizerConfig(name="nag", learning_rate=1e-3, momentum=0.99),
+        loss_fn=loss_fn, num_workers=WORKERS)
+    state = trainer.init_state(0, params=params0)
+    shards = partition_iid(train, WORKERS, seed=0)
+    # one facade step = one event WINDOW (often a single worker under
+    # stragglers), so budget total worker-steps, not lockstep global steps
+    windows = done = 0
+    while done < WORKERS * STEPS:
+        x, y = batches_for_step(shards, windows, BATCH // WORKERS)
+        state, m = trainer.step(state, (jnp.asarray(x), jnp.asarray(y)))
+        windows += 1
+        done += int(m["window_size"])
+    xt, yt = jnp.asarray(test.x), jnp.asarray(test.y)
+    acca = float(simple.accuracy(simple.mlp_logits(trainer.consensus_params(state), xt), yt))
+    events = max(int(state.proto.stale_events), 1)
+    print(f"{method+'+async':20s} aggregate_acc={acca:.4f} "
+          f"virtual_time={float(m['virtual_time']):8.1f} "
+          f"mean_staleness={float(state.proto.stale_time) / events:.2f}s "
+          f"({int(state.proto.stale_steps) / events:.2f} steps) over {events} exchanges")
+    return acca
+
+
 def main():
     print("registered protocols:", ", ".join(available_protocols()))
     train, test = load_mnist(num_train=25600, num_test=4000)
@@ -89,6 +134,10 @@ def main():
     # reported comm_bytes are the true (compressed) egress
     acc_q8, mb_q8 = train_one("elastic_gossip", train, test, codec="q8",
                               comm_probability=0.125, moving_rate=0.5)
+    # heterogeneous fleet: same protocol, virtual-time async engine,
+    # lognormal stragglers (repro.hetero)
+    train_one_async("elastic_gossip", train, test,
+                    comm_probability=0.125, moving_rate=0.5)
     acc_ar, mb_ar = train_one("allreduce", train, test)
     print(f"\nElastic Gossip reaches {acc_eg:.1%} vs All-reduce {acc_ar:.1%} "
           f"while sending {mb_eg:.1f} MB vs {mb_ar:.1f} MB per worker "

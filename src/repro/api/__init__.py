@@ -11,14 +11,17 @@ Four pieces (DESIGN: ISSUES 1 & 4):
 - the **protocol registry** (:mod:`repro.api.registry`): every algorithm is a
   :class:`Protocol` class registered under a name; ``available_protocols()``
   replaces the old ``METHODS`` tuple and ``@register_protocol`` is the one-file
-  extension point for new algorithms;
+  extension point for new algorithms. The same module registers **engines**:
+  ``@register_engine`` maps a name ("sim" | "dist" | "async" | yours) to a
+  GossipTrainer backend class and ``available_engines()`` lists them;
 - the **protocol classes** (:mod:`repro.api.protocols`): Alg. 1-6 with their
   gradient transform, comm update, gate/coefficient rule and comm-cost
   accounting in one object each;
 - the **GossipTrainer facade** (:mod:`repro.api.trainer`): engine-agnostic
-  ``.step(state, batch)`` over the simulation ("sim") and the production
-  shard_map ("dist") engines, owning scheduling, byte accounting and
-  checkpointing.
+  ``.step(state, batch)`` over the simulation ("sim"), the production
+  shard_map ("dist") and the virtual-time heterogeneous-fleet ("async",
+  :mod:`repro.core.gossip_async` + :mod:`repro.hetero`) engines, owning
+  scheduling, byte accounting and checkpointing.
 
 Typical use::
 
@@ -32,10 +35,14 @@ Typical use::
     state, metrics = trainer.step(state, (x, y))
 """
 from repro.api.registry import (  # noqa: F401
+    available_engines,
     available_protocols,
+    get_engine,
     get_protocol,
+    register_engine,
     register_protocol,
     resolve,
+    unregister_engine,
     unregister_protocol,
 )
 from repro.api.protocols import (  # noqa: F401
@@ -55,6 +62,7 @@ _LAZY = {
     "ENGINES": ("repro.api.trainer", "ENGINES"),
     "GossipSchedule": ("repro.core.scheduler", "GossipSchedule"),
     "SimTrainer": ("repro.core.gossip_sim", "SimTrainer"),
+    "AsyncTrainer": ("repro.core.gossip_async", "AsyncTrainer"),
     "DistTrainer": ("repro.train.step", "DistTrainer"),
     "make_serve_program": ("repro.serving.engine", "make_serve_program"),
     "consensus_params": ("repro.serving.engine", "consensus_params"),

@@ -32,6 +32,7 @@ from typing import Any, ClassVar, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.registry import register_protocol
 from repro.common.config import ProtocolConfig
@@ -60,6 +61,17 @@ class ProtocolState(NamedTuple):
     # counter SATURATES — bytes become a lower bound, never negative.
     comm_units: jax.Array         # int32 cumulative participation count
     comm_bytes: jax.Array         # f32 expected egress bytes/worker (derived)
+    # Virtual-time bookkeeping for the asynchronous engine
+    # (repro.core.gossip_async): None under the synchronous engines, so sync
+    # pytrees / checkpoints are unchanged. Staleness is accounted PER
+    # EXCHANGE: when worker w initiates a gossip exchange, the gap between its
+    # (clock, local step count) and its partner's is accumulated — mean
+    # staleness is stale_*/stale_events.
+    clocks: Optional[jax.Array] = None        # f32[W] per-worker virtual clock
+    worker_steps: Optional[jax.Array] = None  # i32[W] per-worker local steps
+    stale_time: Optional[jax.Array] = None    # f32 sum of virtual-time gaps
+    stale_steps: Optional[jax.Array] = None   # i32 sum of step-count gaps
+    stale_events: Optional[jax.Array] = None  # i32 exchange initiations
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +120,10 @@ class Protocol:
     pairwise: ClassVar[bool] = False       # pairwise gossip (ppermute-able)
     uses_center: ClassVar[bool] = False    # EASGD-style center variable
     per_worker_gate: ClassVar[bool] = True  # Bernoulli per worker (vs one draw)
+    # runs without a global step barrier (engine="async"): pairwise gossip,
+    # EASGD and the no-comm baseline all do; All-reduce SGD averages gradients
+    # across ALL workers every step, which is bulk-synchronous by definition
+    barrier_free: ClassVar[bool] = True
 
     def __init__(self, cfg: ProtocolConfig):
         self.cfg = cfg
@@ -170,6 +186,40 @@ class Protocol:
             return _topology().sample_matching(key, num_workers)
         return _topology().sample_uniform_peers(key, num_workers)
 
+    # ------------------------------------------------ host-side topology hook
+    def _host_schedule(self, num_workers: int, mesh_cfg=None, seed: int = 0):
+        from repro.common.config import MeshConfig
+        from repro.core import gossip_dist
+        mcfg = mesh_cfg or MeshConfig(data=num_workers, model=1, pods=1,
+                                      workers_per_pod=num_workers)
+        kind = "hypercube" if self.cfg.topology == "matching" else "random"
+        cache = self.__dict__.setdefault("_host_sched_cache", {})
+        key = (mcfg, kind, seed)
+        if key not in cache:
+            cache[key] = (gossip_dist.build_schedule(mcfg, kind, seed=seed), mcfg)
+        return cache[key]
+
+    def schedule_rounds(self, num_workers: int, mesh_cfg=None, seed: int = 0) -> int:
+        """Number of distinct rounds in the host-side matching schedule
+        (cycled by round index)."""
+        return len(self._host_schedule(num_workers, mesh_cfg, seed)[0])
+
+    def schedule_partners(self, round_idx: int, num_workers: int, mesh_cfg=None,
+                          seed: int = 0) -> np.ndarray:
+        """Host-side partner index per worker for one gossip round — THE
+        time-varying topology hook: hypercube vs. random matching (and any
+        round-dependent rewiring) is this ONE overridable method. The default
+        replays exactly the static ``gossip_dist.build_schedule`` the
+        distributed engine compiles, so the facade surfaces
+        (``GossipTrainer.matching_partners``, ``GossipSchedule.partners``) and
+        the compiled ppermute programs stay in lock-step; a registered
+        subclass overriding this changes every host consumer at once.
+        """
+        from repro.core import gossip_dist
+        sched, mcfg = self._host_schedule(num_workers, mesh_cfg, seed)
+        return np.array([gossip_dist.partner_of(sched, round_idx, w, mcfg)
+                         for w in range(mcfg.num_workers)])
+
     def comm_update(self, key: jax.Array, active: jax.Array, theta_stack: PyTree,
                     state: ProtocolState, step=None,
                     transmit: Optional[PyTree] = None,
@@ -204,7 +254,10 @@ class Protocol:
             theta_new = _topology().apply_mix_split(mix, theta_stack, transmit)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
         units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes)
-        return theta_new, ProtocolState(state.center, rounds, units, bytes_)
+        # _replace (not positional construction) so the async engine's
+        # virtual-time fields ride through untouched
+        return theta_new, state._replace(comm_rounds=rounds, comm_units=units,
+                                         comm_bytes=bytes_)
 
     # ------------------------------------- pairwise (dist-engine) realization
     def pair_gate_coef(self, my_active, peer_active):
@@ -273,6 +326,7 @@ class NoCommunication(Protocol):
 class AllReduceSGD(Protocol):
     """Alg. 1: gradient averaging every step (ring all-reduce accounting)."""
     communicates = False   # comm lives in the gradient transform, ungated
+    barrier_free = False   # every-step gradient averaging needs a full barrier
 
     def gradient_transform(self, grads_stack: PyTree) -> PyTree:
         return jax.tree.map(
@@ -340,7 +394,8 @@ class EASGD(Protocol):
         theta_new = jax.tree.map(lambda x, d: x + d, theta_stack, delta)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
         units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes)
-        return theta_new, ProtocolState(center_new, rounds, units, bytes_)
+        return theta_new, state._replace(center=center_new, comm_rounds=rounds,
+                                         comm_units=units, comm_bytes=bytes_)
 
     def comm_cost(self, param_bytes: int, num_workers: int) -> CommCost:
         # send local, receive center (center egress excluded: worker-side view)

@@ -15,6 +15,11 @@ adding a protocol is ONE new class in one file:
 
     ProtocolConfig(method="my_gossip", ...)   # usable everywhere immediately
 
+The same pattern covers *engines*: :func:`register_engine` maps a name
+("sim" | "dist" | "async" | yours) to a GossipTrainer backend class, so
+``GossipTrainer(engine=...)`` and ``launch.train --engine`` resolve through
+one registry too.
+
 This module is deliberately import-light (no jax, no engines) so core modules
 can depend on it without cycles.
 """
@@ -65,6 +70,61 @@ def unregister_protocol(name: str) -> None:
     """Remove a registered protocol (primarily for tests/plugins)."""
     _REGISTRY.pop(name, None)
     _resolve_cached.cache_clear()   # drop stale instances for the name
+
+
+# ---------------------------------------------------------------------------
+# engine registry (mirrors the protocol registry: GossipTrainer backends)
+# ---------------------------------------------------------------------------
+
+_ENGINES: Dict[str, type] = {}
+
+
+def register_engine(name: str) -> Callable[[type], type]:
+    """Class decorator: register a GossipTrainer backend under ``name``.
+
+    A backend implements the interface in :mod:`repro.api.trainer`
+    (init_state/step/gossip_exchange/schedule_state/... over FlatState) plus a
+    ``build(facade, kw)`` classmethod that validates and consumes the facade's
+    constructor kwargs. ``GossipTrainer(engine="<name>")`` then works
+    everywhere — the facade, ``launch.train --engine`` and the benchmarks all
+    resolve engines through this registry instead of a hardcoded if/else.
+    """
+    def deco(cls: type) -> type:
+        if name in _ENGINES and _ENGINES[name] is not cls:
+            raise ValueError(f"engine {name!r} already registered "
+                             f"({_ENGINES[name].__qualname__})")
+        cls.engine_name = name
+        _ENGINES[name] = cls
+        return cls
+    return deco
+
+
+def _ensure_builtin_engines() -> None:
+    # The built-in backends (sim/dist/async) register themselves when
+    # repro.api.trainer is imported; deferring keeps this module import-light.
+    from repro.api import trainer  # noqa: F401
+
+
+def available_engines() -> Tuple[str, ...]:
+    """All registered engine names (replaces the old ``ENGINES`` tuple)."""
+    _ensure_builtin_engines()
+    return tuple(sorted(_ENGINES))
+
+
+def get_engine(name: str) -> type:
+    """Resolve an engine name to its backend class; unknown names raise
+    ValueError listing the registered engines."""
+    _ensure_builtin_engines()
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(_ENGINES)}") from None
+
+
+def unregister_engine(name: str) -> None:
+    """Remove a registered engine (primarily for tests/plugins)."""
+    _ENGINES.pop(name, None)
 
 
 @functools.lru_cache(maxsize=None)

@@ -103,6 +103,13 @@ class FlatState:
                 "comm_rounds": self.proto.comm_rounds,
                 "comm_units": self.proto.comm_units,
                 "comm_bytes": self.proto.comm_bytes,
+                # async virtual-time fields (None — and therefore absent from
+                # the flattened payload — under the synchronous engines)
+                "clocks": self.proto.clocks,
+                "worker_steps": self.proto.worker_steps,
+                "stale_time": self.proto.stale_time,
+                "stale_steps": self.proto.stale_steps,
+                "stale_events": self.proto.stale_events,
             }),
             "comm": {"residual": getattr(self.comm, "residual", None)},
             "key": self.key,
@@ -115,8 +122,12 @@ class FlatState:
         opt = type(self.opt)(d["opt"]["step"], d["opt"]["mu"], d["opt"]["nu"])
         proto = self.proto
         if proto is not None:
-            proto = type(proto)(d["proto"]["center"], d["proto"]["comm_rounds"],
-                                d["proto"]["comm_units"], d["proto"]["comm_bytes"])
+            p = d["proto"]
+            proto = type(proto)(p["center"], p["comm_rounds"],
+                                p["comm_units"], p["comm_bytes"],
+                                p.get("clocks"), p.get("worker_steps"),
+                                p.get("stale_time"), p.get("stale_steps"),
+                                p.get("stale_events"))
         comm = self.comm
         if comm is not None:
             comm = type(comm)(d["comm"]["residual"])

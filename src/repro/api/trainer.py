@@ -33,7 +33,8 @@ appear only as lazy views (``state.params``) at the boundaries. Backends
 implement init_state/step/gossip_exchange/schedule_state against FlatState
 natively.
 
-Engines:
+Engines (resolved through ``repro.api.register_engine`` — any registered
+backend name works here):
 
 - ``engine="sim"``  exact Alg. 1-6 on stacked replicas
   (:class:`repro.core.gossip_sim.SimTrainer`); scheduling is traced into the
@@ -41,6 +42,11 @@ Engines:
 - ``engine="dist"`` the production shard_map/collective-permute engine
   (:class:`repro.train.step.DistTrainer` + ``repro.core.gossip_dist``);
   scheduling is host-side and replayable.
+- ``engine="async"`` the virtual-time heterogeneous-fleet engine
+  (:class:`repro.core.gossip_async.AsyncTrainer` + :mod:`repro.hetero`): one
+  :meth:`GossipTrainer.step` processes one event window, metrics gain
+  ``virtual_time``/``window_size``/staleness, and a constant homogeneous
+  compute-time model reproduces ``engine="sim"`` bit-exactly.
 """
 from __future__ import annotations
 
@@ -53,12 +59,17 @@ import numpy as np
 
 from repro.api import registry
 from repro.api.protocols import CommCost, stacked_param_bytes
-from repro.common.config import (MeshConfig, OptimizerConfig, ProtocolConfig,
-                                 TrainConfig)
+from repro.common.config import (HeteroConfig, MeshConfig, OptimizerConfig,
+                                 ProtocolConfig, TrainConfig)
 
 PyTree = Any
 
-ENGINES = ("sim", "dist")
+
+def __getattr__(name: str):
+    if name == "ENGINES":
+        # deprecated alias: the engine registry is the source of truth
+        return registry.available_engines()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _as_key(seed) -> jax.Array:
@@ -71,7 +82,8 @@ class GossipTrainer:
     """Protocol-agnostic, engine-agnostic trainer facade.
 
     Common arguments:
-      engine:     "sim" | "dist"
+      engine:     any registered engine name — "sim" | "dist" | "async" |
+                  a ``@register_engine`` addition (``available_engines()``)
       protocol:   ProtocolConfig (method name resolved via the registry)
       optimizer:  OptimizerConfig (default NAG, as the paper)
       init_fn:    key -> single-replica params (no worker dim)
@@ -80,6 +92,11 @@ class GossipTrainer:
     ``engine="sim"`` additionally takes ``loss_fn(params, x, y)`` and
     ``num_workers`` (``mesh_cfg`` optionally, for a dist-matching gossip
     schedule in :meth:`gossip_exchange`).
+
+    ``engine="async"`` takes the sim arguments plus ``hetero`` (a
+    :class:`HeteroConfig` selecting the registered compute-time model); one
+    :meth:`step` processes one virtual-time event window (see
+    :mod:`repro.core.gossip_async`).
 
     ``engine="dist"`` takes ``mesh``, ``mesh_cfg``, ``model_cfg``,
     ``params_axes``, ``global_batch``, ``seq_len`` (and optionally
@@ -96,10 +113,10 @@ class GossipTrainer:
                  model_cfg=None, params_axes: Optional[PyTree] = None,
                  global_batch: Optional[int] = None, seq_len: Optional[int] = None,
                  grad_accum: int = 1, seed: int = 0, fused_update: bool = True,
-                 codec: Optional[str] = None):
-        if engine not in ENGINES:
-            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-        self.engine = engine
+                 codec: Optional[str] = None,
+                 hetero: Optional[HeteroConfig] = None):
+        backend_cls = registry.get_engine(engine)   # unknown names raise with
+        self.engine = engine                        # the registered list
         # gossip-compression codec (repro.comm registry): an explicit
         # ``codec=`` overrides the protocol config's codec for this trainer
         if codec is not None:
@@ -114,17 +131,14 @@ class GossipTrainer:
         # effective for pairwise protocols on either engine; others keep their
         # per-leaf path regardless (capability-flag gated inside the engines).
         self.fused_update = fused_update
-        if engine == "sim":
-            if loss_fn is None or num_workers is None:
-                raise ValueError('engine="sim" requires loss_fn and num_workers')
-            self._backend = _SimBackend(self, loss_fn, num_workers, init_fn, mesh_cfg)
-        else:
-            if mesh is None or mesh_cfg is None or init_fn is None or params_axes is None:
-                raise ValueError('engine="dist" requires mesh, mesh_cfg, init_fn '
-                                 'and params_axes')
-            self._backend = _DistBackend(self, mesh, mesh_cfg, model_cfg, init_fn,
-                                         params_axes, global_batch, seq_len,
-                                         loss_fn, grad_accum, seed)
+        self.hetero = hetero
+        # registry-resolved backend: each engine class validates and consumes
+        # the kwargs it needs from the shared facade surface
+        self._backend = backend_cls.build(self, dict(
+            loss_fn=loss_fn, num_workers=num_workers, init_fn=init_fn,
+            mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=model_cfg,
+            params_axes=params_axes, global_batch=global_batch,
+            seq_len=seq_len, grad_accum=grad_accum, seed=seed, hetero=hetero))
 
     # ------------------------------------------------------------------ core
     @property
@@ -225,29 +239,33 @@ class GossipTrainer:
 # ---------------------------------------------------------------------------
 
 class _MatchingScheduleMixin:
-    """Shared host-side matching schedule (hypercube / random) so both engines
-    expose the SAME gossip rounds through the facade."""
-
-    def _schedule(self):
-        from repro.core import gossip_dist
-        if getattr(self, "_sched_rounds", None) is None:
-            kind = ("hypercube" if self.facade.protocol.topology == "matching"
-                    else "random")
-            self._sched_rounds = gossip_dist.build_schedule(self._sched_mesh_cfg(), kind)
-        return self._sched_rounds
+    """Shared host-side matching schedule (hypercube / random) so every engine
+    exposes the SAME gossip rounds through the facade — routed through the
+    protocol's ONE overridable :meth:`~repro.api.protocols.Protocol.
+    schedule_partners` hook (time-varying topologies override it in the
+    protocol class and every host consumer follows)."""
 
     def matching_partners(self, round_idx: int) -> np.ndarray:
-        from repro.core import gossip_dist
-        sched, mcfg = self._schedule(), self._sched_mesh_cfg()
-        return np.array([gossip_dist.partner_of(sched, round_idx, w, mcfg)
-                         for w in range(mcfg.num_workers)])
+        mcfg = self._sched_mesh_cfg()
+        return self.facade.impl.schedule_partners(round_idx, mcfg.num_workers,
+                                                  mesh_cfg=mcfg)
 
     @property
     def num_gossip_rounds(self) -> int:
-        return len(self._schedule())
+        mcfg = self._sched_mesh_cfg()
+        return self.facade.impl.schedule_rounds(mcfg.num_workers, mesh_cfg=mcfg)
 
 
+@registry.register_engine("sim")
 class _SimBackend(_MatchingScheduleMixin):
+    @classmethod
+    def build(cls, facade: GossipTrainer, kw: dict):
+        if kw.get("loss_fn") is None or kw.get("num_workers") is None:
+            raise ValueError(f'engine="{cls.engine_name}" requires loss_fn '
+                             'and num_workers')
+        return cls(facade, kw["loss_fn"], kw["num_workers"], kw.get("init_fn"),
+                   kw.get("mesh_cfg"))
+
     def __init__(self, facade: GossipTrainer, loss_fn, num_workers: int,
                  init_fn, mesh_cfg: Optional[MeshConfig]):
         from repro.core.gossip_sim import SimTrainer
@@ -257,7 +275,6 @@ class _SimBackend(_MatchingScheduleMixin):
         self.mesh_cfg = mesh_cfg
         self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer,
                               fused_update=facade.fused_update)
-        self._sched_rounds = None
         self._pb = None
         self._wire = None
 
@@ -330,7 +347,19 @@ class _SimBackend(_MatchingScheduleMixin):
         pass
 
 
+@registry.register_engine("dist")
 class _DistBackend(_MatchingScheduleMixin):
+    @classmethod
+    def build(cls, facade: GossipTrainer, kw: dict):
+        if (kw.get("mesh") is None or kw.get("mesh_cfg") is None
+                or kw.get("init_fn") is None or kw.get("params_axes") is None):
+            raise ValueError('engine="dist" requires mesh, mesh_cfg, init_fn '
+                             'and params_axes')
+        return cls(facade, kw["mesh"], kw["mesh_cfg"], kw.get("model_cfg"),
+                   kw["init_fn"], kw["params_axes"], kw.get("global_batch"),
+                   kw.get("seq_len"), kw.get("loss_fn"),
+                   kw.get("grad_accum", 1), kw.get("seed", 0))
+
     def __init__(self, facade: GossipTrainer, mesh, mesh_cfg: MeshConfig, model_cfg,
                  init_fn, params_axes, global_batch, seq_len, loss_fn,
                  grad_accum: int, seed: int):
@@ -345,9 +374,9 @@ class _DistBackend(_MatchingScheduleMixin):
                                    params_axes, loss_fn=loss_fn, grad_accum=grad_accum)
         if global_batch is not None:
             self.trainer.set_shape(global_batch, seq_len or 4096)
-        self.sched = GossipSchedule(facade.protocol, self.num_workers, seed=seed + 1)
+        self.sched = GossipSchedule(facade.protocol, self.num_workers, seed=seed + 1,
+                                    mesh_cfg=mesh_cfg)
         self._ts = self._tg = None
-        self._sched_rounds = None
         # host-side (python float64) accumulator: increments stay exact far
         # beyond f32's 2^24 granularity — the traced sim-engine counterpart is
         # ProtocolState.comm_units (see repro.api.protocols)
@@ -434,3 +463,59 @@ class _DistBackend(_MatchingScheduleMixin):
         self._host_step = int(state.step)   # one sync, at load time only
         if meta and "comm_bytes" in meta:
             self.comm_bytes = float(meta["comm_bytes"])
+
+
+@registry.register_engine("async")
+class _AsyncBackend(_SimBackend):
+    """Virtual-time asynchronous engine (repro.core.gossip_async): the sim
+    backend surface driven by an event loop — one facade ``step`` is one
+    event window, metrics additionally carry ``virtual_time`` /
+    ``window_size`` / staleness accumulators, and the host clock mirrors
+    persist through the checkpoint metadata."""
+
+    @classmethod
+    def build(cls, facade: GossipTrainer, kw: dict):
+        if kw.get("loss_fn") is None or kw.get("num_workers") is None:
+            raise ValueError('engine="async" requires loss_fn and num_workers')
+        return cls(facade, kw["loss_fn"], kw["num_workers"], kw.get("init_fn"),
+                   kw.get("mesh_cfg"), kw.get("hetero"))
+
+    def __init__(self, facade: GossipTrainer, loss_fn, num_workers: int,
+                 init_fn, mesh_cfg: Optional[MeshConfig],
+                 hetero: Optional[HeteroConfig]):
+        from repro.core.gossip_async import AsyncTrainer
+        self.facade = facade
+        self.init_fn = init_fn
+        self.num_workers = num_workers
+        self.mesh_cfg = mesh_cfg
+        # the AsyncTrainer satisfies the SimTrainer surface the inherited
+        # backend methods drive (init/step/rank0/aggregate)
+        self.sim = AsyncTrainer(loss_fn, num_workers, facade.protocol,
+                                facade.optimizer, hetero=hetero,
+                                fused_update=facade.fused_update)
+        self._pb = None
+        self._wire = None
+
+    # ------------------------------------------------- virtual-time schedule
+    def schedule_state(self) -> dict:
+        # unlike engine="sim" (whose whole schedule lives in FlatState.key)
+        # the async engine adds the host-side virtual-time position
+        return {"hetero_clock": self.sim.clock_state()}
+
+    def restore_schedule(self, sched_state: dict) -> None:
+        hc = (sched_state or {}).get("hetero_clock")
+        if hc:
+            self.sim.anchor(hc["clocks"], hc["steps_done"])
+
+    def checkpoint_extra(self) -> dict:
+        # float64 clocks via JSON round-trip exactly; the device-side f32
+        # proto.clocks are only a fallback for checkpoints missing this
+        return {"hetero_clock": self.sim.clock_state()}
+
+    def on_checkpoint_loaded(self, state, meta) -> None:
+        hc = (meta or {}).get("hetero_clock")
+        if hc:
+            self.sim.anchor(hc["clocks"], hc["steps_done"])
+        elif state.proto is not None and state.proto.clocks is not None:
+            self.sim.anchor(np.asarray(state.proto.clocks, np.float64),
+                            np.asarray(state.proto.worker_steps, np.int64))

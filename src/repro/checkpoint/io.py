@@ -36,6 +36,13 @@ SEP = "::"
 
 FLAT_FORMAT = 2       # checkpoint format version written by save_state
 
+# optional FlatState payload keys: the async engine's virtual-time fields are
+# None (hence absent) in checkpoints written by the synchronous engines — a
+# cross-engine restore keeps the template's (zero-initialized) values
+VIRTUAL_TIME_KEYS = tuple(
+    f"proto{SEP}{k}" for k in ("clocks", "worker_steps", "stale_time",
+                               "stale_steps", "stale_events"))
+
 
 def _path_key(path) -> str:
     return SEP.join(
@@ -66,14 +73,23 @@ def save(path: str, tree: PyTree, meta: Optional[dict] = None,
             json.dump(meta, f, indent=2, default=str)
 
 
-def restore(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+def restore(path: str, like: PyTree, missing_ok: Tuple[str, ...] = ()) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    ``missing_ok``: key prefixes that may be absent from the payload — those
+    leaves keep ``like``'s values instead of raising (used for optional
+    engine-specific state, e.g. the async virtual-time fields when loading a
+    checkpoint written by a synchronous engine)."""
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path_keys, ref in paths:
         key = _path_key(path_keys) or "_root"
+        if key not in flat and any(key == m or key.startswith(m + SEP)
+                                   for m in missing_ok):
+            leaves.append(jnp.asarray(ref))
+            continue
         arr = flat[key]
         assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
         leaves.append(jnp.asarray(arr, dtype=ref.dtype))
@@ -158,11 +174,13 @@ def _legacy_to_state(flat: Dict[str, np.ndarray], like):
                          nu if nu is not None else {})
     proto = like.proto
     if proto is not None:
-        proto = type(proto)(
-            tree_bufs(f"proto{SEP}.center", lead=False),
-            scalar(f"proto{SEP}.comm_rounds", proto.comm_rounds),
-            scalar(f"proto{SEP}.comm_units", proto.comm_units),
-            scalar(f"proto{SEP}.comm_bytes", proto.comm_bytes))
+        # _replace keeps fields legacy payloads never had (the async engine's
+        # virtual-time bookkeeping) at the template's values instead of None
+        proto = proto._replace(
+            center=tree_bufs(f"proto{SEP}.center", lead=False),
+            comm_rounds=scalar(f"proto{SEP}.comm_rounds", proto.comm_rounds),
+            comm_units=scalar(f"proto{SEP}.comm_units", proto.comm_units),
+            comm_bytes=scalar(f"proto{SEP}.comm_bytes", proto.comm_bytes))
     comm = like.comm
     if comm is not None and getattr(comm, "residual", None) is not None:
         comm = type(comm)(tree_bufs(f"comm{SEP}.residual"))
@@ -202,7 +220,8 @@ def restore_state(path: str, like, meta: Optional[dict] = None):
                 "state's layout (parameter tree renamed/reordered/resized "
                 "since the checkpoint was written?) — refusing to slice the "
                 f"saved plane with a different layout: {path}")
-        return like.from_state_dict(restore(path, like.state_dict()))
+        return like.from_state_dict(restore(path, like.state_dict(),
+                                            missing_ok=VIRTUAL_TIME_KEYS))
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
     return _legacy_to_state(flat, like)

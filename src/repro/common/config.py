@@ -287,6 +287,25 @@ class ProtocolConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class HeteroConfig:
+    """Heterogeneous-fleet virtual-time model (repro.hetero, engine="async").
+
+    Selects a registered compute-time model and its knobs; all stochastic
+    duration draws hash ``(seed, worker, step)`` (the codec_seeds pattern), so
+    a run's virtual timeline is bit-reproducible across restarts.
+    """
+    time_model: str = "constant"     # constant | lognormal | slow_node
+    #                                  | fail_rejoin | any @register_time_model
+    mean_step_time: float = 1.0      # mean virtual seconds per local SGD step
+    sigma: float = 0.25              # lognormal: log-space std (mean-preserving)
+    slow_worker: int = 0             # slow_node / fail_rejoin: affected worker
+    slow_factor: float = 4.0         # slow_node: straggler slowdown multiplier
+    fail_at: float = 0.0             # fail_rejoin: outage start (virtual time)
+    rejoin_at: float = 0.0           # fail_rejoin: outage end; <= fail_at -> off
+    seed: int = 0                    # hash-seed for per-(worker, step) draws
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "nag"                # sgd | nag | adamw  (paper uses NAG, Alg. 5)
     learning_rate: float = 1e-3

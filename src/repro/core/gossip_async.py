@@ -1,0 +1,228 @@
+"""Asynchronous gossip engine: event-driven virtual time over the flat plane.
+
+Every other engine in the repo is bulk-synchronous — all W workers step in
+lockstep and exchanges fire on a global step counter. This engine simulates
+the paper's actual target environments (IoT fleets, edge servers, mixed
+clusters — Jin et al.'s asynchronous Gossiping SGD, Daily et al.'s
+GossipGraD): each worker owns a **virtual clock** driven by a pluggable
+compute-time model (:mod:`repro.hetero.models`), local SGD steps fire
+per-worker as its clock advances, and pairwise Elastic-Gossip /
+Gossiping-SGD exchanges carry per-exchange **staleness accounting** (the
+virtual-time and step-count gap between the partners) in ``ProtocolState``.
+
+Execution model — host priority queue, batched device programs:
+
+- The host keeps authoritative float64 mirrors of every worker's virtual
+  clock and local step count, plus the time model. One engine step pops the
+  earliest completion time ``t`` and forms the **event window**: every worker
+  whose next step completes exactly at ``t`` (the whole fleet for a
+  homogeneous model; a singleton under lognormal stragglers). Worker rows of
+  the resident ``[W, total]`` FlatState plane only change at their OWN
+  windows, so concurrent local steps commute and the window batches into ONE
+  masked device program.
+- A **full-fleet window dispatches the synchronous step program verbatim**
+  (the exact :meth:`SimTrainer._step` trace — same executable shape, hence
+  bit-identical numerics); a partial window runs the same arithmetic with a
+  ``worker_mask``: in-window workers may initiate (``active &= mask`` rides
+  the existing participation-gate machinery into the mixing matrix and the
+  fused Pallas kernel — q8/topk codec wires unchanged) and out-of-window rows
+  are kept bit-exactly by a row-select epilogue.
+- Virtual clocks, per-worker step counts and staleness accumulators advance
+  in a separate tiny jitted **clock program** after either window kind — it
+  re-derives the step's gate/partner draws from the pre-step PRNG key (pure
+  functions of the key), so the hot step program stays byte-for-byte the
+  sim engine's.
+- **Exchange semantics**: a worker's resident row IS its last *published*
+  (completed) step, so a partner is always exchange-ready — an in-window
+  initiator whose comm gate fires exchanges with its sampled partner's
+  current row (the symmetric mixing matrix updates both rows, conserving the
+  parameter sum for Elastic Gossip). Staleness records how stale that partner
+  row was: ``|clock_i - clock_k|`` and ``|steps_i - steps_k|`` accumulate per
+  initiation in ``ProtocolState`` (``stale_time``/``stale_steps``/
+  ``stale_events``).
+
+Degenerate case (the correctness anchor, tests/test_hetero.py): under
+``HeteroConfig(time_model="constant")`` every window is the full fleet and
+the trajectory — params, velocity, comm_bytes, the schedule's PRNG key — is
+**bit-exact** equal to ``engine="sim"``.
+
+Determinism: compute-time draws hash ``(seed, worker, step)`` (the
+``codec_seeds`` pattern — :mod:`repro.hetero.models`), and the in-program
+gate/partner draws advance the state-carried PRNG key exactly like the sim
+engine, so a run is bit-reproducible across restarts and independent of host
+RNG state; the host clock mirrors are persisted losslessly (float64 via JSON
+metadata) by the facade checkpoint path and re-anchored on load.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.state import FlatState
+from repro.common.config import HeteroConfig, OptimizerConfig, ProtocolConfig
+from repro.core import protocols
+from repro.core.gossip_sim import SimTrainer
+from repro.hetero.models import resolve_time_model
+from repro.optim.optimizers import OptState
+
+PyTree = Any
+
+
+class AsyncTrainer(SimTrainer):
+    """Virtual-time asynchronous trainer over W heterogeneous workers.
+
+    Same constructor surface as :class:`SimTrainer` plus ``hetero`` (a
+    :class:`HeteroConfig` naming the registered compute-time model). The
+    protocol must be barrier-free (pairwise gossip, EASGD or the no-comm
+    baseline) — All-reduce SGD averages gradients across the whole fleet
+    every step and cannot run without a global barrier.
+
+    Step-indexed knobs count EVENT WINDOWS here, not per-worker updates:
+    the shared ``step``/``opt.step`` counter advances once per window (a
+    single worker under stragglers), so ``comm_period=tau`` fires every
+    tau-th *window* and a learning-rate / moving-rate schedule advances
+    per window — under a heterogeneous fleet that is ~W times faster than
+    any one worker's update count (a constructor warning flags non-constant
+    schedules). Per-worker update counts live in
+    ``ProtocolState.worker_steps``.
+    """
+
+    def __init__(self, loss_fn: Callable, num_workers: int,
+                 protocol: ProtocolConfig, optimizer: OptimizerConfig,
+                 hetero: Optional[HeteroConfig] = None,
+                 fused_update: bool = True):
+        super().__init__(loss_fn, num_workers, protocol, optimizer,
+                         fused_update=fused_update)
+        if not self._impl.barrier_free:
+            raise ValueError(
+                f"protocol {protocol.method!r} needs a global step barrier "
+                '(barrier_free=False) and cannot run under engine="async"')
+        if (optimizer.schedule != "constant" or optimizer.warmup_steps > 0
+                or protocol.alpha_decay_steps > 0):
+            warnings.warn(
+                'engine="async": step-indexed schedules (lr warmup/decay, '
+                "alpha annealing) advance once per EVENT WINDOW, not per "
+                "worker update — under a heterogeneous fleet they run ~W "
+                "times faster than any single worker's update count",
+                UserWarning, stacklevel=3)
+        self.hetero = hetero or HeteroConfig()
+        self.time_model = resolve_time_model(self.hetero)
+        # authoritative host mirrors of the virtual timeline (float64 — the
+        # device-side ProtocolState.clocks are a float32 view for staleness
+        # metrics). Re-anchored at init/checkpoint-load; the engine drives ONE
+        # sequential stream, like the dist backend's _host_step mirror.
+        self.clocks = np.zeros((num_workers,), np.float64)
+        self.steps_done = np.zeros((num_workers,), np.int64)
+        self._clock_fn = jax.jit(self._advance_clocks)
+
+    # ------------------------------------------------------------- lifecycle
+    def init(self, params_stack: PyTree, seed: int = 0) -> FlatState:
+        state = super().init(params_stack, seed)
+        W = self.num_workers
+        self.anchor(np.zeros((W,)), np.zeros((W,), np.int64))
+        return state.replace(proto=state.proto._replace(
+            clocks=jnp.zeros((W,), jnp.float32),
+            worker_steps=jnp.zeros((W,), jnp.int32),
+            stale_time=jnp.zeros((), jnp.float32),
+            stale_steps=jnp.zeros((), jnp.int32),
+            stale_events=jnp.zeros((), jnp.int32)))
+
+    def anchor(self, clocks, steps_done) -> None:
+        """Re-anchor the host virtual-time mirrors (init / checkpoint load)."""
+        self.clocks = np.array(clocks, np.float64).reshape(self.num_workers)
+        self.steps_done = np.array(steps_done, np.int64).reshape(self.num_workers)
+
+    def clock_state(self) -> dict:
+        """JSON-serializable virtual-time position. float64 -> JSON round-trips
+        exactly, so a resumed run continues the clocks bit-identically."""
+        return {"clocks": [float(c) for c in self.clocks],
+                "steps_done": [int(s) for s in self.steps_done]}
+
+    # ------------------------------------------------------------ event loop
+    def next_window(self):
+        """(t, mask, next_times): the earliest next completion time across the
+        fleet and the boolean window of workers completing exactly then."""
+        nxt = self.time_model.next_completion(self.steps_done, self.clocks)
+        t = float(np.min(nxt))
+        return t, nxt <= t, nxt
+
+    def step(self, state: FlatState, x, y):
+        """Process ONE event window: every in-window worker completes a local
+        SGD step (consuming its row of the batch) and, gate willing, initiates
+        a gossip exchange — one masked fused pass over the resident plane,
+        plus the tiny clock program."""
+        t, mask, nxt = self.next_window()
+        # pre-step PRNG key / step for the clock program's draw re-derivation
+        # (copies: the step donates the state's buffers)
+        key0, step0 = jnp.array(state.key), jnp.array(state.step)
+        if mask.all():
+            # full-fleet window: the EXACT synchronous program (bit-parity)
+            state, m = self._step_fn(state, x, y)
+        else:
+            state, m = self._step_fn(state, x, y, jnp.asarray(mask))
+        proto = self._clock_fn(state.proto, key0, step0,
+                               jnp.asarray(nxt, jnp.float32), jnp.asarray(mask))
+        state = state.replace(proto=proto)
+        self.clocks = np.where(mask, nxt, self.clocks)
+        self.steps_done = self.steps_done + mask
+        m = dict(m, virtual_time=t,
+                 window_size=int(mask.sum()),
+                 stale_time=proto.stale_time,
+                 stale_steps=proto.stale_steps,
+                 stale_events=proto.stale_events)
+        return state, m
+
+    # ------------------------------------------------- traced window pieces
+    def _advance_clocks(self, proto, key0, step0, new_clocks, worker_mask):
+        """Clock program: advance virtual clocks / local step counts for the
+        window and accumulate per-exchange staleness. Gate and partner draws
+        are re-derived from the PRE-step PRNG key — pure functions of it, so
+        they equal exactly what the step program consumed — keeping this
+        bookkeeping OUT of the hot step (whose full-window trace must stay
+        byte-identical to the sim engine's)."""
+        _, sel_key, gate_key = jax.random.split(key0, 3)
+        clocks = jnp.where(worker_mask, new_clocks, proto.clocks)
+        wsteps = proto.worker_steps + worker_mask.astype(jnp.int32)
+        stale_time, stale_steps, stale_events = (
+            proto.stale_time, proto.stale_steps, proto.stale_events)
+        if self._impl.pairwise:
+            active = jnp.logical_and(
+                protocols.comm_gate(self.protocol, gate_key, step0,
+                                    self.num_workers), worker_mask)
+            peers = self._impl.sample_peers(sel_key, self.num_workers)
+            act_f = active.astype(jnp.float32)
+            act_i = active.astype(jnp.int32)
+            stale_time = stale_time + jnp.sum(
+                act_f * jnp.abs(clocks - clocks[peers]))
+            stale_steps = stale_steps + jnp.sum(
+                act_i * jnp.abs(wsteps - wsteps[peers]))
+            stale_events = stale_events + jnp.sum(act_i)
+        return proto._replace(clocks=clocks, worker_steps=wsteps,
+                              stale_time=stale_time, stale_steps=stale_steps,
+                              stale_events=stale_events)
+
+    def _finalize_window(self, state: FlatState, worker_mask, theta_new,
+                         opt_new, losses, metrics):
+        """Masked epilogue of the shared ``_step`` arithmetic (partial windows
+        only): out-of-window rows keep their previous values bit-exactly."""
+        mrow = worker_mask.reshape(-1, 1)
+
+        def keep(new_bufs, old_bufs):
+            return {k: jnp.where(mrow, new_bufs[k], old_bufs[k])
+                    for k in new_bufs}
+
+        theta_new = keep(theta_new, state.theta)
+        opt_new = OptState(
+            opt_new.step,
+            keep(opt_new.mu, state.opt.mu) if opt_new.mu else opt_new.mu,
+            keep(opt_new.nu, state.opt.nu) if opt_new.nu else opt_new.nu)
+        wm = worker_mask.astype(jnp.float32)
+        metrics = dict(
+            metrics,
+            loss_mean=jnp.sum(losses * wm) / jnp.maximum(jnp.sum(wm), 1.0),
+            loss_max=jnp.max(jnp.where(worker_mask, losses, -jnp.inf)))
+        return theta_new, opt_new, metrics

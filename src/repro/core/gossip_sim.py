@@ -137,7 +137,16 @@ class SimTrainer:
         return jax.lax.cond(jnp.any(active), fire, skip)
 
     # -- one synchronous step across all workers ---------------------------
-    def _step(self, state: FlatState, x, y):
+    def _step(self, state: FlatState, x, y, worker_mask=None):
+        """One step over the stacked workers. ``worker_mask`` is the
+        virtual-time window hook used by the async engine
+        (:mod:`repro.core.gossip_async`): ``None`` here (the synchronous
+        engine) — a trace-time constant, so the sim jaxpr is unchanged. With a
+        mask, only in-window workers may initiate an exchange and commit their
+        update (out-of-window rows are kept bit-exactly); the async engine
+        dispatches full-fleet windows through the maskless signature, i.e.
+        through THIS very program, which is what makes its homogeneous-fleet
+        degenerate case bit-exact against the sim engine."""
         cfg = self.protocol
         spec = state.spec
         row_spec = spec.with_lead(())
@@ -155,6 +164,11 @@ class SimTrainer:
         # communication-related component (lines 4-8), simultaneous, directly
         # on the resident buffers (one mixing einsum per dtype bucket)
         active = protocols.comm_gate(cfg, gate_key, state.step, self.num_workers)
+        if worker_mask is not None:
+            # async window: only in-window workers (at a step boundary) may
+            # INITIATE an exchange; out-of-window workers still respond
+            # passively through the mixing matrix with their last published row
+            active = jnp.logical_and(active, worker_mask)
         transmit, comm_new = (self._codec_transmit(state, active)
                               if self.codec is not None else (None, state.comm))
         kw = ({"wire_bytes": self._wire_bytes(spec)} if self._pass_wire_bytes
@@ -202,6 +216,12 @@ class SimTrainer:
             "loss_max": jnp.max(losses),
             "comm_active": jnp.sum(active.astype(jnp.int32)),
         }
+        if worker_mask is not None:
+            # async only: keep out-of-window rows bit-exactly (defined by
+            # AsyncTrainer; clock/staleness bookkeeping runs in a separate
+            # micro-program so full windows reuse the maskless trace)
+            theta_new, opt_new, metrics = self._finalize_window(
+                state, worker_mask, theta_new, opt_new, losses, metrics)
         return state.replace(theta=theta_new, opt=opt_new, proto=proto_new,
                              comm=comm_new, key=key,
                              step=state.step + 1), metrics

@@ -21,7 +21,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.api import registry
-from repro.common.config import ProtocolConfig
+from repro.common.config import MeshConfig, ProtocolConfig
 
 
 @dataclasses.dataclass
@@ -30,10 +30,31 @@ class GossipSchedule:
     num_workers: int
     seed: int = 0
     round_counter: int = 0
+    # matching decomposition for partners() — None: one flat worker group
+    mesh_cfg: Optional[MeshConfig] = None
 
     def __post_init__(self):
         self._rng = np.random.RandomState(self.seed)
         self._impl = registry.resolve(self.cfg)
+
+    # ----------------------------------------------------- topology surface
+    def partners(self, round_idx: Optional[int] = None) -> Optional[np.ndarray]:
+        """Partner index per worker for ``round_idx`` (default: the current
+        ``round_counter``) — surfaced from the protocol's ONE overridable
+        :meth:`~repro.api.protocols.Protocol.schedule_partners` hook, so
+        hypercube vs. random matching vs. any time-varying topology is a
+        protocol-class decision, not scheduler code. None for non-pairwise
+        protocols."""
+        if not self._impl.pairwise:
+            return None
+        r = self.round_counter if round_idx is None else round_idx
+        return self._impl.schedule_partners(r, self.num_workers,
+                                            mesh_cfg=self.mesh_cfg)
+
+    def num_rounds(self) -> int:
+        """Distinct rounds in the matching schedule (cycled by round index)."""
+        return self._impl.schedule_rounds(self.num_workers,
+                                          mesh_cfg=self.mesh_cfg)
 
     def poll(self, step: int) -> Tuple[bool, Optional[np.ndarray], int]:
         """-> (fire, active mask [W] float32, round_idx). Advances PRNG every
@@ -60,11 +81,25 @@ class GossipSchedule:
     def state(self) -> dict:
         return {"round_counter": self.round_counter,
                 "rng_state": self._rng.get_state()[1].tolist(),
-                "rng_pos": int(self._rng.get_state()[2])}
+                "rng_pos": int(self._rng.get_state()[2]),
+                # topology descriptors: partners() is pure in (round_counter,
+                # these), so restoring the counter restores the full partner
+                # sequence too — persisted for validation on restore
+                "num_workers": self.num_workers,
+                "topology": self.cfg.topology}
 
     def restore(self, state: dict) -> None:
         """Inverse of :meth:`state`: rewind to a saved schedule position so a
-        resumed run fires the exact same (fire, active, round) sequence."""
+        resumed run fires the exact same (fire, active, round, partners)
+        sequence. Older snapshots without the topology fields restore too."""
+        if "num_workers" in state and int(state["num_workers"]) != self.num_workers:
+            raise ValueError(
+                f"schedule snapshot is for {state['num_workers']} workers, "
+                f"this scheduler drives {self.num_workers}")
+        if "topology" in state and state["topology"] != self.cfg.topology:
+            raise ValueError(
+                f"schedule snapshot used topology {state['topology']!r}, "
+                f"this scheduler uses {self.cfg.topology!r}")
         self.round_counter = int(state["round_counter"])
         self._rng.set_state(("MT19937",
                              np.asarray(state["rng_state"], np.uint32),

@@ -1,0 +1,47 @@
+"""repro.hetero — heterogeneous-worker virtual time for the async engine.
+
+The paper's pitch is training on *heterogeneous* environments (IoT devices,
+edge servers, underutilized mixed fleets); this package supplies the time
+dimension that makes those scenarios simulable. It mirrors the repro.api /
+repro.comm registries:
+
+- the **compute-time model registry** (:mod:`repro.hetero.models`): every
+  fleet-speed model is a :class:`ComputeTimeModel` class registered under a
+  name (``constant`` | ``lognormal`` | ``slow_node`` | ``fail_rejoin``);
+  ``@register_time_model`` is the one-file extension point;
+- :class:`repro.common.config.HeteroConfig` selects and parameterizes a model
+  (``GossipTrainer(engine="async", hetero=HeteroConfig(...))`` /
+  ``launch.train --engine async --time-model ...``);
+- **hash-seeded determinism**: all duration draws are pure functions of
+  ``(seed, worker, step)`` via :func:`hetero_hash` — the ``codec_seeds``
+  pattern — so virtual time is bit-reproducible across restarts and
+  independent of host RNG state.
+
+The consumer is the event-driven engine in :mod:`repro.core.gossip_async`
+(``GossipTrainer(engine="async")``): worker clocks advance by these models,
+local SGD steps fire per worker as its clock advances, and pairwise gossip
+exchanges carry per-exchange staleness accounting in ``ProtocolState``.
+
+Typical use::
+
+    from repro.api import GossipTrainer
+    from repro.common.config import HeteroConfig, ProtocolConfig
+
+    trainer = GossipTrainer(
+        engine="async",
+        protocol=ProtocolConfig(method="elastic_gossip", comm_probability=0.25),
+        hetero=HeteroConfig(time_model="lognormal", sigma=0.5),
+        loss_fn=loss_fn, num_workers=8)
+"""
+from repro.common.config import HeteroConfig  # noqa: F401  (re-export)
+from repro.hetero.models import (  # noqa: F401
+    ComputeTimeModel,
+    available_time_models,
+    get_time_model,
+    hetero_hash,
+    hetero_normal,
+    hetero_uniform,
+    register_time_model,
+    resolve_time_model,
+    unregister_time_model,
+)

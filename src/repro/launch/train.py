@@ -1,18 +1,25 @@
 """End-to-end training driver (single-controller), built on ``repro.api``.
 
-The driver is protocol-agnostic: it constructs a
-:class:`repro.api.GossipTrainer` with ``engine="dist"`` and calls ONE method
-per step — ``trainer.step(state, batch)`` over the flat-resident
+The driver is protocol- AND engine-agnostic: it constructs a
+:class:`repro.api.GossipTrainer` for any registered engine (``--engine
+{sim,dist,async,...}``, resolved via ``repro.api.register_engine``) and calls
+ONE method per step — ``trainer.step(state, batch)`` over the flat-resident
 :class:`repro.api.FlatState` (params live as flat per-dtype buffers; the
 driver's divergence diagnostics read ``state.theta`` directly and checkpoints
 are written in the flat v2 format). Scheduling (fire/active/round polling and
-the train vs. train+gossip program selection), communication-byte accounting
-and checkpoint/schedule persistence all live inside the facade; protocol
-names come from the registry, so a newly registered protocol is immediately
+the train vs. train+gossip program selection — or, for ``--engine async``,
+the virtual-time event loop), communication-byte accounting and
+checkpoint/schedule persistence all live inside the facade; protocol names
+come from the registry, so a newly registered protocol is immediately
 launchable with ``--method <name>``.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
         --reduced --steps 50 --method elastic_gossip --p 0.25
+
+    # heterogeneous fleet: 4x straggler under virtual-time async gossip
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --reduced --steps 50 --engine async --time-model slow_node \
+        --slow-factor 4 --workers 4 --p 0.25
 
 On this CPU container it is exercised with reduced configs
 (examples/quickstart.py, tests); on a real cluster the same driver drives the
@@ -28,9 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import GossipTrainer, available_protocols
+from repro.api import GossipTrainer, available_engines, available_protocols
 from repro.comm import available_codecs
-from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
+from repro.common.config import (HeteroConfig, MeshConfig, OptimizerConfig,
+                                 ProtocolConfig)
+from repro.hetero import available_time_models
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.consensus import divergence_metrics
 from repro.launch.mesh import make_host_mesh, make_worker_mesh
@@ -68,37 +77,59 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         alpha: float, workers: int, global_batch: int, seq: int, lr: float,
         seed: int = 0, checkpoint_dir: str = "", log_every: int = 10,
         production_mesh: bool = False, multi_pod: bool = False,
-        codec: str = "none"):
+        codec: str = "none", engine: str = "dist",
+        time_model: str = "constant", mean_step_time: float = 1.0,
+        sigma: float = 0.25, slow_worker: int = 0, slow_factor: float = 4.0):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
                            comm_period=tau, codec=codec)
-    if production_mesh:
-        mesh_cfg = MeshConfig(data=16, model=16, pods=2 if multi_pod else 1,
-                              workers_per_pod=workers)
-        mesh = make_worker_mesh(mesh_cfg)
-    else:
-        mesh_cfg = MeshConfig(data=len(jax.devices()), model=1, pods=1,
-                              workers_per_pod=workers)
-        mesh = make_host_mesh(workers)
+    opt = OptimizerConfig(name="nag", learning_rate=lr, momentum=0.9)
 
     def init_fn(key):
         params, _ = tr.init_lm(key, cfg)
         return params
 
-    _, axes = tr.abstract_lm(cfg)
-    trainer = GossipTrainer(
-        engine="dist", protocol=proto,
-        optimizer=OptimizerConfig(name="nag", learning_rate=lr, momentum=0.9),
-        mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=cfg, init_fn=init_fn,
-        params_axes=axes, global_batch=global_batch, seq_len=seq, seed=seed)
+    if engine == "dist":
+        if production_mesh:
+            mesh_cfg = MeshConfig(data=16, model=16, pods=2 if multi_pod else 1,
+                                  workers_per_pod=workers)
+            mesh = make_worker_mesh(mesh_cfg)
+        else:
+            mesh_cfg = MeshConfig(data=len(jax.devices()), model=1, pods=1,
+                                  workers_per_pod=workers)
+            mesh = make_host_mesh(workers)
+        _, axes = tr.abstract_lm(cfg)
+        trainer = GossipTrainer(
+            engine="dist", protocol=proto, optimizer=opt,
+            mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=cfg, init_fn=init_fn,
+            params_axes=axes, global_batch=global_batch, seq_len=seq, seed=seed)
+        num_workers = mesh_cfg.num_workers
+        as_batch = lambda b: b
+    else:
+        # stacked-replica engines (sim / async) on the same transformer loss;
+        # engine="async" additionally takes the heterogeneity config — each
+        # facade step then processes one virtual-time event window
+        num_workers = workers
+        hetero = HeteroConfig(time_model=time_model, mean_step_time=mean_step_time,
+                              sigma=sigma, slow_worker=slow_worker,
+                              slow_factor=slow_factor, seed=seed)
+
+        def loss_fn(params, x, y):
+            return tr.lm_loss(params, cfg, x, y)[0]   # scalar (drop aux dict)
+
+        trainer = GossipTrainer(
+            engine=engine, protocol=proto, optimizer=opt, loss_fn=loss_fn,
+            num_workers=num_workers, init_fn=init_fn, seed=seed,
+            hetero=hetero if engine == "async" else None)
+        as_batch = lambda b: (b["tokens"], b["labels"])
     state = trainer.init_state(seed)
-    batches = lm_batches(cfg, mesh_cfg.num_workers, global_batch // mesh_cfg.num_workers,
+    batches = lm_batches(cfg, num_workers, global_batch // num_workers,
                          seq, seed)
     history = []
     t0 = time.time()
     for i in range(steps):
-        state, m = trainer.step(state, next(batches))
+        state, m = trainer.step(state, as_batch(next(batches)))
         if i % log_every == 0 or i == steps - 1:
             # diagnostics read the resident flat plane directly (identical
             # numbers to the per-leaf tree: padding is zeros on both sides of
@@ -108,6 +139,9 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
                    "consensus_rel": float(div["consensus_rel"]),
                    "fired": bool(m["fired"]),
                    "comm_mb": round(float(m["comm_bytes"]) / 1e6, 3)}
+            if "virtual_time" in m:
+                rec["virtual_time"] = round(float(m["virtual_time"]), 3)
+                rec["window_size"] = int(m["window_size"])
             history.append(rec)
             print(json.dumps(rec))
         if checkpoint_dir and (i + 1) % 50 == 0:
@@ -125,8 +159,18 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--method", default="elastic_gossip",
                     choices=available_protocols())
+    ap.add_argument("--engine", default="dist", choices=available_engines(),
+                    help="training engine (repro.api engine registry)")
     ap.add_argument("--codec", default="none", choices=available_codecs(),
                     help="gossip-compression codec on the wire (repro.comm)")
+    ap.add_argument("--time-model", default="constant",
+                    choices=available_time_models(),
+                    help='compute-time model for --engine async (repro.hetero)')
+    ap.add_argument("--mean-step-time", type=float, default=1.0)
+    ap.add_argument("--sigma", type=float, default=0.25,
+                    help="lognormal straggler log-space std")
+    ap.add_argument("--slow-worker", type=int, default=0)
+    ap.add_argument("--slow-factor", type=float, default=4.0)
     ap.add_argument("--p", type=float, default=0.25)
     ap.add_argument("--tau", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=0.5)
@@ -141,7 +185,10 @@ def main() -> None:
     run(a.arch, reduced=a.reduced, steps=a.steps, method=a.method, p=a.p, tau=a.tau,
         alpha=a.alpha, workers=a.workers, global_batch=a.global_batch, seq=a.seq,
         lr=a.lr, checkpoint_dir=a.checkpoint_dir,
-        production_mesh=a.production_mesh, multi_pod=a.multi_pod, codec=a.codec)
+        production_mesh=a.production_mesh, multi_pod=a.multi_pod, codec=a.codec,
+        engine=a.engine, time_model=a.time_model,
+        mean_step_time=a.mean_step_time, sigma=a.sigma,
+        slow_worker=a.slow_worker, slow_factor=a.slow_factor)
 
 
 if __name__ == "__main__":

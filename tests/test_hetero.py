@@ -1,0 +1,437 @@
+"""repro.hetero + engine="async" tests: compute-time model determinism, the
+engine registry, the degenerate bit-exact parity vs engine="sim", staleness
+accounting, virtual-clock checkpoint resume, and the schedule_partners
+topology hook.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (GossipTrainer, available_engines, get_engine,
+                       register_engine, unregister_engine)
+from repro.common.config import HeteroConfig, OptimizerConfig, ProtocolConfig
+from repro.hetero import (available_time_models, hetero_normal, hetero_uniform,
+                          resolve_time_model)
+from repro.models import simple
+
+W = 4
+
+
+def _problem(seed=0, n=32, d=10, classes=3):
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(classes, d) * 2
+    y = rng.randint(0, classes, (W, n)).astype(np.int32)
+    x = protos[y] + rng.randn(W, n, d).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def _loss(params, x, y):
+    return simple.xent_loss(simple.mlp_logits(params, x), y)
+
+
+def _trainer(engine, hetero=None, method="elastic_gossip", fused=True, **proto_kw):
+    proto = ProtocolConfig(method=method, **proto_kw)
+    return GossipTrainer(
+        engine=engine, protocol=proto,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=_loss, num_workers=W, hetero=hetero, fused_update=fused,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=16, depth=2,
+                                            num_classes=3)[0])
+
+
+# ---------------------------------------------------------------------------
+# compute-time models: hash-seeded determinism
+# ---------------------------------------------------------------------------
+
+def test_time_model_draws_are_pure_and_host_rng_independent():
+    w = np.arange(8)
+    k = np.arange(8) * 3
+    a = hetero_uniform(7, w, k)
+    np.random.seed(12345)          # polluting the global stream must not matter
+    _ = np.random.rand(1000)
+    b = hetero_uniform(7, w, k)
+    np.testing.assert_array_equal(a, b)
+    assert ((a > 0) & (a < 1)).all()
+    # different seeds / salts decorrelate
+    assert not np.array_equal(a, hetero_uniform(8, w, k))
+    assert not np.array_equal(a, hetero_uniform(7, w, k, salt=1))
+
+
+def test_time_model_registry_and_statistics():
+    assert {"constant", "lognormal", "slow_node", "fail_rejoin"} <= set(
+        available_time_models())
+    with pytest.raises(ValueError, match="unknown time model"):
+        resolve_time_model(HeteroConfig(time_model="sundial"))
+    # lognormal is mean-preserving and recomputable (restart-identical)
+    cfg = HeteroConfig(time_model="lognormal", mean_step_time=2.0, sigma=0.5,
+                       seed=3)
+    m1, m2 = resolve_time_model(cfg), resolve_time_model(cfg)
+    w = np.repeat(np.arange(16), 500)
+    k = np.tile(np.arange(500), 16)
+    d1 = m1.step_duration(w, k)
+    np.testing.assert_array_equal(d1, m2.step_duration(w, k))
+    assert abs(d1.mean() - 2.0) < 0.05
+    # slow_node: exactly one straggler
+    sn = resolve_time_model(HeteroConfig(time_model="slow_node", slow_worker=2,
+                                         slow_factor=4.0))
+    d = sn.step_duration(np.arange(W), np.zeros(W, np.int64))
+    assert d[2] == 4.0 and (np.delete(d, 2) == 1.0).all()
+
+
+def test_fail_rejoin_model_skips_outage():
+    cfg = HeteroConfig(time_model="fail_rejoin", slow_worker=1, fail_at=2.5,
+                       rejoin_at=6.0)
+    m = resolve_time_model(cfg)
+    clocks = np.zeros(3)
+    steps = np.zeros(3, np.int64)
+    done_at = {0: [], 1: [], 2: []}
+    for _ in range(8):
+        nxt = m.next_completion(steps, clocks)
+        t = nxt.min()
+        window = nxt <= t
+        for w in np.nonzero(window)[0]:
+            done_at[int(w)].append(float(nxt[w]))
+        clocks = np.where(window, nxt, clocks)
+        steps = steps + window
+    # worker 1 completes steps at 1, 2, then nothing until rejoin_at + 1
+    assert done_at[1][:3] == [1.0, 2.0, 7.0]
+    # healthy workers are unaffected
+    assert done_at[0][:4] == [1.0, 2.0, 3.0, 4.0]
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+def test_engine_registry_builtin_and_errors():
+    assert {"sim", "dist", "async"} <= set(available_engines())
+    with pytest.raises(ValueError, match="registered:.*async.*dist.*sim"):
+        get_engine("quantum")
+    with pytest.raises(ValueError, match="unknown engine"):
+        _trainer("quantum", comm_probability=0.5)
+
+
+def test_register_engine_extension_point():
+    @register_engine("_test_null")
+    class NullBackend:
+        @classmethod
+        def build(cls, facade, kw):
+            return cls()
+
+    try:
+        assert "_test_null" in available_engines()
+        assert get_engine("_test_null") is NullBackend
+        tr = GossipTrainer(engine="_test_null",
+                           protocol=ProtocolConfig(comm_probability=0.5))
+        assert isinstance(tr._backend, NullBackend)
+        with pytest.raises(ValueError, match="already registered"):
+            @register_engine("_test_null")
+            class Clash:
+                pass
+    finally:
+        unregister_engine("_test_null")
+    assert "_test_null" not in available_engines()
+
+
+def test_async_rejects_barrier_protocols():
+    with pytest.raises(ValueError, match="barrier"):
+        _trainer("async", hetero=HeteroConfig(), method="allreduce")
+
+
+# ---------------------------------------------------------------------------
+# degenerate parity: constant homogeneous fleet == engine="sim", bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,kw", [
+    ("elastic_gossip", dict(topology="matching", comm_period=2, moving_rate=0.5)),
+    ("elastic_gossip", dict(topology="uniform", comm_probability=0.5,
+                            moving_rate=0.5)),
+    ("gossiping_pull", dict(topology="uniform", comm_probability=0.4)),
+    ("elastic_gossip", dict(topology="uniform", comm_probability=1.0,
+                            moving_rate=0.5, codec="q8")),
+])
+def test_async_constant_fleet_matches_sim_bit_exact(method, kw):
+    x, y = _problem()
+    sim = _trainer("sim", method=method, **kw)
+    asn = _trainer("async", hetero=HeteroConfig(time_model="constant"),
+                   method=method, **kw)
+    s1, s2 = sim.init_state(0), asn.init_state(0)
+    for _ in range(15):
+        s1, m1 = sim.step(s1, (x, y))
+        s2, m2 = asn.step(s2, (x, y))
+    for k in s1.theta:   # params AND velocity, bit-for-bit
+        np.testing.assert_array_equal(np.asarray(s1.theta[k]),
+                                      np.asarray(s2.theta[k]))
+        np.testing.assert_array_equal(np.asarray(s1.opt.mu[k]),
+                                      np.asarray(s2.opt.mu[k]))
+    # comm accounting and the schedule state (the sim schedule IS the PRNG
+    # key carried in FlatState) agree exactly
+    assert float(s1.proto.comm_bytes) == float(s2.proto.comm_bytes)
+    assert int(s1.proto.comm_rounds) == int(s2.proto.comm_rounds)
+    np.testing.assert_array_equal(np.asarray(s1.key), np.asarray(s2.key))
+    assert sim.schedule_state() == {}
+    # ...the async engine adds the (homogeneous) virtual-time position on top
+    hc = asn.schedule_state()["hetero_clock"]
+    assert hc["clocks"] == [15.0] * W and hc["steps_done"] == [15] * W
+    # homogeneous fleet: exchanges happen, but staleness gaps are exactly zero
+    assert int(s2.proto.stale_events) > 0
+    assert float(s2.proto.stale_time) == 0.0
+    assert int(s2.proto.stale_steps) == 0
+
+
+def test_async_full_matching_schedule_parity_via_facade():
+    """gossip_exchange over the full matching schedule: async == sim."""
+    x, y = _problem()
+    sim = _trainer("sim", topology="matching", comm_period=2, moving_rate=0.4)
+    asn = _trainer("async", hetero=HeteroConfig(), topology="matching",
+                   comm_period=2, moving_rate=0.4)
+    params = jax.tree.map(
+        lambda a: a + 0.1 * np.random.RandomState(0).randn(*a.shape).astype(a.dtype),
+        sim.init_state(0).params)
+    active = jnp.ones((W,), jnp.float32)
+    assert sim.num_gossip_rounds == asn.num_gossip_rounds > 1
+    for r in range(sim.num_gossip_rounds):
+        np.testing.assert_array_equal(sim.matching_partners(r),
+                                      asn.matching_partners(r))
+        out_s = sim.gossip_exchange(params, active, r)
+        out_a = asn.gossip_exchange(params, active, r)
+        for a, b in zip(jax.tree.leaves(out_s), jax.tree.leaves(out_a)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# staleness accounting
+# ---------------------------------------------------------------------------
+
+def test_staleness_matches_independent_simulation():
+    """Under a 2x slow worker the traced staleness accumulators must equal an
+    independent host-side replay of the event loop."""
+    hetero = HeteroConfig(time_model="slow_node", slow_worker=0, slow_factor=2.0)
+    asn = _trainer("async", hetero=hetero, topology="uniform",
+                   comm_probability=1.0, moving_rate=0.5)
+    x, y = _problem()
+    state = asn.init_state(0)
+
+    # independent replay: clocks/steps per the time model, gates/partners by
+    # re-deriving the traced draws from the carried PRNG key
+    model = resolve_time_model(hetero)
+    clocks = np.zeros(W)
+    steps = np.zeros(W, np.int64)
+    key = np.asarray(state.key)
+    exp_time = exp_steps = exp_events = 0
+    impl = asn.impl
+    n_windows = 13
+    for _ in range(n_windows):
+        nxt = model.next_completion(steps, clocks)
+        t = nxt.min()
+        mask = nxt <= t
+        k2 = jax.random.split(jnp.asarray(key), 3)
+        gate = np.asarray(impl.comm_gate(k2[2], jnp.int32(0), W)) & mask
+        peers = np.asarray(impl.sample_peers(k2[1], W))
+        clocks = np.where(mask, nxt, clocks)
+        steps = steps + mask
+        for w in np.nonzero(gate)[0]:
+            exp_time += abs(clocks[w] - clocks[peers[w]])
+            exp_steps += abs(int(steps[w]) - int(steps[peers[w]]))
+            exp_events += 1
+        key = np.asarray(k2[0])
+
+    for _ in range(n_windows):
+        state, m = asn.step(state, (x, y))
+    assert int(state.proto.stale_events) == exp_events
+    assert int(state.proto.stale_steps) == exp_steps
+    np.testing.assert_allclose(float(state.proto.stale_time), exp_time,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.proto.clocks), clocks,
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state.proto.worker_steps), steps)
+
+
+def test_async_heterogeneous_run_trains_and_reports_metrics():
+    hetero = HeteroConfig(time_model="lognormal", sigma=0.6)
+    asn = _trainer("async", hetero=hetero, topology="uniform",
+                   comm_probability=0.5, moving_rate=0.5)
+    x, y = _problem()
+    state = asn.init_state(0)
+    losses = []
+    for _ in range(60):
+        state, m = asn.step(state, (x, y))
+        assert {"loss", "fired", "comm_bytes", "virtual_time",
+                "window_size"} <= set(m)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7        # it actually trains
+    assert float(m["virtual_time"]) > 0
+    assert float(state.proto.stale_time) > 0   # heterogeneity -> staleness
+
+
+def test_async_easgd_center_protocol_runs():
+    asn = _trainer("async", hetero=HeteroConfig(time_model="slow_node"),
+                   method="easgd", comm_period=2, moving_rate=0.1)
+    x, y = _problem()
+    state = asn.init_state(0)
+    for _ in range(10):
+        state, m = asn.step(state, (x, y))
+    assert np.isfinite(float(m["loss"]))
+    assert float(state.proto.comm_bytes) > 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: virtual clocks persist and resume exactly
+# ---------------------------------------------------------------------------
+
+def test_async_checkpoint_resume_continues_clocks_exactly(tmp_path):
+    hetero = HeteroConfig(time_model="lognormal", sigma=0.5, seed=11)
+    x, y = _problem()
+
+    full = _trainer("async", hetero=hetero, topology="uniform",
+                    comm_probability=0.5, moving_rate=0.5)
+    s_full = full.init_state(0)
+    for _ in range(13):
+        s_full, _ = full.step(s_full, (x, y))
+
+    part = _trainer("async", hetero=hetero, topology="uniform",
+                    comm_probability=0.5, moving_rate=0.5)
+    s = part.init_state(0)
+    for _ in range(7):
+        s, _ = part.step(s, (x, y))
+    path = str(tmp_path / "ck.npz")
+    part.save_checkpoint(path, s, meta={"step": 7})
+
+    resumed = _trainer("async", hetero=hetero, topology="uniform",
+                       comm_probability=0.5, moving_rate=0.5)
+    template = resumed.init_state(1)   # different seed: load must override
+    s2, meta = resumed.load_checkpoint(path, template)
+    # float64 host clocks re-anchored losslessly from the JSON metadata
+    np.testing.assert_array_equal(resumed._backend.sim.clocks,
+                                  part._backend.sim.clocks)
+    np.testing.assert_array_equal(resumed._backend.sim.steps_done,
+                                  part._backend.sim.steps_done)
+    for _ in range(6):
+        s2, _ = resumed.step(s2, (x, y))
+
+    np.testing.assert_array_equal(resumed._backend.sim.clocks,
+                                  full._backend.sim.clocks)
+    for k in s_full.theta:
+        np.testing.assert_array_equal(np.asarray(s_full.theta[k]),
+                                      np.asarray(s2.theta[k]))
+    np.testing.assert_array_equal(np.asarray(s_full.proto.clocks),
+                                  np.asarray(s2.proto.clocks))
+    assert float(s_full.proto.stale_time) == float(s2.proto.stale_time)
+    assert int(s_full.proto.stale_events) == int(s2.proto.stale_events)
+    np.testing.assert_array_equal(np.asarray(s_full.key), np.asarray(s2.key))
+
+
+def test_async_loads_checkpoint_written_by_sync_engine(tmp_path):
+    """Cross-engine restore: a sim-engine checkpoint (no virtual-time fields
+    in the payload) loads into an async template — clocks keep the template's
+    zero-initialized values and training continues."""
+    x, y = _problem()
+    sim = _trainer("sim", topology="uniform", comm_probability=0.5,
+                   moving_rate=0.5)
+    s = sim.init_state(0)
+    for _ in range(5):
+        s, _ = sim.step(s, (x, y))
+    path = str(tmp_path / "sync.npz")
+    sim.save_checkpoint(path, s, meta={"step": 5})
+
+    asn = _trainer("async", hetero=HeteroConfig(), topology="uniform",
+                   comm_probability=0.5, moving_rate=0.5)
+    template = asn.init_state(1)
+    restored, _ = asn.load_checkpoint(path, template)
+    for k in s.theta:
+        np.testing.assert_array_equal(np.asarray(s.theta[k]),
+                                      np.asarray(restored.theta[k]))
+    # virtual-time fields fall back to the template's zeros, and the host
+    # mirrors re-anchor from them (no hetero_clock in a sync checkpoint)
+    assert float(restored.proto.stale_time) == 0.0
+    np.testing.assert_array_equal(np.asarray(restored.proto.clocks),
+                                  np.zeros(W, np.float32))
+    np.testing.assert_array_equal(asn._backend.sim.clocks, np.zeros(W))
+    restored, m = asn.step(restored, (x, y))
+    assert np.isfinite(float(m["loss"])) and float(m["virtual_time"]) == 1.0
+
+
+def test_async_warns_on_step_indexed_schedules():
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=0.5,
+                           topology="uniform")
+    with pytest.warns(UserWarning, match="EVENT WINDOW"):
+        GossipTrainer(
+            engine="async", protocol=proto, hetero=HeteroConfig(),
+            optimizer=OptimizerConfig(name="nag", learning_rate=0.05,
+                                      momentum=0.9, schedule="cosine",
+                                      warmup_steps=10, decay_steps=100),
+            loss_fn=_loss, num_workers=W,
+            init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=8,
+                                                depth=1, num_classes=3)[0])
+
+
+# ---------------------------------------------------------------------------
+# schedule_partners: the time-varying topology hook
+# ---------------------------------------------------------------------------
+
+def test_gossip_schedule_partners_matches_facade_and_roundtrips():
+    from repro.core import gossip_dist
+    from repro.core.scheduler import GossipSchedule
+    from repro.common.config import MeshConfig
+
+    cfg = ProtocolConfig(method="elastic_gossip", comm_probability=0.3,
+                         topology="matching")
+    mcfg = MeshConfig(data=8, model=1, pods=2, workers_per_pod=4)
+    sched = GossipSchedule(cfg, 8, seed=5, mesh_cfg=mcfg)
+    ref = gossip_dist.build_schedule(mcfg, "hypercube")
+    assert sched.num_rounds() == len(ref)
+    for r in range(2 * len(ref)):
+        expected = np.array([gossip_dist.partner_of(ref, r, w, mcfg)
+                             for w in range(8)])
+        np.testing.assert_array_equal(sched.partners(r), expected)
+    # partners() defaults to the live round counter and survives state() /
+    # restore() round-trips (incl. the new topology descriptor fields)
+    for i in range(5):
+        sched.poll(i)
+    snap = sched.state()
+    assert snap["num_workers"] == 8 and snap["topology"] == "matching"
+    fresh = GossipSchedule(cfg, 8, seed=99, mesh_cfg=mcfg)
+    fresh.restore(snap)
+    np.testing.assert_array_equal(fresh.partners(), sched.partners())
+    bad = GossipSchedule(cfg, 4, seed=0)
+    with pytest.raises(ValueError, match="workers"):
+        bad.restore(snap)
+
+
+def test_schedule_partners_is_one_overridable_method():
+    """A protocol override of schedule_partners redefines the topology for
+    every host consumer (facade matching_partners AND GossipSchedule)."""
+    from repro.api import Protocol, register_protocol, unregister_protocol
+    from repro.api.protocols import PairwiseGossip
+    from repro.core.scheduler import GossipSchedule
+
+    @register_protocol("_test_ring")
+    class RingGossip(PairwiseGossip):
+        def mix_matrix(self, peers, active, step=None):
+            from repro.core import topology
+            return topology.gossip_pull_mix(peers, active)
+
+        def schedule_partners(self, round_idx, num_workers, mesh_cfg=None,
+                              seed=0):
+            # time-varying ring: rotate by round parity
+            shift = 1 + (round_idx % 2)
+            return (np.arange(num_workers) + shift) % num_workers
+
+        def schedule_rounds(self, num_workers, mesh_cfg=None, seed=0):
+            return 2
+
+    try:
+        cfg = ProtocolConfig(method="_test_ring", comm_probability=0.5)
+        tr = GossipTrainer(engine="sim", protocol=cfg, loss_fn=_loss,
+                           num_workers=W, init_fn=lambda key: simple.init_mlp(
+                               key, in_dim=10, hidden=8, depth=1,
+                               num_classes=3)[0])
+        assert tr.num_gossip_rounds == 2
+        np.testing.assert_array_equal(tr.matching_partners(0), [1, 2, 3, 0])
+        np.testing.assert_array_equal(tr.matching_partners(1), [2, 3, 0, 1])
+        sched = GossipSchedule(cfg, W)
+        np.testing.assert_array_equal(sched.partners(0), [1, 2, 3, 0])
+        np.testing.assert_array_equal(sched.partners(1), [2, 3, 0, 1])
+    finally:
+        unregister_protocol("_test_ring")
