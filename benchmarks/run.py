@@ -12,8 +12,8 @@ import argparse
 import time
 
 from benchmarks import (alpha_schedule, comm_compress, comm_cost, fused_step,
-                        roofline_bench, straggler, table_4_1, table_4_2,
-                        table_4_3, table_a_1)
+                        roofline_bench, serve_live, straggler, table_4_1,
+                        table_4_2, table_4_3, table_a_1)
 
 TABLES = {
     "table_4_1": table_4_1.main,
@@ -27,6 +27,7 @@ TABLES = {
     "fused_step": fused_step.main,
     "fused_step_resident": fused_step.resident_main,
     "straggler": straggler.main,
+    "serve_live": serve_live.main,
 }
 
 

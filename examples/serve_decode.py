@@ -1,5 +1,8 @@
-"""Serve a reduced model with batched decode requests: prefill a prompt batch,
-then stream tokens with the KV-cache serve engine (greedy sampling).
+"""Serve a reduced model through the live-serving stack: publish weights onto
+a SnapshotBus, prefill a prompt batch, stream tokens through a LiveServer —
+and hot-swap to a newly published snapshot mid-stream (the train-while-serve
+mechanic of repro.serve, here with hand-published snapshots so the example
+stays standalone).
 
     PYTHONPATH=src python examples/serve_decode.py --arch gemma2_9b --tokens 16
 """
@@ -13,6 +16,7 @@ from repro.common.config import MeshConfig
 from repro.configs import ARCH_IDS, get_reduced
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tr
+from repro.serve import LiveServer, SnapshotBus
 
 
 def main():
@@ -28,7 +32,15 @@ def main():
     prog = make_serve_program(mesh, mesh_cfg, cfg, batch=args.batch,
                               max_len=64, param_dtype=jnp.float32,
                               cache_dtype=jnp.float32, with_prefill=True)
-    params, _ = tr.init_lm(jax.random.PRNGKey(0), cfg)
+
+    # the bus is the training->serving handoff; here the "trainer" is two
+    # hand-published parameter versions (a GossipTrainer publishes the same
+    # way through its publish_every hook — see repro.launch.serve)
+    bus = SnapshotBus()
+    bus.publish_params(tr.init_lm(jax.random.PRNGKey(0), cfg)[0], train_step=0)
+    server = LiveServer(prog, bus)
+    server.maybe_swap()
+
     key = jax.random.PRNGKey(1)
     if cfg.audio is not None:
         prompt = jax.random.randint(key, (args.batch, cfg.audio.num_codebooks, 8), 0, cfg.vocab_size)
@@ -38,19 +50,29 @@ def main():
         cond = (jnp.zeros((args.batch, cfg.vlm.num_image_tokens, cfg.vlm.image_embed_dim))
                 if cfg.vlm is not None else None)
 
-    logits, cache = prog.prefill_fn(params, prompt, cond)
-    print(f"prefilled batch={args.batch}; decoding {args.tokens} tokens...")
+    logits, cache = server.prefill(prompt, cond)
+    print(f"prefilled batch={args.batch} under snapshot seq={server.seq}; "
+          f"decoding {args.tokens} tokens...")
     outs = []
-    for _ in range(args.tokens):
+    for t in range(args.tokens):
+        if t == args.tokens // 2:
+            # mid-stream: a new version lands on the bus; the server picks it
+            # up BETWEEN decode batches (tokens before this boundary are
+            # unaffected — the hot-swap determinism contract)
+            bus.publish_params(tr.init_lm(jax.random.PRNGKey(42), cfg)[0],
+                               train_step=100)
+            if server.maybe_swap():
+                print(f"  hot-swapped to snapshot seq={server.seq} at token {t} "
+                      f"({server.swap_stats()['swap_pause_max_s'] * 1e3:.1f} ms pause)")
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         tok = nxt[..., None] if cfg.audio is None else nxt[..., None]
         if cfg.audio is not None and tok.ndim == 2:
             tok = tok[:, :, None]
-        logits, cache = prog.decode_fn(params, cache, tok, cond)
+        logits, cache = server.decode(cache, tok, cond)
         outs.append(nxt)
     stream = jnp.stack(outs, axis=-1)
     print("decoded token ids (request 0):", stream.reshape(args.batch, -1)[0][:16])
-    print("OK — batched KV-cache decode ran end to end.")
+    print("OK — live batched KV-cache decode (with one hot swap) ran end to end.")
 
 
 if __name__ == "__main__":

@@ -114,7 +114,9 @@ class GossipTrainer:
                  global_batch: Optional[int] = None, seq_len: Optional[int] = None,
                  grad_accum: int = 1, seed: int = 0, fused_update: bool = True,
                  codec: Optional[str] = None,
-                 hetero: Optional[HeteroConfig] = None):
+                 hetero: Optional[HeteroConfig] = None,
+                 publish_every: Optional[int] = None,
+                 snapshot_bus=None):
         backend_cls = registry.get_engine(engine)   # unknown names raise with
         self.engine = engine                        # the registered list
         # gossip-compression codec (repro.comm registry): an explicit
@@ -132,6 +134,19 @@ class GossipTrainer:
         # per-leaf path regardless (capability-flag gated inside the engines).
         self.fused_update = fused_update
         self.hetero = hetero
+        # train-while-serve hook (repro.serve): every ``publish_every`` facade
+        # steps, :meth:`step` publishes an atomic consensus snapshot of the
+        # resident flat buffers onto ``snapshot_bus`` (auto-created when only
+        # the cadence is given). Engine-agnostic by construction — the hook
+        # sits above the backend, on the ONE FlatState contract.
+        if publish_every is not None and publish_every <= 0:
+            raise ValueError("publish_every must be a positive step count")
+        self.publish_every = publish_every
+        if snapshot_bus is None and publish_every is not None:
+            from repro.serve import SnapshotBus
+            snapshot_bus = SnapshotBus()
+        self.snapshot_bus = snapshot_bus
+        self._host_steps = 0
         # registry-resolved backend: each engine class validates and consumes
         # the kwargs it needs from the shared facade surface
         self._backend = backend_cls.build(self, dict(
@@ -148,13 +163,25 @@ class GossipTrainer:
     def init_state(self, seed=0, params: Optional[PyTree] = None):
         """Fresh trainer state. ``params`` (optional): single-replica params
         to broadcast instead of calling ``init_fn``."""
+        self._host_steps = 0
         return self._backend.init_state(seed, params)
 
     def step(self, state, batch):
         """ONE training step: gradient component + (internally scheduled)
         communication component. Returns (state', metrics) where metrics
-        always has ``loss``, ``fired`` and cumulative ``comm_bytes``."""
-        return self._backend.step(state, batch)
+        always has ``loss``, ``fired`` and cumulative ``comm_bytes``.
+
+        With ``publish_every=k``, every k-th step additionally publishes a
+        consensus snapshot of the new state onto :attr:`snapshot_bus` and
+        reports its sequence number as ``metrics["published_seq"]``."""
+        state, metrics = self._backend.step(state, batch)
+        self._host_steps += 1
+        bus = self.snapshot_bus
+        if (bus is not None and self.publish_every is not None
+                and self._host_steps % self.publish_every == 0):
+            snap = bus.publish_state(state, train_step=self._host_steps)
+            metrics["published_seq"] = snap.seq
+        return state, metrics
 
     # ------------------------------------------------------- parity / gossip
     def gossip_exchange(self, params_stack: PyTree, active, round_idx: int) -> PyTree:
@@ -181,9 +208,11 @@ class GossipTrainer:
 
     def consensus_params(self, state) -> PyTree:
         """Worker-averaged replica (paper 'Aggregate Accuracy') — the
-        parameters the serving engine loads."""
+        parameters the serving engine loads. FLAT-NATIVE: the mean runs over
+        the resident ``[W, total]`` buffers (one einsum per dtype bucket),
+        pytree views appear only on the result."""
         from repro.serving.engine import consensus_params
-        return consensus_params(state.params)
+        return consensus_params(state)
 
     # aggregate_params: alias kept for SimTrainer-era callers
     aggregate_params = consensus_params

@@ -125,6 +125,32 @@ def flat_spec_manifest(spec) -> dict:
     }
 
 
+def load_payload(path: str) -> Dict[str, np.ndarray]:
+    """Raw flat-key payload of a checkpoint npz, exactly as written (v2 keys
+    are whole planes like ``theta::float32``). The in-memory snapshot path
+    (:mod:`repro.serve.snapshot`) reads buffers back through this instead of
+    re-deriving them, so the on-disk and in-memory forms stay one format."""
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
+def check_manifest(meta: Optional[dict], spec, path: str = "") -> None:
+    """Raise unless ``meta``'s FlatSpec manifest (if any) matches ``spec``.
+
+    v2 stores whole planes under bucket keys, so leaf identity lives in the
+    manifest, not the npz keys (v1 failed loudly on renamed leaves via its
+    per-leaf path keys) — slicing a saved plane with a reordered layout would
+    silently scramble parameters. Shared by :func:`restore_state` and the
+    snapshot bus's on-disk round trip."""
+    saved = (meta or {}).get("flat_spec")
+    if saved is not None and saved != flat_spec_manifest(spec):
+        raise ValueError(
+            "checkpoint FlatSpec manifest does not match the target "
+            "state's layout (parameter tree renamed/reordered/resized "
+            "since the checkpoint was written?) — refusing to slice the "
+            f"saved plane with a different layout: {path}")
+
+
 def save_state(path: str, state, meta: Optional[dict] = None,
                schedule=None) -> None:
     """Persist a :class:`repro.api.state.FlatState` in checkpoint format v2:
@@ -209,17 +235,7 @@ def restore_state(path: str, like, meta: Optional[dict] = None):
             fmt = (FLAT_FORMAT if any(k.startswith("theta" + SEP) or k == "theta"
                                       for k in data.files) else 1)
     if int(fmt) >= FLAT_FORMAT:
-        # v2 stores whole planes under bucket keys, so leaf identity lives in
-        # the manifest, not the npz keys (v1 failed loudly on renamed leaves
-        # via its per-leaf path keys) — validate it or risk silently slicing
-        # the saved plane with a reordered layout
-        saved = meta.get("flat_spec")
-        if saved is not None and saved != flat_spec_manifest(like.spec):
-            raise ValueError(
-                "checkpoint FlatSpec manifest does not match the target "
-                "state's layout (parameter tree renamed/reordered/resized "
-                "since the checkpoint was written?) — refusing to slice the "
-                f"saved plane with a different layout: {path}")
+        check_manifest(meta, like.spec, path)
         return like.from_state_dict(restore(path, like.state_dict(),
                                             missing_ok=VIRTUAL_TIME_KEYS))
     with np.load(path) as data:

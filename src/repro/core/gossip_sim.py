@@ -29,7 +29,7 @@ from repro.api import registry
 from repro.api.state import FlatState
 from repro.common import flat as flat_plane
 from repro.common.config import OptimizerConfig, ProtocolConfig
-from repro.common.pytree import tree_mean_leading, tree_take_leading
+from repro.common.pytree import tree_take_leading
 from repro.core import protocols
 from repro.kernels import ops
 from repro.optim.optimizers import OptState, _clip, make_optimizer, param_update, velocity_update
@@ -234,5 +234,8 @@ class SimTrainer:
         return tree_take_leading(state.params, 0)
 
     def aggregate_params(self, state: FlatState) -> PyTree:
-        """Parameter average across workers (paper 'Aggregate Accuracy')."""
-        return tree_mean_leading(state.params)
+        """Parameter average across workers (paper 'Aggregate Accuracy') —
+        the shared flat-native consensus reduction (one einsum over the
+        resident ``[W, total]`` buffers, no pytree stacking)."""
+        from repro.serving.engine import consensus_params
+        return consensus_params(state)

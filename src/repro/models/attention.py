@@ -21,13 +21,19 @@ NEG_INF = -1e30
 
 
 def chunked_attention(q, k, v, *, causal: bool = True, window=0, logit_softcap: float = 0.0,
-                      q_offset=0, kv_len: Optional[jax.Array] = None, chunk: int = 1024):
+                      q_offset=0, kv_len: Optional[jax.Array] = None,
+                      kv_start: Optional[jax.Array] = None, chunk: int = 1024):
     """Online-softmax attention.
 
     q: [B, Sq, H, hd]; k, v: [B, Skv, Hkv, hd] with H % Hkv == 0.
     window: 0 = full; >0 = attend to keys with q_pos - k_pos in [0, window).
             May be a traced scalar (per-layer local/global in one scan).
-    kv_len: optional [B] or scalar count of valid cache entries (decode).
+    kv_len: optional scalar count of valid cache entries (decode).
+    kv_start: optional [B] first valid cache position per batch row — the
+              continuous-batching slot boundary: a request admitted into a
+              recycled slot at cache position p attends only to kv_pos >= p,
+              so the previous occupant's K/V rows are masked out exactly
+              (repro.serve). None (the default) traces the original program.
     q_offset: absolute position of q[0] (decode/prefill continuation).
     """
     B, Sq, H, hd = q.shape
@@ -59,7 +65,13 @@ def chunked_attention(q, k, v, *, causal: bool = True, window=0, logit_softcap: 
         mask &= (q_pos[:, None] - kv_pos[None, :]) < jnp.where(
             jnp.asarray(window) > 0, jnp.asarray(window), jnp.iinfo(jnp.int32).max)
         mask &= kv_pos[None, :] < (Skv if kv_len is None else kv_len)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_start is None:
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        else:
+            # per-row lower bound: [B, Sq, chunk], aligned as [B, 1, 1, Sq, chunk]
+            bmask = mask[None, :, :] & (
+                kv_pos[None, None, :] >= jnp.asarray(kv_start)[:, None, None])
+            s = jnp.where(bmask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -114,16 +126,18 @@ def gqa_forward(p, x, cfg: ModelConfig, *, window=0, positions=None, chunk: int 
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), (k, v)
 
 
-def gqa_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig, *, window=0, chunk: int = 1024):
+def gqa_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig, *, window=0,
+               kv_start=None, chunk: int = 1024):
     """x: [B, 1, d]; cache_[kv]: [B, Smax, Hkv, hd]; pos: scalar next index.
-    Returns (out, new_k_cache, new_v_cache)."""
+    kv_start: optional [B] per-slot first valid cache row (see
+    :func:`chunked_attention`). Returns (out, new_k_cache, new_v_cache)."""
     positions = pos + jnp.zeros((1,), jnp.int32)
     q, k, v = gqa_qkv(p, x, positions, cfg.rope_theta)
     ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
     o = chunked_attention(q, ck, cv, causal=True, window=window,
                           logit_softcap=cfg.attn_logit_softcap,
-                          q_offset=pos, kv_len=pos + 1, chunk=chunk)
+                          q_offset=pos, kv_len=pos + 1, kv_start=kv_start, chunk=chunk)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), ck, cv
 
 
@@ -213,7 +227,8 @@ def mla_forward(p, x, cfg: ModelConfig, *, positions=None, chunk: int = 1024):
     return out, (c_kv, k_rope)
 
 
-def mla_decode(p, x, cache_c, cache_kr, pos, cfg: ModelConfig, chunk: int = 2048):
+def mla_decode(p, x, cache_c, cache_kr, pos, cfg: ModelConfig, *, kv_start=None,
+               chunk: int = 2048):
     """cache_c: [B, Smax, r]; cache_kr: [B, Smax, rope_dim]."""
     positions = pos + jnp.zeros((1,), jnp.int32)
     q_nope, q_rope, c_kv, k_rope = _mla_qc(p, x, cfg, positions)
@@ -225,6 +240,6 @@ def mla_decode(p, x, cache_c, cache_kr, pos, cfg: ModelConfig, chunk: int = 2048
     kk = jnp.concatenate([cc, ckr], axis=-1)[:, :, None, :].astype(x.dtype)
     scale_fix = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5 / (qq.shape[-1] ** -0.5)
     o_lat = chunked_attention(qq * scale_fix, kk, cc[:, :, None, :].astype(x.dtype), causal=True,
-                              q_offset=pos, kv_len=pos + 1, chunk=chunk)
+                              q_offset=pos, kv_len=pos + 1, kv_start=kv_start, chunk=chunk)
     o = jnp.einsum("bshr,rhv->bshv", o_lat, p["v_up"].astype(x.dtype))
     return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), cc, ckr

@@ -151,15 +151,23 @@ def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
 # decode (one token, functional cache update)
 # ---------------------------------------------------------------------------
 
-def _attn_decode(p_attn, h, cache, pos, cfg: ModelConfig, window: int, window_mask=0):
+def _attn_decode(p_attn, h, cache, pos, cfg: ModelConfig, window: int, window_mask=0,
+                 kv_start=None):
     """window (static python int): 0 = full cache at max_len; >0 = ring buffer
     of that size (keys already roped at absolute positions; every live entry
     is within the window by construction). window_mask (may be traced): extra
-    local-attention mask in full-cache mode (gemma2 local layers)."""
+    local-attention mask in full-cache mode (gemma2 local layers). kv_start
+    (optional [B]): per-slot first valid cache row — continuous-batching slot
+    isolation (repro.serve); full-cache modes only."""
     if cfg.mla is not None:
-        y, cc, ckr = attn.mla_decode(p_attn, h, cache["c_kv"], cache["k_rope"], pos, cfg)
+        y, cc, ckr = attn.mla_decode(p_attn, h, cache["c_kv"], cache["k_rope"], pos, cfg,
+                                     kv_start=kv_start)
         return y, {"c_kv": cc, "k_rope": ckr}
     if window:
+        assert kv_start is None, (
+            "per-slot kv_start is not supported in ring-buffer window mode "
+            "(cache rows are recycled mod window, so an absolute lower bound "
+            "has no fixed row)")
         size = cache["k"].shape[1]
         slot = pos % size
         positions = pos + jnp.zeros((1,), jnp.int32)
@@ -172,16 +180,19 @@ def _attn_decode(p_attn, h, cache, pos, cfg: ModelConfig, window: int, window_ma
         y = jnp.einsum("bshk,hkd->bsd", o, p_attn["wo"].astype(h.dtype))
         return y, {"k": ck, "v": cv}
     y, ck, cv = attn.gqa_decode(p_attn, h, cache["k"], cache["v"], pos, cfg,
-                                window=window_mask, chunk=2048)
+                                window=window_mask, kv_start=kv_start, chunk=2048)
     return y, {"k": ck, "v": cv}
 
 
 def block_decode(kind: str, p, x, cache, pos, cfg: ModelConfig, *, use_moe: bool = False,
-                 window: int = 0, window_mask=0, cond=None):
-    """x: [B, 1, d]. Returns (x, new_cache)."""
+                 window: int = 0, window_mask=0, cond=None, kv_start=None):
+    """x: [B, 1, d]. Returns (x, new_cache). kv_start (optional [B]): per-slot
+    first valid cache row, threaded into the attention mask (repro.serve
+    continuous batching); recurrent caches isolate by zero-reset instead."""
     if kind in ("attn", "attn_cross"):
         h = rmsnorm(p["ln1"], x, cfg.norm_eps)
-        y, new_cache = _attn_decode(p["attn"], h, cache, pos, cfg, window, window_mask)
+        y, new_cache = _attn_decode(p["attn"], h, cache, pos, cfg, window, window_mask,
+                                    kv_start=kv_start)
         if cfg.post_norms:
             y = rmsnorm(p["post_ln1"], y, cfg.norm_eps)
         x = x + y

@@ -331,7 +331,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, dtype=jnp.float32,
     return cache, axes
 
 
-def _scan_segment_decode(seg: Segment, seg_params, seg_cache, x, pos, cfg, cond, window):
+def _scan_segment_decode(seg: Segment, seg_params, seg_cache, x, pos, cfg, cond, window,
+                         kv_start=None):
     windows = (jnp.array(seg.windows, jnp.int32) if seg.windows is not None
                else jnp.full((seg.count,), window, jnp.int32))
 
@@ -340,15 +341,21 @@ def _scan_segment_decode(seg: Segment, seg_params, seg_cache, x, pos, cfg, cond,
         # `window` (python int) selects the ring-buffer mode; the traced
         # per-layer `w` masks local-attention layers in full-cache mode.
         y, c2 = blocks.block_decode(seg.kind, p, xc, c, pos, cfg, use_moe=seg.use_moe,
-                                    window=window, window_mask=w, cond=cond)
+                                    window=window, window_mask=w, cond=cond,
+                                    kv_start=kv_start)
         return y, c2
 
     x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache, windows))
     return x, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, cond=None, *, window: int = 0):
+def decode_step(params, cfg: ModelConfig, cache, tokens, cond=None, *, window: int = 0,
+                kv_start=None):
     """One-token decode. tokens: [B, 1] (audio: [B, K, 1]).
+    kv_start (optional [B]): per-batch-row first valid cache position — the
+    continuous-batching slot boundary (repro.serve): a request admitted into
+    a recycled slot attends only to its own cache rows. None traces the
+    original single-stream program unchanged.
     Returns (logits [B, V] or [B, K, V], new cache)."""
     plan = make_plan(cfg)
     pos = cache["pos"]
@@ -359,7 +366,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, cond=None, *, window: i
         if ev == "seg":
             seg = next(s for s in plan.segments if s.name == arg)
             x, nc = _scan_segment_decode(seg, params["segments"][arg],
-                                         cache["segments"][arg], x, pos, cfg, cond, window)
+                                         cache["segments"][arg], x, pos, cfg, cond, window,
+                                         kv_start=kv_start)
             new_cache["segments"][arg] = nc
         elif ev == "cross":
             p = jax.tree.map(lambda t: t[arg], params["cross"])
@@ -367,7 +375,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, cond=None, *, window: i
         elif ev == "shared":
             p = jax.tree.map(lambda t: t[arg % plan.num_shared_blocks], params["shared"])
             c = jax.tree.map(lambda t: t[shared_site], cache["shared_sites"])
-            x, nc = blocks.block_decode("attn", p, x, c, pos, cfg, window=window)
+            x, nc = blocks.block_decode("attn", p, x, c, pos, cfg, window=window,
+                                        kv_start=kv_start)
             if "shared_sites" not in new_cache:
                 new_cache["shared_sites"] = jax.tree.map(
                     lambda t: jnp.zeros_like(t), cache["shared_sites"])

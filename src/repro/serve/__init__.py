@@ -1,0 +1,19 @@
+"""repro.serve — the train-while-serve loop (ROADMAP item 3).
+
+Training and serving share one process and one contract: training publishes
+atomic consensus snapshots of the resident flat buffers onto a
+:class:`SnapshotBus` (via the ``publish_every`` hook in
+``repro.api.GossipTrainer``), a :class:`LiveServer` hot-swaps a
+``ServeProgram`` to the latest snapshot between decode batches, and a
+:class:`ContinuousBatcher` keeps the decode batch full against a
+hash-seeded, restart-exact request stream (:class:`TrafficGen`).
+:class:`TrainServeLoop` interleaves the two and measures swap pause and
+snapshot staleness — the claims in benchmarks/serve_live.py.
+"""
+from repro.serve.live import LiveServer
+from repro.serve.loop import TrainServeLoop
+from repro.serve.snapshot import Snapshot, SnapshotBus
+from repro.serve.traffic import ContinuousBatcher, Request, TrafficGen
+
+__all__ = ["Snapshot", "SnapshotBus", "LiveServer", "TrainServeLoop",
+           "ContinuousBatcher", "Request", "TrafficGen"]

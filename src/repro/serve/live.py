@@ -1,0 +1,119 @@
+"""LiveServer — a ServeProgram that hot-swaps weights between decode batches.
+
+Wraps a :class:`repro.serving.engine.ServeProgram` with the three things a
+train-while-serve loop needs on the serving side:
+
+- **hot swap**: :meth:`maybe_swap` polls the :class:`~repro.serve.snapshot.
+  SnapshotBus` and, when a newer snapshot exists, unflattens it through the
+  program's FlatSpec views and re-places it onto the serving shardings
+  (``ServeProgram.place_params`` — cast + device_put, dispatched without
+  blocking the token loop). The host time of the swap call is recorded per
+  swap (:attr:`swap_pauses`) — the benchmark's swap-pause claim measures
+  exactly this.
+- **provenance**: :attr:`seq` / :attr:`train_step` of the weights currently
+  being served — staleness relative to the training loop is
+  ``trainer_step - server.train_step``.
+- **decode routing**: :meth:`decode` runs the program's plain decode when no
+  per-slot bounds are given and the continuous-batching ``decode_slots_fn``
+  (per-row ``kv_start`` attention lower bounds) when they are, so one server
+  serves both the single-stream example and the traffic harness.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+class LiveServer:
+    """Serving half of the train-while-serve loop (see module docstring)."""
+
+    def __init__(self, program, bus, params: Optional[PyTree] = None):
+        self.program = program
+        self.bus = bus
+        self.params: Optional[PyTree] = (
+            None if params is None else program.place_params(params))
+        self.seq: int = 0            # bus seq of the weights being served
+        self.train_step: int = -1    # train-step provenance (-1: initial params)
+        self.swap_pauses: List[float] = []   # host seconds per completed swap
+        self._place = None           # (FlatSpec, jitted bufs -> placed params)
+
+    # ------------------------------------------------------------------- swap
+    def _place_fn(self, spec):
+        """ONE compiled program for the whole swap — unflatten the snapshot's
+        flat buffers through the FlatSpec views, cast to the serving dtype,
+        land on the serving shardings via out_shardings. A per-leaf host loop
+        (``place_params``) costs one dispatch per leaf every swap; this costs
+        one dispatch per swap (first swap compiles — warm it up before
+        measuring). Cached per spec: a re-published layout recompiles."""
+        if self._place is None or self._place[0] != spec:
+            prog = self.program
+            outs = jax.tree.map(lambda s: NamedSharding(prog.mesh, s),
+                                prog.param_specs,
+                                is_leaf=lambda x: isinstance(x, P))
+
+            def place(bufs):
+                return jax.tree.map(lambda x, r: x.astype(r.dtype),
+                                    spec.unflatten(bufs), prog.param_shapes)
+
+            self._place = (spec, jax.jit(place, out_shardings=outs))
+        return self._place[1]
+
+    def maybe_swap(self) -> bool:
+        """Swap to the bus's latest snapshot if it is newer than what is
+        being served. Returns True when a swap happened. Call this BETWEEN
+        decode batches — never mid-batch — so every token batch is computed
+        under exactly one parameter version (the hot-swap determinism
+        contract: tokens before a swap boundary are bit-identical whether or
+        not the swap happens)."""
+        snap = self.bus.latest()
+        if snap is None or snap.seq <= self.seq:
+            return False
+        place = self._place_fn(snap.spec)
+        t0 = time.perf_counter()
+        self.params = place(snap.bufs)   # dispatched, not awaited
+        self.swap_pauses.append(time.perf_counter() - t0)
+        self.seq = snap.seq
+        self.train_step = snap.train_step
+        return True
+
+    # ----------------------------------------------------------------- decode
+    def _require_params(self) -> PyTree:
+        if self.params is None:
+            raise RuntimeError(
+                "LiveServer has no parameters yet: publish a snapshot onto "
+                "the bus and call maybe_swap(), or pass initial params")
+        return self.params
+
+    def decode(self, cache, tokens, cond=None, kv_start=None):
+        """One decode step under the CURRENT weights. ``kv_start`` ([B]
+        per-slot first valid cache position) selects the continuous-batching
+        program; None keeps the original single-stream program (and jaxpr).
+        Returns (logits, new_cache)."""
+        p = self._require_params()
+        if kv_start is None:
+            return self.program.decode_fn(p, cache, tokens, cond)
+        return self.program.decode_slots_fn(p, cache, tokens, cond, kv_start)
+
+    def prefill(self, tokens, cond=None):
+        """Full-sequence prefill under the current weights (requires the
+        program to have been built ``with_prefill=True``)."""
+        if self.program.prefill_fn is None:
+            raise RuntimeError("ServeProgram was built without prefill")
+        return self.program.prefill_fn(self._require_params(), tokens, cond)
+
+    def init_cache(self):
+        return self.program.init_cache()
+
+    # ------------------------------------------------------------- accounting
+    def swap_stats(self) -> dict:
+        """Swap count + mean/max pause seconds (0s when no swap happened)."""
+        n = len(self.swap_pauses)
+        return {"swaps": n,
+                "swap_pause_mean_s": (sum(self.swap_pauses) / n) if n else 0.0,
+                "swap_pause_max_s": max(self.swap_pauses) if n else 0.0}

@@ -1,0 +1,69 @@
+"""TrainServeLoop — interleave training slices with serving boundaries.
+
+One host loop, two workloads: each decode boundary runs (1) a training slice
+(``train_fn`` — typically a few ``GossipTrainer.step`` calls with the
+``publish_every`` snapshot hook armed), (2) ``LiveServer.maybe_swap`` (pick up
+any snapshot the slice published), then (3) one continuous-batching decode
+boundary. Because the swap sits BETWEEN boundaries, every token batch is
+computed under exactly one parameter version.
+
+The loop measures the two quantities the benchmark claims:
+
+- **boundary interval** — wall seconds per decode boundary (the swap-pause
+  budget: a swap must cost less than one boundary or serving visibly stalls);
+- **snapshot staleness** — ``trainer step now - train step of the weights
+  being served``, sampled each boundary once the server has swapped at least
+  once (before that the server runs its initial weights and staleness is
+  undefined).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+class TrainServeLoop:
+    """Drive a ContinuousBatcher with a training slice per boundary.
+
+    train_fn(boundary) -> int: run this boundary's training slice and return
+    the trainer's CURRENT host step count (used for staleness). None serves
+    frozen weights (no training, no swaps beyond what's already on the bus).
+    """
+
+    def __init__(self, server, batcher,
+                 train_fn: Optional[Callable[[int], int]] = None):
+        self.server = server
+        self.batcher = batcher
+        self.train_fn = train_fn
+        self.boundary_times: List[float] = []   # wall s per decode boundary
+        self.staleness: List[int] = []          # train steps, per boundary
+
+    def run(self, boundaries: int) -> None:
+        for _ in range(boundaries):
+            if self.batcher.pos >= self.batcher.max_len:
+                break
+            t = self.batcher.boundaries_run
+            step_now = self.train_fn(t) if self.train_fn is not None else None
+            self.server.maybe_swap()
+            if step_now is not None and self.server.train_step >= 0:
+                self.staleness.append(step_now - self.server.train_step)
+            # time the DECODE boundary alone (train slice + swap excluded):
+            # the swap-pause claim budgets against this interval, so folding
+            # the training slice in would flatter it
+            t0 = time.perf_counter()
+            self.batcher.step(t)
+            self.boundary_times.append(time.perf_counter() - t0)
+
+    def summary(self) -> dict:
+        bt = np.array(self.boundary_times or [0.0], np.float64)
+        out = {"boundaries": len(self.boundary_times),
+               "boundary_interval_mean_s": float(bt.mean()),
+               "boundary_interval_p50_s": float(np.percentile(bt, 50))}
+        out.update(self.server.swap_stats())
+        if self.staleness:
+            st = np.array(self.staleness, np.float64)
+            out["staleness_mean_steps"] = float(st.mean())
+            out["staleness_max_steps"] = int(st.max())
+        return out

@@ -1,0 +1,154 @@
+"""SnapshotBus — atomic, double-buffered consensus snapshots for serving.
+
+The train-while-serve handoff (ROADMAP item 3): training publishes the
+consensus (worker-averaged) parameters every ``publish_every`` steps through
+the facade hook in :class:`repro.api.GossipTrainer`, and the serving side
+(:class:`repro.serve.LiveServer`) hot-swaps to the latest snapshot between
+decode batches. The bus is the ONLY coupling between the two loops.
+
+Design points:
+
+- **Consensus on the flat plane.** :meth:`SnapshotBus.publish_state` reduces
+  the resident ``{bucket: [W, total]}`` buffers with
+  :func:`repro.serving.engine.consensus_bufs` — ONE einsum per dtype bucket,
+  no pytree stacking — and the snapshot stores those single-replica flat
+  buffers. Pytree views appear only when a consumer asks
+  (:attr:`Snapshot.params`).
+- **Atomic double buffering.** Publishes alternate between two slots: the new
+  snapshot is fully constructed in the non-head slot, then the head index
+  flips in one assignment. A reader that grabbed :meth:`latest` before the
+  flip keeps a complete, immutable :class:`Snapshot`; a reader after the flip
+  sees the new one — never a half-written mix. The next publish overwrites
+  the OTHER slot, so the snapshot a reader is holding is never mutated under
+  it (snapshots are frozen and buffers are immutable jax arrays).
+- **Checkpoint v2 is the wire format.** :meth:`Snapshot.save` /
+  :meth:`Snapshot.load` persist a snapshot through the same
+  ``theta::<bucket>`` npz payload + FlatSpec-manifest metadata as
+  ``repro.checkpoint.io.save_state``, plus a ``snapshot`` metadata block with
+  the (seq, train_step) provenance — an in-memory publish and an on-disk
+  round trip are bit-identical (tests/test_serve.py), and a saved snapshot is
+  readable by any checkpoint-v2 tooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.flat import FlatSpec
+
+PyTree = Any
+Buffers = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One published consensus snapshot (immutable).
+
+    seq:        monotonic publish sequence number (bus-wide)
+    train_step: facade train step that produced the parameters (provenance —
+                serving staleness is measured against this)
+    bufs:       single-replica consensus flat buffers, ``{bucket: [total]}``
+    manifest:   JSON FlatSpec manifest (checkpoint-v2 metadata form)
+    spec:       the lead-() FlatSpec the buffers unflatten through
+    """
+    seq: int
+    train_step: int
+    bufs: Buffers
+    manifest: dict
+    spec: FlatSpec
+
+    @property
+    def params(self) -> PyTree:
+        """Parameter pytree as lazy slice/reshape views of the flat buffers."""
+        return self.spec.unflatten(self.bufs)
+
+    # ------------------------------------------------------- checkpoint-v2 io
+    def save(self, path: str) -> None:
+        """Persist atomically in checkpoint format v2 (``theta::<bucket>``
+        planes + FlatSpec manifest + ``snapshot`` provenance metadata)."""
+        from repro.checkpoint import io
+        io.save(path, {"theta": self.bufs},
+                meta={"format": io.FLAT_FORMAT, "flat_spec": self.manifest,
+                      "snapshot": {"seq": self.seq,
+                                   "train_step": self.train_step}})
+
+    @staticmethod
+    def load(path: str, spec: FlatSpec) -> "Snapshot":
+        """Read a saved snapshot back against ``spec`` (any lead shape — the
+        lead-() layout is what's validated and loaded). The manifest check is
+        the same one ``restore_state`` runs: a layout drift refuses loudly
+        instead of slicing the plane wrong."""
+        from repro.checkpoint import io
+        spec0 = spec.with_lead(())
+        meta = io.load_meta(path) or {}
+        io.check_manifest(meta, spec0, path)
+        prefix = "theta" + io.SEP
+        bufs = {k[len(prefix):]: jnp.asarray(v)
+                for k, v in io.load_payload(path).items()
+                if k.startswith(prefix)}
+        assert set(bufs) == set(spec0.totals), (
+            "snapshot payload buckets do not match the spec", sorted(bufs),
+            sorted(spec0.totals))
+        prov = meta.get("snapshot", {})
+        return Snapshot(seq=int(prov.get("seq", 0)),
+                        train_step=int(prov.get("train_step", 0)),
+                        bufs=bufs, manifest=io.flat_spec_manifest(spec0),
+                        spec=spec0)
+
+
+class SnapshotBus:
+    """Single-producer, many-reader snapshot mailbox (double-buffered).
+
+    The producer is the training loop (via the ``GossipTrainer`` publish
+    hook or :meth:`publish_params` directly); readers call :meth:`latest`
+    whenever they want the freshest consensus — typically
+    ``LiveServer.maybe_swap`` between decode batches. Readers never block
+    the producer and vice versa.
+    """
+
+    def __init__(self):
+        self._slots: list = [None, None]
+        self._head: int = -1     # index of the slot holding the latest publish
+        self._seq: int = 0       # last published sequence number (0 = none)
+
+    # ---------------------------------------------------------------- produce
+    def _publish(self, bufs: Buffers, spec0: FlatSpec, train_step: int) -> Snapshot:
+        from repro.checkpoint import io
+        snap = Snapshot(seq=self._seq + 1, train_step=int(train_step),
+                        bufs=bufs, manifest=io.flat_spec_manifest(spec0),
+                        spec=spec0)
+        back = 1 - self._head if self._head >= 0 else 0
+        self._slots[back] = snap     # fully built before the flip
+        self._head = back            # the atomic publish: one int assignment
+        self._seq = snap.seq
+        return snap
+
+    def publish_state(self, state, train_step: int = 0) -> Snapshot:
+        """Publish the consensus of a flat-resident trainer state
+        (:class:`repro.api.FlatState`): mean over the ``W`` replica rows of
+        the resident buffers, computed on the flat plane."""
+        from repro.serving.engine import consensus_bufs
+        return self._publish(consensus_bufs(state.theta),
+                             state.spec.with_lead(()), train_step)
+
+    def publish_params(self, params: PyTree, train_step: int = 0) -> Snapshot:
+        """Publish a single-replica parameter pytree directly (no trainer in
+        the loop — e.g. examples/serve_decode.py, or restored checkpoints)."""
+        spec0 = FlatSpec.build(params, leading=0)
+        return self._publish(spec0.flatten(params), spec0, train_step)
+
+    # ---------------------------------------------------------------- consume
+    def latest(self) -> Optional[Snapshot]:
+        """The most recently published snapshot, or None before the first
+        publish. The returned object is immutable and never overwritten —
+        holding it across later publishes is safe."""
+        head = self._head             # read the index once: consistent slot
+        return self._slots[head] if head >= 0 else None
+
+    @property
+    def seq(self) -> int:
+        """Sequence number of the latest publish (0 before any)."""
+        return self._seq

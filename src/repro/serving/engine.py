@@ -52,6 +52,33 @@ class ServeProgram:
     batch: int
     max_len: int
     window: int
+    # continuous-batching decode: (params, cache, tokens, cond, kv_start[B])
+    # -> (logits, cache); compiled lazily, so programs that never serve
+    # per-slot traffic pay nothing (repro.serve harness)
+    decode_slots_fn: Optional[Callable] = None
+    param_dtype: Any = jnp.bfloat16
+    cache_dtype: Any = jnp.bfloat16
+
+    # ----------------------------------------------------------- swap surface
+    def place_params(self, params: PyTree) -> PyTree:
+        """Device-put a single-replica parameter pytree onto the serving
+        shardings, cast to the program's serving dtype — the hot-swap entry
+        point (repro.serve.LiveServer): the transfer is DISPATCHED here, not
+        awaited, so a swap never blocks the token loop on the copy."""
+        cast = jax.tree.map(lambda x, r: jnp.asarray(x, r.dtype),
+                            params, self.param_shapes)
+        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                 self.param_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(cast, shardings)
+
+    def init_cache(self) -> PyTree:
+        """Fresh zero KV-cache (pos = 0) matching ``cache_specs`` — the
+        continuous-batching harness's starting state."""
+        from repro.models import transformer as tr
+        cache, _ = tr.init_cache(self.model_cfg, self.batch, self.max_len,
+                                 dtype=self.cache_dtype, window=self.window)
+        return cache
 
     def token_shapes(self, seq: int = 1):
         cfg = self.model_cfg
@@ -103,6 +130,17 @@ def make_serve_program(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ModelConfig, *,
         out_shardings=(bshard, shard(cache_specs)),
         donate_argnums=(1,))
 
+    def decode_slots(params, cache, tokens, cond, kv_start):
+        logits, new_cache = tr.decode_step(params, cfg, cache, tokens, cond,
+                                           window=window, kv_start=kv_start)
+        return logits, new_cache
+
+    decode_slots_fn = jax.jit(
+        decode_slots,
+        in_shardings=(shard(param_specs), shard(cache_specs), bshard, bshard, bshard),
+        out_shardings=(bshard, shard(cache_specs)),
+        donate_argnums=(1,))
+
     prefill_fn = None
     if with_prefill:
         def pf(params, tokens, cond):
@@ -115,14 +153,36 @@ def make_serve_program(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ModelConfig, *,
             out_shardings=(bshard, shard(cache_specs)))
 
     return ServeProgram(cfg, mesh, param_specs, param_shapes, cache_specs, cache_shapes,
-                        decode_fn, prefill_fn, batch, max_len, window)
+                        decode_fn, prefill_fn, batch, max_len, window,
+                        decode_slots_fn=decode_slots_fn,
+                        param_dtype=param_dtype, cache_dtype=cache_dtype)
 
 
-def consensus_params(params_stacked: PyTree) -> PyTree:
-    """Average the worker replicas -> serving params (paper 'Aggregate').
+def consensus_bufs(theta) -> dict:
+    """FLAT-NATIVE consensus: mean over the ``W`` replica rows of the resident
+    ``{bucket: [W, total]}`` buffers — ONE einsum reduction per dtype bucket,
+    no pytree stacking, no per-leaf sweeps. This is the reduction every
+    consensus consumer shares (serving handoff, SnapshotBus publish, the sim
+    engine's aggregate path)."""
+    out = {}
+    for k, v in theta.items():
+        w = v.shape[0]
+        out[k] = (jnp.einsum("wn->n", v.astype(jnp.float32)) / w).astype(v.dtype)
+    return out
 
-    This is the training->serving handoff: ``repro.api.GossipTrainer
+
+def consensus_params(state_or_stack) -> PyTree:
+    """Worker-averaged parameters -> serving params (paper 'Aggregate').
+
+    Accepts either a flat-resident :class:`repro.api.FlatState` (the native
+    path: mean over the ``[W, total]`` buffers via :func:`consensus_bufs`,
+    then ONE unflatten into lazy views) or a legacy ``[W, ...]``-stacked
+    pytree. This is the training->serving handoff: ``repro.api.GossipTrainer
     .consensus_params(state)`` delegates here, and ``make_serve_program`` is
     re-exported from :mod:`repro.api` as the serving entry point."""
+    from repro.api.state import FlatState
+    if isinstance(state_or_stack, FlatState):
+        s = state_or_stack
+        return s.spec.with_lead(()).unflatten(consensus_bufs(s.theta))
     return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
-                        params_stacked)
+                        state_or_stack)

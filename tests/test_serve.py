@@ -1,0 +1,318 @@
+"""repro.serve contract tests: snapshot bus atomicity + checkpoint-v2 parity,
+the facade publish hook, flat-native consensus, per-slot kv_start isolation,
+hot-swap determinism, continuous-batching invariants, and restart-exact
+hash-seeded traffic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import GossipTrainer
+from repro.common.config import MeshConfig, OptimizerConfig, ProtocolConfig
+from repro.common.flat import FlatSpec
+from repro.configs import get_reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models import simple
+from repro.models import transformer as tr
+from repro.serve import (ContinuousBatcher, LiveServer, Snapshot, SnapshotBus,
+                         TrafficGen, TrainServeLoop)
+from repro.serving.engine import consensus_params, make_serve_program
+
+W = 4
+
+
+def _loss(params, x, y):
+    return simple.xent_loss(simple.mlp_logits(params, x), y)
+
+
+def _trainer(publish_every=None, bus=None):
+    return GossipTrainer(
+        engine="sim",
+        protocol=ProtocolConfig(method="elastic_gossip", comm_probability=0.5,
+                                moving_rate=0.5, topology="uniform"),
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=_loss, num_workers=W,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=16, depth=2,
+                                            num_classes=3)[0],
+        publish_every=publish_every, snapshot_bus=bus)
+
+
+def _batch(seed=1):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (W, 8, 10))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (W, 8), 0, 3)
+    return x, y
+
+
+def _perturbed_state(seed=0):
+    """A trained-looking FlatState whose replicas DIFFER (consensus is a real
+    mean, not a broadcast)."""
+    t = _trainer()
+    state = t.init_state(seed)
+    theta = {k: v + jax.random.normal(jax.random.PRNGKey(i), v.shape, v.dtype)
+             for i, (k, v) in enumerate(state.theta.items())}
+    return t, state.replace(theta=theta)
+
+
+# ---------------------------------------------------------------------------
+# consensus
+# ---------------------------------------------------------------------------
+
+def test_flat_native_consensus_matches_tree_mean():
+    _, state = _perturbed_state()
+    flat = consensus_params(state)                      # FlatState path
+    tree = consensus_params(jax.tree.map(lambda x: x, state.params))  # stacked
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_facade_consensus_is_flat_native(monkeypatch):
+    """GossipTrainer.consensus_params must route the STATE (flat plane), not a
+    stacked pytree, through the shared reduction."""
+    t, state = _perturbed_state()
+    ref = consensus_params(state)
+    out = t.consensus_params(state)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# snapshot bus
+# ---------------------------------------------------------------------------
+
+def test_snapshot_disk_roundtrip_bit_exact(tmp_path):
+    """In-memory publish == checkpoint-v2 on-disk round trip, bit for bit."""
+    _, state = _perturbed_state()
+    bus = SnapshotBus()
+    snap = bus.publish_state(state, train_step=17)
+    path = str(tmp_path / "snap.npz")
+    snap.save(path)
+    back = Snapshot.load(path, state.spec)
+    assert back.seq == snap.seq and back.train_step == 17
+    assert set(back.bufs) == set(snap.bufs)
+    for k in snap.bufs:
+        np.testing.assert_array_equal(np.asarray(snap.bufs[k]),
+                                      np.asarray(back.bufs[k]))
+    for a, b in zip(jax.tree.leaves(snap.params), jax.tree.leaves(back.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_snapshot_load_rejects_layout_drift(tmp_path):
+    _, state = _perturbed_state()
+    snap = SnapshotBus().publish_state(state, train_step=1)
+    path = str(tmp_path / "snap.npz")
+    snap.save(path)
+    other, _ = simple.init_mlp(jax.random.PRNGKey(0), in_dim=10, hidden=24,
+                               depth=2, num_classes=3)
+    with pytest.raises(ValueError, match="manifest"):
+        Snapshot.load(path, FlatSpec.build(other, leading=0))
+
+
+def test_bus_double_buffer_holds_old_snapshot():
+    """A reader's snapshot stays intact (same objects, same values) across
+    later publishes — the double buffer never overwrites the held slot."""
+    _, state = _perturbed_state()
+    bus = SnapshotBus()
+    assert bus.latest() is None and bus.seq == 0
+    s1 = bus.publish_state(state, train_step=1)
+    held = bus.latest()
+    assert held is s1 and held.seq == 1
+    ref = {k: np.asarray(v).copy() for k, v in held.bufs.items()}
+    s2 = bus.publish_state(state.replace(
+        theta={k: v + 1 for k, v in state.theta.items()}), train_step=2)
+    s3 = bus.publish_state(state, train_step=3)
+    assert bus.latest() is s3 and bus.seq == 3
+    assert s2.seq == 2 and s3.seq == 3
+    for k in ref:   # the held snapshot was never touched
+        np.testing.assert_array_equal(np.asarray(held.bufs[k]), ref[k])
+
+
+def test_publish_hook_cadence():
+    """publish_every=k publishes exactly every k facade steps, with
+    train-step provenance and metrics['published_seq']."""
+    t = _trainer(publish_every=3)
+    state = t.init_state(0)
+    seqs = []
+    for i in range(1, 10):
+        state, m = t.step(state, _batch())
+        if i % 3 == 0:
+            assert m["published_seq"] == i // 3
+            seqs.append(m["published_seq"])
+        else:
+            assert "published_seq" not in m
+    assert seqs == [1, 2, 3] and t.snapshot_bus.seq == 3
+    snap = t.snapshot_bus.latest()
+    assert snap.train_step == 9
+    # the published buffers are the consensus of the CURRENT state
+    ref = consensus_params(state)
+    for a, b in zip(jax.tree.leaves(snap.params), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_publish_every_validation():
+    with pytest.raises(ValueError, match="publish_every"):
+        _trainer(publish_every=0)
+
+
+# ---------------------------------------------------------------------------
+# serving: kv_start isolation + hot-swap determinism + continuous batching
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_reduced("tinyllama_1_1b")
+    prog = make_serve_program(
+        make_host_mesh(1), MeshConfig(data=1, model=1, pods=1, workers_per_pod=1),
+        cfg, batch=4, max_len=48, param_dtype=jnp.float32, cache_dtype=jnp.float32)
+    params, _ = tr.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, prog, params
+
+
+def test_kv_start_masks_previous_occupant_exactly(serve_setup):
+    """Rows below kv_start[b] are EXACTLY invisible: decode over a cache whose
+    early rows hold garbage == decode over the same cache with those rows
+    zeroed, bit for bit — the continuous-batching slot-isolation guarantee."""
+    cfg, prog, params = serve_setup
+    cache = prog.init_cache()
+    # fill 6 positions with a previous occupant's tokens
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 1, 6), 0, cfg.vocab_size)
+    for i in range(6):
+        _, cache = prog.decode_fn(params, cache, toks[:, :, i], None)
+    kv_start = jnp.array([6, 6, 0, 3], jnp.int32)   # rows 0,1 fully recycled
+
+    def zero_below(c, s):
+        def z(a):
+            pos = jnp.arange(a.shape[2])           # [count, B, S, ...]
+            keep = (pos[None, :] >= s[:, None])
+            return a * keep.reshape((1,) + keep.shape + (1,) * (a.ndim - 3)).astype(a.dtype)
+        out = dict(c)
+        out["segments"] = jax.tree.map(z, c["segments"])
+        return out
+
+    cp = lambda c: jax.tree.map(jnp.copy, c)   # decode programs donate caches
+    tok = jax.random.randint(jax.random.PRNGKey(2), (4, 1), 0, cfg.vocab_size)
+    lg_garbage, _ = prog.decode_slots_fn(params, cp(cache), tok, None, kv_start)
+    lg_zeroed, _ = prog.decode_slots_fn(params, zero_below(cp(cache), kv_start),
+                                        tok, None, kv_start)
+    np.testing.assert_array_equal(np.asarray(lg_garbage), np.asarray(lg_zeroed))
+    # and kv_start=0 must reproduce the original single-stream program
+    lg_plain, _ = prog.decode_fn(params, cp(cache), tok, None)
+    lg_zero_start, _ = prog.decode_slots_fn(params, cp(cache), tok, None,
+                                            jnp.zeros((4,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_plain), np.asarray(lg_zero_start))
+
+
+def test_hot_swap_prefix_determinism(serve_setup):
+    """Tokens generated BEFORE the swap boundary are bit-identical whether or
+    not a swap happens at that boundary; tokens after may differ."""
+    cfg, prog, params = serve_setup
+    params2 = tr.init_lm(jax.random.PRNGKey(9), cfg)[0]
+    reqs = TrafficGen(3, rate=1.0, num_requests=3, vocab=cfg.vocab_size,
+                      prompt_len=(2, 4), max_new=(8, 8)).requests()
+    swap_at = 8
+
+    def run(with_swap):
+        bus = SnapshotBus()
+        bus.publish_params(params, train_step=0)
+        server = LiveServer(prog, bus)
+        server.maybe_swap()
+        bat = ContinuousBatcher(server, [dataclasses.replace(r) for r in reqs])
+        trace = []
+        for t in range(20):
+            if with_swap and t == swap_at:
+                bus.publish_params(params2, train_step=50)
+                assert server.maybe_swap() and server.train_step == 50
+            bat.step(t)
+            trace.append(np.array(bat.next_tok))
+        bat.check_invariants()
+        return trace
+
+    a, b = run(False), run(True)
+    for t in range(swap_at):
+        np.testing.assert_array_equal(a[t], b[t])   # pre-swap: bit-identical
+    assert any(not np.array_equal(a[t], b[t]) for t in range(swap_at, 20)), (
+        "swap to different weights changed nothing downstream?")
+
+
+def test_continuous_batching_invariants(serve_setup):
+    """Every admitted request completes with its exact budget, slots never
+    leak, and the slot assignment recycles (more requests than slots)."""
+    cfg, prog, params = serve_setup
+    bus = SnapshotBus()
+    bus.publish_params(params)
+    server = LiveServer(prog, bus)
+    server.maybe_swap()
+    reqs = TrafficGen(11, rate=0.8, num_requests=10, vocab=cfg.vocab_size,
+                      prompt_len=(1, 3), max_new=(2, 5)).requests()
+    bat = ContinuousBatcher(server, reqs)
+    bat.run(46)
+    bat.check_invariants()
+    lat = bat.latency_summary()
+    assert lat["admitted"] > prog.batch          # slots actually recycled
+    assert lat["completed"] == lat["admitted"]   # every admitted one finished
+    by_rid = {r.rid: r for r in reqs}
+    for rec in bat.completed:
+        assert len(rec["tokens"]) == by_rid[rec["rid"]].max_new
+
+
+def test_traffic_restart_exact():
+    """The request stream is a pure function of the seed: regenerating gives
+    identical arrivals/prompts/budgets; another seed differs."""
+    mk = lambda seed: TrafficGen(seed, rate=0.5, num_requests=12, vocab=256,
+                                 prompt_len=(1, 6), max_new=(2, 9)).requests()
+    a, b, c = mk(5), mk(5), mk(6)
+    for ra, rb in zip(a, b):
+        assert (ra.rid, ra.arrival, ra.max_new) == (rb.rid, rb.arrival, rb.max_new)
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    assert any(ra.arrival != rc.arrival or not np.array_equal(ra.prompt, rc.prompt)
+               for ra, rc in zip(a, c))
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals)
+    stag = TrafficGen(5, rate=0.5, num_requests=4, vocab=256,
+                      mode="staggered").requests()
+    assert [r.arrival for r in stag] == [2, 4, 6, 8]
+
+
+def test_train_serve_loop_staleness_bounded():
+    """End to end on the MLP trainer + tinyllama server is overkill; what the
+    loop must guarantee is bookkeeping: staleness is sampled once serving a
+    published snapshot, and bounded by the publish cadence + slice size."""
+    cfg = get_reduced("tinyllama_1_1b")
+    prog = make_serve_program(
+        make_host_mesh(1), MeshConfig(data=1, model=1, pods=1, workers_per_pod=1),
+        cfg, batch=2, max_len=16, param_dtype=jnp.float32, cache_dtype=jnp.float32)
+
+    def loss_fn(params, x, y):
+        loss, _ = tr.lm_loss(params, cfg, x, y)
+        return loss
+
+    trainer = GossipTrainer(
+        engine="sim",
+        protocol=ProtocolConfig(method="elastic_gossip", comm_probability=0.5,
+                                moving_rate=0.5, topology="uniform"),
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.01, momentum=0.9),
+        loss_fn=loss_fn, num_workers=2,
+        init_fn=lambda key: tr.init_lm(key, cfg)[0], publish_every=2)
+    state = trainer.init_state(0)
+    x = jax.random.randint(jax.random.PRNGKey(0), (2, 1, 8), 0, cfg.vocab_size)
+    y = jax.random.randint(jax.random.PRNGKey(1), (2, 1, 8), 0, cfg.vocab_size)
+
+    server = LiveServer(prog, trainer.snapshot_bus,
+                        params=trainer.consensus_params(state))
+
+    def train_fn(_t):
+        nonlocal state
+        state, _ = trainer.step(state, (x, y))
+        return trainer._host_steps
+
+    reqs = TrafficGen(2, rate=1.0, num_requests=3, vocab=cfg.vocab_size,
+                      prompt_len=(1, 2), max_new=(2, 3)).requests()
+    loop = TrainServeLoop(server, ContinuousBatcher(server, reqs), train_fn)
+    loop.run(12)
+    loop.batcher.check_invariants()
+    summ = loop.summary()
+    assert summ["swaps"] >= 1
+    # publish every 2 steps, 1 step/boundary, swap every boundary -> the
+    # served weights are never more than publish_every steps behind
+    assert 0 <= summ["staleness_max_steps"] <= 2, summ
