@@ -1,0 +1,222 @@
+"""Fault-injection frontiers: robust gossip mixing vs. plain Elastic Gossip
+under message drop and Byzantine workers. Writes ``BENCH_faults.json`` at the
+repo root.
+
+Scenario (repro.faults on the ``engine="sim"`` wire boundary): W=8 workers on
+the Gaussian-cluster problem, faults injected as pure hashes of
+(seed, worker, step).
+
+- **Frontier A — convergence vs. drop rate** (``fault_model="drop"``, rates
+  0 / 0.1 / 0.2 / 0.4): each lost wire returns its mixing weight to the
+  receiver's diagonal (``discard_lost``), so plain elastic gossip degrades
+  smoothly but keeps converging — robustness to *omission* faults needs no
+  clipping.
+- **Frontier B — convergence vs. Byzantine fraction**
+  (``fault_model="byzantine_noise"``, fractions 0 / 1/8 / 2/8): plain
+  elastic gossip pulls every receiver toward pure-noise rows and diverges;
+  ``clipped_gossip`` norm-clips the received displacement against the local
+  row (one Pallas pass on the flat plane) and holds the loss target.
+- **Headline** (ISSUE 7 acceptance): a composite model registered HERE via
+  the public ``@register_fault_model`` decorator (the registry contract —
+  a newly registered model is immediately injectable) combines drop 0.2 with
+  Byzantine fraction 1/8; ``clipped_gossip`` reaches the loss target that
+  plain ``elastic_gossip`` misses.
+- **Zero-fault anchor**: a ``FaultConfig`` with rate 0 reproduces the
+  fault-free ``engine="sim"`` run bit-exactly — params, velocity,
+  comm_units/comm_bytes and the traced PRNG key.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO, "BENCH_faults.json")
+
+WORKERS = 8
+DROP_RATES = (0.0, 0.1, 0.2, 0.4)
+BYZ_FRACS = (0.0, 1.0 / 8.0, 2.0 / 8.0)
+
+
+def _register_composite():
+    """The headline scenario's fault model: drop AND Byzantine noise at once.
+    Registered through the same public decorator user code would use; the
+    engine composes the two planes (drop via the wire mask, Byzantine via the
+    published rows) without knowing this model exists."""
+    from repro.faults import available_fault_models
+    if "drop_byzantine" in available_fault_models():
+        return
+    from repro.faults import register_fault_model
+    from repro.faults.models import ByzantineNoise, DropFault
+
+    @register_fault_model("drop_byzantine")
+    class DropByzantine(ByzantineNoise, DropFault):
+        """fault_rate of wires dropped + first round(fault_frac*W) workers
+        publishing noise rows — the ISSUE 7 headline stress."""
+
+
+def _problem(n=64, d=10, classes=3, seed=0):
+    """Gaussian-cluster classification (same family as benchmarks/straggler):
+    loss drops fast and deterministically on CPU."""
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(classes, d) * 2
+    y = rng.randint(0, classes, (WORKERS, n)).astype(np.int32)
+    x = protos[y] + rng.randn(WORKERS, n, d).astype(np.float32)
+    ye = rng.randint(0, classes, (256,)).astype(np.int32)
+    xe = protos[ye] + rng.randn(256, d).astype(np.float32)
+    return (jnp.asarray(x, jnp.float32), jnp.asarray(y),
+            jnp.asarray(xe, jnp.float32), jnp.asarray(ye))
+
+
+def _make_trainer(method, faults=None):
+    from repro.api import GossipTrainer
+    from repro.common.config import OptimizerConfig, ProtocolConfig
+    from repro.models import simple
+
+    proto = ProtocolConfig(method=method, comm_probability=0.5,
+                           moving_rate=0.5, topology="uniform",
+                           robust_clip=0.1)
+    return GossipTrainer(
+        engine="sim", protocol=proto,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=lambda p, x, y: simple.xent_loss(simple.mlp_logits(p, x), y),
+        num_workers=WORKERS, faults=faults,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=24, depth=2,
+                                            num_classes=3)[0])
+
+
+def _eval_fn():
+    from repro.models import simple
+
+    @jax.jit
+    def ev(params, xe, ye):
+        return simple.xent_loss(simple.mlp_logits(params, xe), ye)
+    return ev
+
+
+def _run(method, faults, batch, xe, ye, steps):
+    """Final consensus eval loss (and fault counters) after ``steps``."""
+    ev = _eval_fn()
+    trainer = _make_trainer(method, faults)
+    state = trainer.init_state(0)
+    for _ in range(steps):
+        state, m = trainer.step(state, batch)
+    loss = float(ev(trainer.consensus_params(state), xe, ye))
+    rec = {"final_eval_loss": (round(loss, 6) if np.isfinite(loss) else None),
+           "comm_units": int(state.proto.comm_units)}
+    for k in ("wire_dropped", "wire_corrupt"):
+        v = getattr(state.proto, k, None)
+        if v is not None:
+            rec[k] = int(v)
+    return rec
+
+
+def _assert_zero_fault_bit_exact(batch, steps):
+    """A zero-rate FaultConfig must reproduce the fault-free engine="sim"
+    run bit-for-bit: params, velocity, comm accounting and the PRNG key."""
+    from repro.common.config import FaultConfig
+    base = _make_trainer("elastic_gossip")
+    withf = _make_trainer("elastic_gossip",
+                          FaultConfig(fault_model="drop", fault_rate=0.0))
+    s0, s1 = base.init_state(0), withf.init_state(0)
+    for _ in range(steps):
+        s0, _ = base.step(s0, batch)
+        s1, _ = withf.step(s1, batch)
+    for k in s0.theta:
+        assert bool(jnp.all(s0.theta[k] == s1.theta[k])), f"theta[{k}] drifted"
+    for k in s0.opt.mu:
+        assert bool(jnp.all(s0.opt.mu[k] == s1.opt.mu[k])), f"mu[{k}] drifted"
+    assert int(s0.proto.comm_units) == int(s1.proto.comm_units)
+    assert float(s0.proto.comm_bytes) == float(s1.proto.comm_bytes)
+    assert bool(jnp.all(jax.random.key_data(s0.key)
+                        == jax.random.key_data(s1.key)))
+
+
+def main(quick: bool = True) -> None:
+    from repro.common.config import FaultConfig
+
+    _register_composite()
+    steps = 60 if quick else 250
+    x, y, xe, ye = _problem()
+
+    t0 = time.time()
+    _assert_zero_fault_bit_exact((x, y), min(steps, 20))
+
+    # the fixed loss target: 1.5x the zero-fault elastic-gossip loss at the
+    # step budget — reachable under moderate faults, missed on divergence
+    clean = _run("elastic_gossip", None, (x, y), xe, ye, steps)
+    target = round(clean["final_eval_loss"] * 1.5, 6)
+
+    drop_frontier = []
+    for rate in DROP_RATES:
+        faults = (FaultConfig(fault_model="drop", fault_rate=rate)
+                  if rate else None)
+        row = {"drop_rate": rate}
+        for method in ("elastic_gossip", "clipped_gossip"):
+            row[method] = _run(method, faults, (x, y), xe, ye, steps)
+        drop_frontier.append(row)
+
+    byz_frontier = []
+    for frac in BYZ_FRACS:
+        faults = (FaultConfig(fault_model="byzantine_noise", fault_frac=frac)
+                  if frac else None)
+        row = {"byzantine_frac": frac,
+               "num_byzantine": int(round(frac * WORKERS))}
+        for method in ("elastic_gossip", "clipped_gossip"):
+            row[method] = _run(method, faults, (x, y), xe, ye, steps)
+        byz_frontier.append(row)
+
+    # headline: drop 0.2 + Byzantine 1/8 at once (composite registered model)
+    headline_faults = FaultConfig(fault_model="drop_byzantine",
+                                  fault_rate=0.2, fault_frac=1.0 / 8.0)
+    headline = {"drop_rate": 0.2, "byzantine_frac": 1.0 / 8.0}
+    for method in ("elastic_gossip", "clipped_gossip"):
+        headline[method] = _run(method, headline_faults, (x, y), xe, ye, steps)
+
+    plain = headline["elastic_gossip"]["final_eval_loss"]
+    clipped = headline["clipped_gossip"]["final_eval_loss"]
+    # the acceptance claim: robust mixing holds the target plain gossip misses
+    assert clipped is not None and clipped <= target, (clipped, target)
+    assert plain is None or plain > target, (plain, target)
+
+    result = {
+        "workers": WORKERS, "steps": steps, "target_loss": target,
+        "zero_fault_bit_exact": True,
+        "drop_frontier": drop_frontier,
+        "byzantine_frontier": byz_frontier,
+        "headline": headline,
+        "wall_seconds": round(time.time() - t0, 1),
+        "notes": (
+            "All fault draws are pure hashes of (seed, worker, step). Drop "
+            "frontier: lost wires return their mixing weight to the "
+            "receiver's diagonal, so plain elastic gossip degrades smoothly. "
+            "Byzantine frontier: noise rows pull plain mixing off to "
+            "divergence; clipped_gossip norm-clips the received displacement "
+            "on the flat plane and keeps converging. Headline combines "
+            "drop 0.2 + Byzantine 1/8 via a composite model registered "
+            "through the public @register_fault_model decorator."),
+    }
+    print("scenario,method,final_eval_loss")
+    for row in drop_frontier:
+        for method in ("elastic_gossip", "clipped_gossip"):
+            print(f"drop={row['drop_rate']},{method},"
+                  f"{row[method]['final_eval_loss']}")
+    for row in byz_frontier:
+        for method in ("elastic_gossip", "clipped_gossip"):
+            print(f"byz={row['byzantine_frac']:.3f},{method},"
+                  f"{row[method]['final_eval_loss']}")
+    print(f"# headline drop=0.2+byz=1/8: plain={plain} clipped={clipped} "
+          f"target={target}")
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main(quick="--full" not in sys.argv)

@@ -11,9 +11,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (alpha_schedule, comm_compress, comm_cost, fused_step,
-                        roofline_bench, serve_live, straggler, table_4_1,
-                        table_4_2, table_4_3, table_a_1)
+from benchmarks import (alpha_schedule, comm_compress, comm_cost, faults,
+                        fused_step, roofline_bench, serve_live, straggler,
+                        table_4_1, table_4_2, table_4_3, table_a_1)
 
 TABLES = {
     "table_4_1": table_4_1.main,
@@ -28,6 +28,7 @@ TABLES = {
     "fused_step_resident": fused_step.resident_main,
     "straggler": straggler.main,
     "serve_live": serve_live.main,
+    "faults": faults.main,
 }
 
 

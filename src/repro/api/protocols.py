@@ -72,6 +72,33 @@ class ProtocolState(NamedTuple):
     stale_time: Optional[jax.Array] = None    # f32 sum of virtual-time gaps
     stale_steps: Optional[jax.Array] = None   # i32 sum of step-count gaps
     stale_events: Optional[jax.Array] = None  # i32 exchange initiations
+    # Fault-plane bookkeeping (repro.faults): None unless a FaultConfig is
+    # supplied — the fault-free engines' pytrees / checkpoints are unchanged.
+    # Dropped / checksum-failed / timed-out wires are DISCARDED, never applied,
+    # and (satellite: applied-exchange accounting) never counted in
+    # comm_units/comm_bytes.
+    wire_dropped: Optional[jax.Array] = None   # i32 wires lost in flight
+    wire_corrupt: Optional[jax.Array] = None   # i32 wires failing checksum
+    exch_timeouts: Optional[jax.Array] = None  # i32 exchanges timed out (async)
+    exch_retries: Optional[jax.Array] = None   # i32 wire re-dispatches (async)
+
+
+class WireFaults(NamedTuple):
+    """Per-event wire-fault masks, computed by the ENGINE (pure hashes of
+    (FaultConfig.seed, worker, step) — repro.faults) and handed to
+    :meth:`Protocol.comm_update`, which discards the marked senders' wires at
+    the mixing boundary and keeps them out of the applied-exchange byte
+    accounting. Either mask may be None (that fault family not configured)."""
+    dropped: Optional[jax.Array] = None   # bool[W]: sender's wire lost in flight
+    corrupt: Optional[jax.Array] = None   # bool[W]: sender's wire failed checksum
+
+    def lost(self) -> Optional[jax.Array]:
+        """Combined bool[W] mask of senders whose wire must be discarded."""
+        if self.dropped is None:
+            return self.corrupt
+        if self.corrupt is None:
+            return self.dropped
+        return self.dropped | self.corrupt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,7 +250,8 @@ class Protocol:
     def comm_update(self, key: jax.Array, active: jax.Array, theta_stack: PyTree,
                     state: ProtocolState, step=None,
                     transmit: Optional[PyTree] = None,
-                    wire_bytes: Optional[float] = None) -> tuple[PyTree, ProtocolState]:
+                    wire_bytes: Optional[float] = None,
+                    wire_faults: Optional[WireFaults] = None) -> tuple[PyTree, ProtocolState]:
         """Communication-related component on stacked params [W, ...].
 
         ``theta_stack`` is ANY stacked pytree — a parameter tree, or (the
@@ -239,8 +267,12 @@ class Protocol:
         the static per-event egress of one replica for the live accounting —
         flat-resident callers MUST pass it (their buffers carry lane padding,
         so deriving it from ``theta_stack`` would over-count); tree callers
-        may omit it. The default honors the ``pairwise`` capability flag:
-        pairwise protocols mix via :meth:`mix_matrix` over
+        may omit it. ``wire_faults`` (optional) carries the engine's fault
+        masks (repro.faults): marked senders' wires are discarded at the
+        mixing boundary (``topology.discard_lost`` — the receiver keeps its
+        own row for the undelivered share) and excluded from the
+        applied-exchange byte accounting. The default honors the ``pairwise``
+        capability flag: pairwise protocols mix via :meth:`mix_matrix` over
         :meth:`sample_peers` (so a registered subclass only needs the matrix
         + gate/coef rule); everything else is the no-communication identity.
         """
@@ -248,14 +280,19 @@ class Protocol:
             return theta_stack, state
         peers = self.sample_peers(key, active.shape[0])
         mix = self.mix_matrix(peers, active, step=step)
+        lost = wire_faults.lost() if wire_faults is not None else None
+        if lost is not None:
+            mix = _topology().discard_lost(mix, lost)
         if transmit is None:
             theta_new = _topology().apply_mix(mix, theta_stack)
         else:
             theta_new = _topology().apply_mix_split(mix, theta_stack, transmit)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
-        units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes)
+        units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes,
+                                           lost=lost)
         # _replace (not positional construction) so the async engine's
         # virtual-time fields ride through untouched
+        state = self._count_wire_faults(state, active, wire_faults)
         return theta_new, state._replace(comm_rounds=rounds, comm_units=units,
                                          comm_bytes=bytes_)
 
@@ -294,19 +331,46 @@ class Protocol:
 
     def _accrue_bytes(self, state: ProtocolState, active: jax.Array,
                       theta_stack: PyTree,
-                      wire_bytes: Optional[float] = None) -> tuple[jax.Array, jax.Array]:
+                      wire_bytes: Optional[float] = None,
+                      lost: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
         """(comm_units', comm_bytes'): the exact integer participation count
         plus the derived per-worker egress — one wire-compressed replica per
         participating worker, averaged over workers. ``wire_bytes`` overrides
         the per-replica wire size (flat-resident callers pass their cached
-        exact value; the padded buffers would over-count)."""
+        exact value; the padded buffers would over-count). ``lost`` (optional
+        bool[W], the fault plane's discard mask) removes dropped/corrupted
+        wires from the count: bytes are accumulated for APPLIED exchanges
+        only. With an all-false mask the engaged count is the identical
+        integer, so a zero-rate fault plane accounts bit-exactly."""
         W = active.shape[0]
         if wire_bytes is None:
             wire_bytes = self.wire_stack_bytes(theta_stack)
         per_event = self.comm_cost(wire_bytes, W).bytes_per_event
-        units = _saturating_units_add(state.comm_units,
-                                      jnp.sum(jnp.asarray(active).astype(jnp.int32)))
+        engaged = jnp.asarray(active).astype(jnp.int32)
+        if lost is not None:
+            engaged = engaged * (~lost).astype(jnp.int32)
+        units = _saturating_units_add(state.comm_units, jnp.sum(engaged))
         return units, (per_event / W) * units.astype(_bytes_dtype())
+
+    def _count_wire_faults(self, state: ProtocolState, active: jax.Array,
+                           wire_faults: Optional[WireFaults]) -> ProtocolState:
+        """Accumulate the fault-plane counters (among engaged senders). The
+        engine seeds ``wire_dropped``/``wire_corrupt`` to 0 at init whenever a
+        fault plane is configured, so the state pytree structure is stable
+        across steps."""
+        if wire_faults is None:
+            return state
+        upd = {}
+        act = jnp.asarray(active)
+        if wire_faults.dropped is not None:
+            base = state.wire_dropped if state.wire_dropped is not None else jnp.int32(0)
+            upd["wire_dropped"] = base + jnp.sum(
+                (act & wire_faults.dropped).astype(jnp.int32))
+        if wire_faults.corrupt is not None:
+            base = state.wire_corrupt if state.wire_corrupt is not None else jnp.int32(0)
+            upd["wire_corrupt"] = base + jnp.sum(
+                (act & wire_faults.corrupt).astype(jnp.int32))
+        return state._replace(**upd) if upd else state
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +398,7 @@ class AllReduceSGD(Protocol):
             grads_stack)
 
     def comm_update(self, key, active, theta_stack, state, step=None, transmit=None,
-                    wire_bytes=None):
+                    wire_bytes=None, wire_faults=None):
         # parameters untouched, but the every-step ring all-reduce egress is
         # accounted so live runs expose the paper's communication-cost gap.
         W = active.shape[0]
@@ -389,7 +453,7 @@ class EASGD(Protocol):
         return delta, center_new
 
     def comm_update(self, key, active, theta_stack, state, step=None, transmit=None,
-                    wire_bytes=None):
+                    wire_bytes=None, wire_faults=None):
         delta, center_new = self.center_step(theta_stack, state.center, active, step=step)
         theta_new = jax.tree.map(lambda x, d: x + d, theta_stack, delta)
         rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
@@ -458,3 +522,9 @@ def comm_cost(cfg: ProtocolConfig, param_bytes: int, num_workers: int) -> CommCo
     """Functional form of :meth:`Protocol.comm_cost` (registry-dispatched)."""
     from repro.api import registry
     return registry.resolve(cfg).comm_cost(param_bytes, num_workers)
+
+
+# Robust mixing protocols (clipped_gossip / trimmed_gossip) live in their own
+# module but register into the same registry; importing here keeps
+# "import repro.api" sufficient for name resolution.
+from repro.api import robust as _robust  # noqa: E402,F401

@@ -1,0 +1,162 @@
+"""Robust pairwise gossip mixing (repro.faults' protocol layer).
+
+Plain elastic averaging absorbs whatever a peer publishes — one Byzantine
+worker scaling its row by 100x (or a corrupted-but-undetected wire) walks the
+whole fleet away from the optimum. The robust protocols here keep the
+registry's one-hook contract: they subclass :class:`ElasticGossip`, compute
+the usual mixing displacement ``delta_i = (M theta)_i - theta_i`` and pass it
+through ONE per-row transform before applying it:
+
+- ``clipped_gossip``  norm-clips the received displacement against the local
+  row: ``scale_i = min(1, robust_clip * ||theta_i|| / ||delta_i||)`` — a peer
+  can pull a worker at most ``robust_clip`` of its own norm per exchange, so
+  garbage rows are bounded instead of absorbed;
+- ``trimmed_gossip``  zeroes displacement coordinates larger than
+  ``robust_trim * RMS(theta_i)`` — coordinate-wise outlier rejection.
+
+Both fold in a **staleness-adaptive alpha** when the async engine's
+``worker_steps`` are available: the displacement is scaled by
+``1 / (1 + stale_adapt * |steps_i - steps_peer|)``, so exchanges against very
+stale partners move less (``stale_adapt = 0`` disables). The transform is
+receiver-side, so it intentionally breaks the elastic symmetry — robustness
+trades exact sum conservation for bounded influence.
+
+The apply is one elementwise pass over the flat ``[W, total]`` plane
+(:func:`repro.kernels.ops.robust_flat_apply`, Pallas on TPU / jnp oracle
+elsewhere); the per-row statistics feeding it are O(W) scalars off one norm
+reduction.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.protocols import ElasticGossip, ProtocolState, _topology
+from repro.api.registry import register_protocol
+
+
+def _row_sumsq(tree) -> tuple[jax.Array, int]:
+    """(sum of squares per leading row, total elements per row) over a
+    stacked pytree / buffer dict."""
+    leaves = jax.tree.leaves(tree)
+    W = leaves[0].shape[0]
+    sq = jnp.zeros((W,), jnp.float32)
+    n = 0
+    for x in leaves:
+        flat = x.reshape(W, -1).astype(jnp.float32)
+        sq = sq + jnp.sum(flat * flat, axis=1)
+        n += flat.shape[1]
+    return sq, n
+
+
+class RobustGossip(ElasticGossip):
+    """Base: elastic mixing with a per-row displacement transform.
+
+    Subclasses implement :meth:`robust_coeffs` — given the per-row norms of
+    the local rows and of the mixing displacement, return the (scale, thr)
+    pair the flat-plane apply consumes. Everything else (peer sampling, fault
+    discard, applied-exchange accounting) is shared with the base protocol.
+    """
+
+    def robust_coeffs(self, theta_sq: jax.Array, delta_sq: jax.Array,
+                      row_elems: int) -> tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def stale_scale(self, peers: jax.Array, state: ProtocolState) -> Optional[jax.Array]:
+        """1/(1 + stale_adapt * |steps_i - steps_peer_i|), or None when
+        disabled / no per-worker step counts are tracked (sync engines)."""
+        if self.cfg.stale_adapt <= 0.0 or state.worker_steps is None:
+            return None
+        gap = jnp.abs((state.worker_steps - state.worker_steps[peers])
+                      .astype(jnp.float32))
+        return 1.0 / (1.0 + self.cfg.stale_adapt * gap)
+
+    def comm_update(self, key, active, theta_stack, state, step=None,
+                    transmit=None, wire_bytes=None, wire_faults=None):
+        topo = _topology()
+        W = active.shape[0]
+        peers = self.sample_peers(key, W)
+        mix = self.mix_matrix(peers, active, step=step)
+        lost = wire_faults.lost() if wire_faults is not None else None
+        if lost is not None:
+            mix = topo.discard_lost(mix, lost)
+        if transmit is None:
+            mixed = topo.apply_mix(mix, theta_stack)
+        else:
+            mixed = topo.apply_mix_split(mix, theta_stack, transmit)
+        delta = jax.tree.map(
+            lambda m, t: (m.astype(jnp.float32) - t.astype(jnp.float32)),
+            mixed, theta_stack)
+
+        theta_sq, row_elems = _row_sumsq(theta_stack)
+        delta_sq, _ = _row_sumsq(delta)
+        scale, thr = self.robust_coeffs(theta_sq, delta_sq, row_elems)
+        s = self.stale_scale(peers, state)
+        if s is not None:
+            scale = scale * s
+        theta_new = self._apply_delta(theta_stack, delta, scale, thr)
+
+        rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
+        units, bytes_ = self._accrue_bytes(state, active, theta_stack, wire_bytes,
+                                           lost=lost)
+        state = self._count_wire_faults(state, active, wire_faults)
+        return theta_new, state._replace(comm_rounds=rounds, comm_units=units,
+                                         comm_bytes=bytes_)
+
+    @staticmethod
+    def _apply_delta(theta_stack, delta, scale, thr):
+        from repro.kernels import ops
+
+        def one(t, d):
+            W = t.shape[0]
+            out = ops.robust_flat_apply(t.reshape(W, -1), d.reshape(W, -1),
+                                        scale, thr)
+            return out.reshape(t.shape).astype(t.dtype)
+        return jax.tree.map(one, theta_stack, delta)
+
+    # ---------------------------------------------- pair realization (async)
+    def robust_pair_apply(self, local, recv, coef, gap=None):
+        """Message-mode realization for ONE applied exchange: ``local`` /
+        ``recv`` are single-row ``{bucket: [n]}`` dicts, ``coef`` the pair
+        moving rate, ``gap`` the |step-count| staleness of the wire. Returns
+        the robustified new local row — the same transform the plane path
+        applies, on a [1, n] view."""
+        delta = {k: coef * (recv[k].astype(jnp.float32)
+                            - local[k].astype(jnp.float32)) for k in local}
+        stacked = {k: v[None] for k, v in local.items()}
+        theta_sq, row_elems = _row_sumsq(stacked)
+        delta_sq, _ = _row_sumsq({k: v[None] for k, v in delta.items()})
+        scale, thr = self.robust_coeffs(theta_sq, delta_sq, row_elems)
+        if self.cfg.stale_adapt > 0.0 and gap is not None:
+            scale = scale / (1.0 + self.cfg.stale_adapt
+                             * jnp.abs(jnp.asarray(gap, jnp.float32)))
+        out = self._apply_delta(stacked, {k: v[None] for k, v in delta.items()},
+                                scale, thr)
+        return {k: v[0] for k, v in out.items()}
+
+
+@register_protocol("clipped_gossip")
+class ClippedGossip(RobustGossip):
+    """Norm-clipped elastic gossip: the received displacement is scaled down
+    to at most ``robust_clip`` of the local row norm."""
+
+    def robust_coeffs(self, theta_sq, delta_sq, row_elems):
+        t_norm = jnp.sqrt(theta_sq)
+        d_norm = jnp.sqrt(delta_sq)
+        # d_norm == 0 -> displacement is zero anyway; keep scale = 1
+        scale = jnp.minimum(1.0, self.cfg.robust_clip * t_norm
+                            / jnp.maximum(d_norm, 1e-30))
+        return scale, jnp.full_like(scale, jnp.inf)
+
+
+@register_protocol("trimmed_gossip")
+class TrimmedGossip(RobustGossip):
+    """Coordinate-trimmed elastic gossip: displacement coordinates larger
+    than ``robust_trim * RMS(theta_row)`` are zeroed before applying."""
+
+    def robust_coeffs(self, theta_sq, delta_sq, row_elems):
+        rms = jnp.sqrt(theta_sq / max(row_elems, 1))
+        thr = self.cfg.robust_trim * rms
+        return jnp.ones_like(thr), thr

@@ -110,6 +110,12 @@ class FlatState:
                 "stale_time": self.proto.stale_time,
                 "stale_steps": self.proto.stale_steps,
                 "stale_events": self.proto.stale_events,
+                # fault-plane counters (None — and therefore absent from the
+                # flattened payload — unless a FaultConfig is configured)
+                "wire_dropped": self.proto.wire_dropped,
+                "wire_corrupt": self.proto.wire_corrupt,
+                "exch_timeouts": self.proto.exch_timeouts,
+                "exch_retries": self.proto.exch_retries,
             }),
             "comm": {"residual": getattr(self.comm, "residual", None)},
             "key": self.key,
@@ -127,7 +133,9 @@ class FlatState:
                                 p["comm_units"], p["comm_bytes"],
                                 p.get("clocks"), p.get("worker_steps"),
                                 p.get("stale_time"), p.get("stale_steps"),
-                                p.get("stale_events"))
+                                p.get("stale_events"),
+                                p.get("wire_dropped"), p.get("wire_corrupt"),
+                                p.get("exch_timeouts"), p.get("exch_retries"))
         comm = self.comm
         if comm is not None:
             comm = type(comm)(d["comm"]["residual"])

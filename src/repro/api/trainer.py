@@ -78,6 +78,21 @@ def _as_key(seed) -> jax.Array:
     return seed
 
 
+def _diff_descriptor(name: str, saved: dict, current: dict) -> None:
+    """Raise a field-by-field ValueError when a persisted fleet descriptor
+    (hetero / fault plane) differs from the live trainer's."""
+    diffs = sorted(k for k in set(saved) | set(current)
+                   if saved.get(k) != current.get(k))
+    if diffs:
+        detail = ", ".join(
+            f"{k}: saved={saved.get(k)!r} != current={current.get(k)!r}"
+            for k in diffs)
+        raise ValueError(
+            f"checkpoint was written under a different {name} config — "
+            f"{detail}. Restore with the matching config (the virtual-time "
+            "and fault draws are pure functions of it) or start a fresh run")
+
+
 class GossipTrainer:
     """Protocol-agnostic, engine-agnostic trainer facade.
 
@@ -115,6 +130,7 @@ class GossipTrainer:
                  grad_accum: int = 1, seed: int = 0, fused_update: bool = True,
                  codec: Optional[str] = None,
                  hetero: Optional[HeteroConfig] = None,
+                 faults=None,
                  publish_every: Optional[int] = None,
                  snapshot_bus=None):
         backend_cls = registry.get_engine(engine)   # unknown names raise with
@@ -134,6 +150,11 @@ class GossipTrainer:
         # per-leaf path regardless (capability-flag gated inside the engines).
         self.fused_update = fused_update
         self.hetero = hetero
+        # message-level fault plane (repro.faults): a FaultConfig turns on
+        # hash-seeded drop/corrupt/Byzantine injection at the wire boundary
+        # (sim + async engines) and, with a delay model, the async engine's
+        # pending-wire message mode. None keeps every trace fault-free.
+        self.faults = faults
         # train-while-serve hook (repro.serve): every ``publish_every`` facade
         # steps, :meth:`step` publishes an atomic consensus snapshot of the
         # resident flat buffers onto ``snapshot_bus`` (auto-created when only
@@ -180,7 +201,12 @@ class GossipTrainer:
         if (bus is not None and self.publish_every is not None
                 and self._host_steps % self.publish_every == 0):
             snap = bus.publish_state(state, train_step=self._host_steps)
-            metrics["published_seq"] = snap.seq
+            if snap is not None:
+                metrics["published_seq"] = snap.seq
+            else:
+                # validation refused the snapshot (non-finite / bad manifest):
+                # serving keeps the last good one (repro.faults degradation)
+                metrics["publish_rejected"] = True
         return state, metrics
 
     # ------------------------------------------------------- parity / gossip
@@ -303,7 +329,8 @@ class _SimBackend(_MatchingScheduleMixin):
         self.num_workers = num_workers
         self.mesh_cfg = mesh_cfg
         self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer,
-                              fused_update=facade.fused_update)
+                              fused_update=facade.fused_update,
+                              faults=facade.faults)
         self._pb = None
         self._wire = None
 
@@ -384,6 +411,11 @@ class _DistBackend(_MatchingScheduleMixin):
                 or kw.get("init_fn") is None or kw.get("params_axes") is None):
             raise ValueError('engine="dist" requires mesh, mesh_cfg, init_fn '
                              'and params_axes')
+        if facade.faults is not None:
+            raise ValueError(
+                'engine="dist" does not support fault injection: the fault '
+                'plane rides the single-controller wire boundary (use '
+                'engine="sim" or engine="async")')
         return cls(facade, kw["mesh"], kw["mesh_cfg"], kw.get("model_cfg"),
                    kw["init_fn"], kw["params_axes"], kw.get("global_batch"),
                    kw.get("seq_len"), kw.get("loss_fn"),
@@ -521,7 +553,8 @@ class _AsyncBackend(_SimBackend):
         # backend methods drive (init/step/rank0/aggregate)
         self.sim = AsyncTrainer(loss_fn, num_workers, facade.protocol,
                                 facade.optimizer, hetero=hetero,
-                                fused_update=facade.fused_update)
+                                fused_update=facade.fused_update,
+                                faults=facade.faults)
         self._pb = None
         self._wire = None
 
@@ -538,13 +571,46 @@ class _AsyncBackend(_SimBackend):
 
     def checkpoint_extra(self) -> dict:
         # float64 clocks via JSON round-trip exactly; the device-side f32
-        # proto.clocks are only a fallback for checkpoints missing this
-        return {"hetero_clock": self.sim.clock_state()}
+        # proto.clocks are only a fallback for checkpoints missing this.
+        # The hetero/fault descriptors make a resumed run refuse a DIFFERENT
+        # fleet: replaying a fail_rejoin schedule or fault seed that doesn't
+        # match the saved one silently changes every subsequent draw.
+        extra = {"hetero_clock": self.sim.clock_state(),
+                 "hetero": dataclasses.asdict(self.sim.hetero)}
+        if self.facade.faults is not None:
+            from repro.faults import fault_descriptor
+            extra["faults"] = fault_descriptor(self.facade.faults)
+        return extra
 
     def on_checkpoint_loaded(self, state, meta) -> None:
+        self._validate_fleet(meta)
         hc = (meta or {}).get("hetero_clock")
         if hc:
             self.sim.anchor(hc["clocks"], hc["steps_done"])
         elif state.proto is not None and state.proto.clocks is not None:
             self.sim.anchor(np.asarray(state.proto.clocks, np.float64),
                             np.asarray(state.proto.worker_steps, np.int64))
+
+    def _validate_fleet(self, meta) -> None:
+        """Refuse to restore under a different virtual fleet (S2): the saved
+        ``hetero`` / ``faults`` descriptors must match the current trainer's.
+        Checkpoints written before these keys existed restore unvalidated."""
+        from repro.faults import fault_descriptor
+        meta = meta or {}
+        if "hetero" in meta:
+            _diff_descriptor("hetero", meta["hetero"],
+                             dataclasses.asdict(self.sim.hetero))
+        if "faults" in meta:
+            cur = (fault_descriptor(self.facade.faults)
+                   if self.facade.faults is not None else None)
+            if cur is None:
+                raise ValueError(
+                    "checkpoint was written with a fault plane "
+                    f"({meta['faults']!r}) but this trainer has none — pass "
+                    "the same FaultConfig (faults=...) to resume this run")
+            _diff_descriptor("faults", meta["faults"], cur)
+        elif self.facade.faults is not None:
+            raise ValueError(
+                "checkpoint was written WITHOUT a fault plane but this "
+                "trainer configures one — resuming would inject faults into "
+                "a run that never had them; drop faults= or start fresh")

@@ -36,12 +36,15 @@ SEP = "::"
 
 FLAT_FORMAT = 2       # checkpoint format version written by save_state
 
-# optional FlatState payload keys: the async engine's virtual-time fields are
-# None (hence absent) in checkpoints written by the synchronous engines — a
-# cross-engine restore keeps the template's (zero-initialized) values
+# optional FlatState payload keys: the async engine's virtual-time fields and
+# the fault-plane counters (repro.faults) are None (hence absent) in
+# checkpoints written by engines not using them — a cross-engine restore keeps
+# the template's (zero-initialized) values
 VIRTUAL_TIME_KEYS = tuple(
     f"proto{SEP}{k}" for k in ("clocks", "worker_steps", "stale_time",
-                               "stale_steps", "stale_events"))
+                               "stale_steps", "stale_events",
+                               "wire_dropped", "wire_corrupt",
+                               "exch_timeouts", "exch_retries"))
 
 
 def _path_key(path) -> str:

@@ -279,6 +279,16 @@ class ProtocolConfig:
     #                                  topk selection granularity; LANE-multiple)
     codec_topk_frac: float = 0.05    # topk: fraction of each block transmitted
 
+    # robust mixing (repro.faults / repro.api.robust): knobs for the
+    # clipped_gossip / trimmed_gossip protocols. robust_clip bounds the
+    # received displacement at robust_clip * ||theta_row||; robust_trim zeroes
+    # displacement coordinates larger than robust_trim * RMS(theta_row);
+    # stale_adapt > 0 scales the moving rate by 1/(1 + stale_adapt * gap)
+    # where gap is the observed per-exchange |step_i - step_peer| staleness.
+    robust_clip: float = 0.1
+    robust_trim: float = 6.0
+    stale_adapt: float = 0.0
+
     # NOTE: gated protocols require exactly one of comm_probability /
     # comm_period; that invariant is protocol knowledge, so it is validated by
     # repro.api.protocols.Protocol.__init__ (capability-flag driven) when the
@@ -303,6 +313,43 @@ class HeteroConfig:
     fail_at: float = 0.0             # fail_rejoin: outage start (virtual time)
     rejoin_at: float = 0.0           # fail_rejoin: outage end; <= fail_at -> off
     seed: int = 0                    # hash-seed for per-(worker, step) draws
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Message-level fault plane (repro.faults).
+
+    Selects a registered fault model (what goes wrong with a wire) and a
+    registered delay model (when the wire arrives, async engine only). All
+    stochastic draws are pure hashes of ``(seed, worker, step)`` — the
+    ``codec_seeds`` / ``repro.hetero`` pattern — so a fault trace is
+    bit-reproducible across process restarts and independent of host RNG.
+    """
+    # fault model: none | drop | corrupt | byzantine_scale | byzantine_noise
+    # | any @register_fault_model name
+    fault_model: str = "none"
+    fault_rate: float = 0.0          # drop/corrupt: per-(sender, step) probability
+    fault_frac: float = 0.0          # byzantine_*: fraction of fleet that is
+    #                                  Byzantine (first round(frac*W) workers)
+    scale: float = 100.0             # byzantine_scale: garbage multiplier
+    noise_std: float = 1.0           # byzantine_noise: garbage row std
+    seed: int = 0                    # hash-seed for per-(worker, step) draws
+    # delay model (async engine): none | constant | uniform | lognormal
+    # | any @register_delay_model name. A wire dispatched at virtual time t
+    # arrives at t + delay — staleness decouples from step-count gaps.
+    delay_model: str = "none"
+    delay: float = 0.0               # mean wire latency (virtual seconds)
+    delay_sigma: float = 0.25        # lognormal: log-space std; uniform: the
+    #                                  draw is U(0, 2*delay) (mean-preserving)
+    # deferred rendezvous: the initiator's wire is applied at its partner's
+    # next step boundary (blocking pairwise averaging) instead of at the
+    # first event >= arrival time.
+    rendezvous: bool = False
+    timeout: float = 0.0             # per-exchange timeout (0 = never); a wire
+    #                                  not applied within timeout of dispatch is
+    #                                  cancelled (skip-and-continue)
+    max_retries: int = 0             # timed-out exchanges re-dispatch up to this
+    #                                  many times with doubling backoff
 
 
 @dataclasses.dataclass(frozen=True)

@@ -72,6 +72,15 @@ from repro.optim.optimizers import OptState
 PyTree = Any
 
 
+def _plain_pair(local, recv, coef):
+    """Elastic pairwise realization of one wire: row + coef*(recv - row),
+    per flat bucket, f32 accumulate."""
+    return {b: (local[b].astype(jnp.float32)
+                + coef * (recv[b].astype(jnp.float32)
+                          - local[b].astype(jnp.float32))).astype(local[b].dtype)
+            for b in local}
+
+
 class AsyncTrainer(SimTrainer):
     """Virtual-time asynchronous trainer over W heterogeneous workers.
 
@@ -94,9 +103,9 @@ class AsyncTrainer(SimTrainer):
     def __init__(self, loss_fn: Callable, num_workers: int,
                  protocol: ProtocolConfig, optimizer: OptimizerConfig,
                  hetero: Optional[HeteroConfig] = None,
-                 fused_update: bool = True):
+                 fused_update: bool = True, faults=None):
         super().__init__(loss_fn, num_workers, protocol, optimizer,
-                         fused_update=fused_update)
+                         fused_update=fused_update, faults=faults)
         if not self._impl.barrier_free:
             raise ValueError(
                 f"protocol {protocol.method!r} needs a global step barrier "
@@ -117,19 +126,57 @@ class AsyncTrainer(SimTrainer):
         # sequential stream, like the dist backend's _host_step mirror.
         self.clocks = np.zeros((num_workers,), np.float64)
         self.steps_done = np.zeros((num_workers,), np.int64)
-        self._clock_fn = jax.jit(self._advance_clocks)
+        self._clock_fn = jax.jit(self._advance_clocks,
+                                 static_argnames=("count_stale",))
+        # ---- network-delay plane (repro.faults): message mode --------------
+        # With a non-trivial delay model (or rendezvous / timeout semantics),
+        # exchanges leave the in-window mixing path entirely: each initiation
+        # CAPTURES both rows at dispatch, rides the host pending-wire queue,
+        # and is applied at its virtual arrival time — staleness decouples
+        # from step-count gaps. In-flight wires are lost on restart (like a
+        # real fleet's): the checkpoint path persists no queue.
+        self.delay_model = None
+        self._message_mode = False
+        if faults is not None:
+            from repro.faults import delays_active, resolve_delay_model
+            if delays_active(faults):
+                self.delay_model = resolve_delay_model(faults)
+                self._message_mode = True
+        if self._message_mode:
+            if not self._impl.pairwise:
+                raise ValueError(
+                    f"delay models need pairwise exchanges; protocol "
+                    f"{protocol.method!r} is not pairwise")
+            if self.codec is not None:
+                raise ValueError(
+                    "delay models route exchanges through the host wire "
+                    "queue, which ships raw rows; codecs do not compose "
+                    f"with delay model {faults.delay_model!r} yet")
+        self._pending: list = []
+        self._per_event = 0.0
+        self._draw_fn = jax.jit(self._draws)
 
     # ------------------------------------------------------------- lifecycle
     def init(self, params_stack: PyTree, seed: int = 0) -> FlatState:
         state = super().init(params_stack, seed)
         W = self.num_workers
         self.anchor(np.zeros((W,)), np.zeros((W,), np.int64))
-        return state.replace(proto=state.proto._replace(
+        self._pending = []
+        proto = state.proto._replace(
             clocks=jnp.zeros((W,), jnp.float32),
             worker_steps=jnp.zeros((W,), jnp.int32),
             stale_time=jnp.zeros((), jnp.float32),
             stale_steps=jnp.zeros((), jnp.int32),
-            stale_events=jnp.zeros((), jnp.int32)))
+            stale_events=jnp.zeros((), jnp.int32))
+        if self._message_mode:
+            # seed the retry/timeout counters up front so the state pytree
+            # structure stays stable across steps (no mid-run retrace)
+            proto = proto._replace(exch_timeouts=jnp.zeros((), jnp.int32),
+                                   exch_retries=jnp.zeros((), jnp.int32))
+            per_replica = self._wire_bytes(state.spec)
+            self._per_event = float(
+                self._impl.comm_cost(per_replica, W).bytes_per_event)
+        return state.replace(proto=proto)
 
     def anchor(self, clocks, steps_done) -> None:
         """Re-anchor the host virtual-time mirrors (init / checkpoint load)."""
@@ -154,11 +201,18 @@ class AsyncTrainer(SimTrainer):
         """Process ONE event window: every in-window worker completes a local
         SGD step (consuming its row of the batch) and, gate willing, initiates
         a gossip exchange — one masked fused pass over the resident plane,
-        plus the tiny clock program."""
+        plus the tiny clock program. Under a full-fleet outage (fail_rejoin
+        with ``slow_worker = -1``) the window is EMPTY: clocks advance across
+        the dark interval and no device step program runs."""
+        hold = self.time_model.outage_window(self.steps_done, self.clocks)
+        if hold is not None:
+            return self._outage_step(state, float(hold))
         t, mask, nxt = self.next_window()
         # pre-step PRNG key / step for the clock program's draw re-derivation
         # (copies: the step donates the state's buffers)
         key0, step0 = jnp.array(state.key), jnp.array(state.step)
+        if self._message_mode:
+            return self._message_step(state, x, y, t, mask, nxt, key0, step0)
         if mask.all():
             # full-fleet window: the EXACT synchronous program (bit-parity)
             state, m = self._step_fn(state, x, y)
@@ -176,8 +230,185 @@ class AsyncTrainer(SimTrainer):
                  stale_events=proto.stale_events)
         return state, m
 
+    def _outage_step(self, state: FlatState, t_end: float):
+        """Empty event window: the whole fleet is dark until ``t_end``.
+        Clocks advance (host mirrors + the float32 device view); no step
+        program is dispatched and no worker completes a step."""
+        W = self.num_workers
+        self.clocks = np.full((W,), t_end, np.float64)
+        proto = state.proto._replace(
+            clocks=jnp.asarray(self.clocks, jnp.float32))
+        state = state.replace(proto=proto)
+        m = {"loss_mean": float("nan"), "loss_max": float("nan"),
+             "comm_active": 0, "virtual_time": t_end, "window_size": 0,
+             "stale_time": proto.stale_time, "stale_steps": proto.stale_steps,
+             "stale_events": proto.stale_events}
+        return state, m
+
+    # ------------------------------------------------ message mode (delays)
+    def _message_step(self, state, x, y, t, mask, nxt, key0, step0):
+        """One event window in message mode: deliver every pending wire due
+        at or before ``t`` (timing out / retrying stragglers), run the local
+        step with comm deferred, then dispatch this window's new exchanges
+        into the queue."""
+        state = self._process_queue(state, t, mask)
+        wmask = None if mask.all() else jnp.asarray(mask)
+        state, m = self._step_fn(state, x, y, wmask, defer_comm=True)
+        proto = self._clock_fn(state.proto, key0, step0,
+                               jnp.asarray(nxt, jnp.float32),
+                               jnp.asarray(mask), count_stale=False)
+        state = state.replace(proto=proto)
+        self.clocks = np.where(mask, nxt, self.clocks)
+        self.steps_done = self.steps_done + mask
+        state = self._dispatch(state, key0, step0, t, mask)
+        proto = state.proto
+        m = dict(m, virtual_time=t, window_size=int(mask.sum()),
+                 pending_wires=len(self._pending),
+                 stale_time=proto.stale_time, stale_steps=proto.stale_steps,
+                 stale_events=proto.stale_events,
+                 exch_timeouts=proto.exch_timeouts,
+                 exch_retries=proto.exch_retries)
+        return state, m
+
+    def _draws(self, key0, step0):
+        """Gate/partner draws for the window that consumed ``key0`` — pure
+        functions of the pre-step key, recomputed host-side for the dispatch
+        queue (the deferred step program split but did not use them)."""
+        _, sel_key, gate_key = jax.random.split(key0, 3)
+        gate = protocols.comm_gate(self.protocol, gate_key, step0,
+                                   self.num_workers)
+        peers = self._impl.sample_peers(sel_key, self.num_workers)
+        return gate, peers
+
+    def _dispatch(self, state, key0, step0, t, mask):
+        """Enqueue this window's exchanges: active initiator i captures both
+        its own published row (Byzantine workers garble theirs) and partner
+        k's current row; the wire arrives at ``t + delay``. Dropped and
+        checksum-corrupt wires die HERE — they are counted but never applied,
+        so their bytes never accrue (applied-exchange accounting)."""
+        gate, peers = self._draw_fn(key0, step0)
+        active = np.asarray(gate) & mask
+        if not active.any():
+            return state
+        peers = np.asarray(peers)
+        fm = self.fault_model
+        step_host = int(step0)
+        coef = float(self._impl.alpha_at(step0))
+        drops = corrupts = 0
+        for i in np.nonzero(active)[0]:
+            i = int(i)
+            k = int(peers[i])
+            if k == i:
+                continue
+            if fm is not None and fm.injects_drop and \
+                    bool(fm.drop_mask(i, step_host)):
+                drops += 1
+                continue
+            if fm is not None and fm.injects_corrupt and \
+                    bool(fm.corrupt_mask(i, step_host)):
+                corrupts += 1
+                continue
+            wire_i = {b: state.theta[b][i] for b in state.theta}
+            wire_k = {b: state.theta[b][k] for b in state.theta}
+            if fm is not None and fm.injects_byzantine:
+                wire_i = fm.garble_row(wire_i, i, step_host, self.num_workers)
+                wire_k = fm.garble_row(wire_k, k, step_host, self.num_workers)
+            d = float(self.delay_model.wire_delay(i, step_host, attempt=0))
+            self._pending.append(dict(
+                arrival=t + d, dispatch=t, attempt=0, i=i, k=k,
+                wire_i=wire_i, wire_k=wire_k, step=step_host, coef=coef,
+                gap=int(abs(self.steps_done[i] - self.steps_done[k]))))
+        if drops or corrupts:
+            proto = state.proto
+            upd = {}
+            if drops:
+                upd["wire_dropped"] = proto.wire_dropped + jnp.int32(drops)
+            if corrupts:
+                upd["wire_corrupt"] = proto.wire_corrupt + jnp.int32(corrupts)
+            state = state.replace(proto=proto._replace(**upd))
+        return state
+
+    def _process_queue(self, state, t, mask):
+        """Deliver / time out pending wires at window time ``t``. A wire is
+        deliverable once ``arrival <= t`` — under rendezvous semantics the
+        initiator additionally waits for the partner's next step boundary
+        (``mask[k]``), the blocking pairwise-averaging realization. A wire
+        older than ``timeout * 2**attempt`` (doubling backoff) times out:
+        re-dispatched with a fresh delay draw while retries remain, abandoned
+        after — timed-out exchanges never count their bytes (S1)."""
+        if not self._pending:
+            return state
+        cfg = self.faults
+        theta = dict(state.theta)
+        pair = getattr(self._impl, "robust_pair_apply", None)
+        applied = timeouts = retries = gaps = 0
+        ages = 0.0
+        keep = []
+        for e in self._pending:
+            deliverable = (e["arrival"] <= t
+                           and (not cfg.rendezvous or bool(mask[e["k"]])))
+            if deliverable:
+                theta = self._apply_exchange(theta, e, pair)
+                applied += 1
+                ages += t - e["dispatch"]
+                gaps += e["gap"]
+            elif (cfg.timeout > 0.0
+                    and t > e["dispatch"] + cfg.timeout * (2.0 ** e["attempt"])):
+                timeouts += 1
+                if e["attempt"] < cfg.max_retries:
+                    retries += 1
+                    a = e["attempt"] + 1
+                    d = float(self.delay_model.wire_delay(e["i"], e["step"],
+                                                          attempt=a))
+                    keep.append(dict(e, attempt=a, dispatch=t, arrival=t + d))
+                # else: abandoned — skip-and-continue
+            else:
+                keep.append(e)
+        self._pending = keep
+        if not (applied or timeouts):
+            return state
+        proto = state.proto
+        from repro.api.protocols import _bytes_dtype
+        units = min(int(proto.comm_units) + applied, 2 ** 31 - 1)
+        upd = dict(
+            comm_units=jnp.int32(units),
+            comm_bytes=jnp.asarray(
+                (self._per_event / self.num_workers) * units, _bytes_dtype()),
+            comm_rounds=proto.comm_rounds + jnp.int32(1 if applied else 0),
+            stale_time=proto.stale_time + jnp.float32(ages),
+            stale_steps=proto.stale_steps + jnp.int32(gaps),
+            stale_events=proto.stale_events + jnp.int32(applied))
+        if timeouts:
+            upd["exch_timeouts"] = proto.exch_timeouts + jnp.int32(timeouts)
+        if retries:
+            upd["exch_retries"] = proto.exch_retries + jnp.int32(retries)
+        return state.replace(theta=theta, proto=proto._replace(**upd))
+
+    def _apply_exchange(self, theta, e, pair):
+        """Realize ONE arrived exchange on the resident plane: both rows move
+        toward the row the OTHER side published at dispatch (symmetric
+        pairwise averaging on the captured wires). Robust protocols route
+        through their ``robust_pair_apply`` hook — the same clipping/trimming
+        transform the plane path applies, fed the wire's step-count gap for
+        the staleness-adaptive alpha."""
+        i, k, coef = e["i"], e["k"], e["coef"]
+        local_i = {b: theta[b][i] for b in theta}
+        local_k = {b: theta[b][k] for b in theta}
+        if pair is not None:
+            new_i = pair(local_i, e["wire_k"], coef, gap=e["gap"])
+            new_k = pair(local_k, e["wire_i"], coef, gap=e["gap"])
+        else:
+            new_i = _plain_pair(local_i, e["wire_k"], coef)
+            new_k = _plain_pair(local_k, e["wire_i"], coef)
+        for b in theta:
+            theta[b] = (theta[b]
+                        .at[i].set(new_i[b].astype(theta[b].dtype))
+                        .at[k].set(new_k[b].astype(theta[b].dtype)))
+        return theta
+
     # ------------------------------------------------- traced window pieces
-    def _advance_clocks(self, proto, key0, step0, new_clocks, worker_mask):
+    def _advance_clocks(self, proto, key0, step0, new_clocks, worker_mask,
+                        count_stale: bool = True):
         """Clock program: advance virtual clocks / local step counts for the
         window and accumulate per-exchange staleness. Gate and partner draws
         are re-derived from the PRE-step PRNG key — pure functions of it, so
@@ -189,7 +420,9 @@ class AsyncTrainer(SimTrainer):
         wsteps = proto.worker_steps + worker_mask.astype(jnp.int32)
         stale_time, stale_steps, stale_events = (
             proto.stale_time, proto.stale_steps, proto.stale_events)
-        if self._impl.pairwise:
+        if self._impl.pairwise and count_stale:
+            # message mode passes count_stale=False: per-exchange staleness is
+            # accounted at wire ARRIVAL by the pending queue, not at dispatch
             active = jnp.logical_and(
                 protocols.comm_gate(self.protocol, gate_key, step0,
                                     self.num_workers), worker_mask)

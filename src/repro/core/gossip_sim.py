@@ -51,7 +51,7 @@ class SimTrainer:
 
     def __init__(self, loss_fn: Callable, num_workers: int,
                  protocol: ProtocolConfig, optimizer: OptimizerConfig,
-                 fused_update: bool = True):
+                 fused_update: bool = True, faults=None):
         self.loss_fn = loss_fn
         self.num_workers = num_workers
         self.protocol = protocol
@@ -66,20 +66,41 @@ class SimTrainer:
         # gossip-compression codec (repro.comm): pairwise protocols only
         # (enforced by Protocol.__init__); None when cfg.codec == "none"
         self.codec = comm.active_codec(protocol)
+        # message-level fault plane (repro.faults): hash-seeded drop/corrupt
+        # masks + Byzantine garbling injected at the wire boundary. None (no
+        # FaultConfig) keeps the engine's traces byte-identical to the
+        # fault-free build.
+        self.faults = faults
+        self.fault_model = None
+        if faults is not None:
+            from repro.faults import resolve_fault_model
+            self.fault_model = resolve_fault_model(faults)
         # registered THIRD-PARTY protocols may override comm_update with the
-        # pre-FlatState signature (no wire_bytes kwarg) — detect once and
-        # fall back to the tree-derived accounting for them
+        # pre-FlatState signature (no wire_bytes / wire_faults kwargs) —
+        # detect once and fall back for them
         try:
             import inspect
             sig = inspect.signature(self._impl.comm_update).parameters.values()
             self._pass_wire_bytes = any(
                 p.name == "wire_bytes" or p.kind is inspect.Parameter.VAR_KEYWORD
                 for p in sig)
+            self._pass_wire_faults = any(
+                p.name == "wire_faults" or p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in sig)
         except (TypeError, ValueError):
             self._pass_wire_bytes = False
+            self._pass_wire_faults = False
+        fm = self.fault_model
+        if (fm is not None and (fm.injects_drop or fm.injects_corrupt)
+                and self._impl.pairwise and not self._pass_wire_faults):
+            raise ValueError(
+                f"fault model {fm.name!r} discards wires, but protocol "
+                f"{protocol.method!r} overrides comm_update without a "
+                "wire_faults kwarg — it cannot honor the discard")
         # donate the resident state so the flat buffers update in place
         # instead of doubling HBM residency every step
-        self._step_fn = jax.jit(self._step, donate_argnums=(0,))
+        self._step_fn = jax.jit(self._step, donate_argnums=(0,),
+                                static_argnames=("defer_comm",))
 
     def _wire_bytes(self, spec: flat_plane.FlatSpec) -> float:
         """Exact per-replica wire bytes from the STATIC spec (trace-time
@@ -96,16 +117,22 @@ class SimTrainer:
         ``params_stack`` pytree is not referenced again."""
         spec = flat_plane.FlatSpec.build(params_stack, leading=1)
         theta = spec.flatten(params_stack)
+        proto = self._impl.init_state(theta)
+        if self.fault_model is not None:
+            # seed the fault counters so the state pytree structure is stable
+            # across steps (comm_update _replaces them in place)
+            proto = proto._replace(wire_dropped=jnp.zeros((), jnp.int32),
+                                   wire_corrupt=jnp.zeros((), jnp.int32))
         return FlatState(
             spec=spec,
             theta=theta,
             opt=self.optimizer.init(theta),
-            proto=self._impl.init_state(theta),
+            proto=proto,
             comm=comm.init_comm_state(self.codec, theta),
             key=jax.random.PRNGKey(seed),
             step=jnp.zeros((), jnp.int32))
 
-    def _codec_transmit(self, state: FlatState, active):
+    def _codec_transmit(self, state: FlatState, active, publish=None):
         """decode(encode(theta)) on the resident plane: what peers RECEIVE
         this round, plus the advanced error-feedback residual (already flat
         f32 buffers in ``state.comm``). Seeds derive from (comm round counter,
@@ -114,14 +141,18 @@ class SimTrainer:
         identity mix would ignore the transmit anyway); inside a firing
         round, a stateful codec's residual advances per worker, gated by that
         worker's OWN participation (matching the dist engine) so wire mass a
-        receiver discards is carried forward."""
+        receiver discards is carried forward. ``publish`` (optional) is what
+        workers put on the wire instead of ``state.theta`` — the fault
+        plane's Byzantine garbling hook."""
         codec = self.codec
+        if publish is None:
+            publish = state.theta
 
         def fire():
             seeds = comm.codec_seeds(state.proto.comm_rounds,
                                      jnp.arange(self.num_workers))
             hat, new_res = comm.roundtrip_bufs(
-                codec, state.theta, seeds,
+                codec, publish, seeds,
                 state.comm.residual if codec.stateful else None,
                 gate=jnp.asarray(active).reshape(-1, 1))
             # decode reconstructs in f32; match the storage dtype so both
@@ -136,8 +167,55 @@ class SimTrainer:
 
         return jax.lax.cond(jnp.any(active), fire, skip)
 
+    def _codec_transmit_checked(self, state: FlatState, active, publish,
+                                corrupt_mask):
+        """:meth:`_codec_transmit` through the PACKED uint8 wire with a
+        checksum tail and in-flight corruption (repro.faults): per bucket,
+        encode -> pack -> append checksum -> corrupt -> verify -> decode.
+        Returns (transmit, comm_state', ok bool[W]); rows failing
+        verification are zeroed (they are discarded at the mix, never
+        applied — zeroing keeps NaN bytes out of the einsum)."""
+        from repro.faults import wire as fwire
+        from repro.faults.models import SALT_BYTE
+        codec = self.codec
+        if publish is None:
+            publish = state.theta
+        fseed = self.faults.seed
+
+        def fire():
+            seeds = comm.codec_seeds(state.proto.comm_rounds,
+                                     jnp.arange(self.num_workers))
+            gate = jnp.asarray(active).reshape(-1, 1)
+            res_bufs = state.comm.residual if codec.stateful else {}
+            res_bufs = res_bufs or {}
+            hat, new_res, ok = {}, {}, None
+            for i, k in enumerate(sorted(publish)):
+                b = publish[k]
+                r = res_bufs.get(k)
+                if r is None and codec.stateful:
+                    r = jnp.zeros(b.shape, jnp.float32)
+                wire_arrays, r2 = codec.encode(b, seeds, r)
+                packed = fwire.append_checksum(codec.pack(wire_arrays))
+                packed = fwire.corrupt_wire(packed, corrupt_mask, fseed,
+                                            state.step, SALT_BYTE + i)
+                payload, ok_b = fwire.verify_strip(packed)
+                dec = codec.decode(codec.unpack(payload, b.shape[1]), b.shape[1])
+                dec = jnp.where(ok_b[:, None], dec, jnp.zeros((), dec.dtype))
+                hat[k] = dec.astype(state.theta[k].dtype)
+                ok = ok_b if ok is None else ok & ok_b
+                if codec.stateful:
+                    new_res[k] = r2 if gate is None else jnp.where(gate, r2, r)
+            comm_new = comm.CommState(new_res) if codec.stateful else state.comm
+            return hat, comm_new, ok
+
+        def skip():
+            return state.theta, state.comm, jnp.ones((self.num_workers,), bool)
+
+        return jax.lax.cond(jnp.any(active), fire, skip)
+
     # -- one synchronous step across all workers ---------------------------
-    def _step(self, state: FlatState, x, y, worker_mask=None):
+    def _step(self, state: FlatState, x, y, worker_mask=None,
+              defer_comm: bool = False):
         """One step over the stacked workers. ``worker_mask`` is the
         virtual-time window hook used by the async engine
         (:mod:`repro.core.gossip_async`): ``None`` here (the synchronous
@@ -169,14 +247,70 @@ class SimTrainer:
             # INITIATE an exchange; out-of-window workers still respond
             # passively through the mixing matrix with their last published row
             active = jnp.logical_and(active, worker_mask)
-        transmit, comm_new = (self._codec_transmit(state, active)
-                              if self.codec is not None else (None, state.comm))
+
+        if defer_comm:
+            # async message mode: exchanges live in the host pending-wire
+            # queue (dispatch at this window, apply at arrival) — the step
+            # program keeps its PRNG splits and the pure local update, and
+            # skips the in-program mixing entirely
+            theta_comm, proto_new, comm_new = (state.theta, state.proto,
+                                               state.comm)
+            return self._step_epilogue(state, worker_mask, theta_comm,
+                                       proto_new, comm_new, grads, losses,
+                                       active, key)
+
+        # message-level fault plane (repro.faults), injected at the WIRE
+        # boundary so codecs/kernels are untouched: Byzantine rows garble what
+        # they publish; drop/corrupt draws are pure hashes of
+        # (fault seed, worker, step); discarding happens inside comm_update.
+        fm = self.fault_model
+        publish = corrupt_mask = dropped = detected = None
+        if fm is not None:
+            if fm.injects_byzantine and fm.num_byzantine(self.num_workers) > 0:
+                publish = fm.garble_bufs(state.theta, state.step, self.num_workers)
+            if fm.injects_corrupt:
+                corrupt_mask = fm.corrupt_mask_jnp(state.step, self.num_workers)
+            if fm.injects_drop:
+                dropped = fm.drop_mask_jnp(state.step, self.num_workers)
+
+        if self.codec is not None:
+            if corrupt_mask is not None:
+                transmit, comm_new, ok = self._codec_transmit_checked(
+                    state, active, publish, corrupt_mask)
+                detected = ~ok
+            else:
+                transmit, comm_new = self._codec_transmit(state, active, publish)
+        elif corrupt_mask is not None:
+            # uncompressed wire: bitcast -> checksum -> corrupt -> verify
+            from repro.faults import wire as fwire
+            transmit, ok = fwire.corrupt_roundtrip_bufs(
+                publish if publish is not None else state.theta,
+                corrupt_mask, self.faults.seed, state.step)
+            detected = ~ok
+            comm_new = state.comm
+        elif publish is not None:
+            # Byzantine garbage rides the (uncompressed) transmit path
+            transmit, comm_new = publish, state.comm
+        else:
+            transmit, comm_new = None, state.comm
+
+        wire_faults = None
+        if dropped is not None or detected is not None:
+            from repro.api.protocols import WireFaults
+            wire_faults = WireFaults(dropped=dropped, corrupt=detected)
+
         kw = ({"wire_bytes": self._wire_bytes(spec)} if self._pass_wire_bytes
               else {})
         theta_comm, proto_new = protocols.comm_update(
             cfg, sel_key, active, state.theta, state.proto, step=state.step,
-            transmit=transmit, **kw)
+            transmit=transmit, wire_faults=wire_faults, **kw)
+        return self._step_epilogue(state, worker_mask, theta_comm, proto_new,
+                                   comm_new, grads, losses, active, key)
 
+    def _step_epilogue(self, state, worker_mask, theta_comm, proto_new,
+                       comm_new, grads, losses, active, key):
+        """Optimizer update + metrics — the tail of :meth:`_step`, shared by
+        the normal path and the async message-mode (``defer_comm``) path."""
         if self.fused_update:
             # fused flat-plane path: lines 3, 7 and 9 in ONE pass per dtype
             # bucket, in place (donated buffers alias the kernel outputs).

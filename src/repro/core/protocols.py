@@ -47,14 +47,18 @@ def gradient_transform(cfg: ProtocolConfig, grads_stack: PyTree) -> PyTree:
 
 
 def comm_update(cfg: ProtocolConfig, key, active, theta_stack: PyTree,
-                state: ProtocolState, step=None, transmit=None, wire_bytes=None):
+                state: ProtocolState, step=None, transmit=None, wire_bytes=None,
+                wire_faults=None):
     """Communication-related component on stacked params [W, ...] (a tree or
     a dict of flat-plane buffers); ``transmit`` (optional) is the
     codec-reconstructed tree peers receive, ``wire_bytes`` (optional) the
-    static per-event egress override for the live accounting — only forwarded
-    when set, so registered protocols overriding ``comm_update`` with the
-    pre-FlatState signature keep working."""
+    static per-event egress override for the live accounting,
+    ``wire_faults`` (optional) the fault plane's discard masks — each only
+    forwarded when set, so registered protocols overriding ``comm_update``
+    with an older signature keep working."""
     kw = {} if wire_bytes is None else {"wire_bytes": wire_bytes}
+    if wire_faults is not None:
+        kw["wire_faults"] = wire_faults
     return registry.resolve(cfg).comm_update(key, active, theta_stack, state,
                                              step=step, transmit=transmit, **kw)
 

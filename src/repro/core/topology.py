@@ -125,6 +125,27 @@ def apply_mix_split(mix: jax.Array, theta_stack, transmit_stack):
     return jax.tree.map(one, theta_stack, transmit_stack)
 
 
+def discard_lost(mix: jax.Array, lost: jax.Array) -> jax.Array:
+    """Remove lost senders from a mixing matrix: the off-diagonal weight a
+    receiver had assigned to a lost sender returns to the receiver's own
+    diagonal (it keeps its own row for the undelivered share), so every row
+    still sums to 1 and consensus mass is conserved:
+
+        M'[i,v] = M[i,v] * (1 - lost_v)            (v != i)
+        M'[i,i] = M[i,i] + sum_{v!=i} M[i,v] * lost_v
+
+    With an all-false ``lost`` this is ``M * 1.0 + 0.0`` elementwise —
+    bitwise identity — which is what makes a zero-fault drop configuration
+    reproduce the fault-free engines bit-exactly.
+    """
+    W = mix.shape[0]
+    lost_f = jnp.asarray(lost, mix.dtype)
+    eye = jnp.eye(W, dtype=mix.dtype)
+    off = mix * (1.0 - eye)
+    returned = jnp.sum(off * lost_f[None, :], axis=1)
+    return mix * (1.0 - lost_f[None, :] * (1.0 - eye)) + jnp.diag(returned)
+
+
 # ---------------------------------------------------------------------------
 # Static matching schedules — distributed engine (collective-permute)
 # ---------------------------------------------------------------------------

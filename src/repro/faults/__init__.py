@@ -1,0 +1,33 @@
+"""repro.faults — deterministic message-level fault injection.
+
+Hash-seeded (restart-exact) fault + delay models riding the repro.hetero
+registry pattern, wire checksums for corruption detection, and the robust
+mixing protocols (``clipped_gossip`` / ``trimmed_gossip``, registered in
+:mod:`repro.api.robust`) that survive them.
+"""
+from repro.common.config import FaultConfig
+from repro.faults.models import (DelayModel, FaultModel,
+                                 available_delay_models,
+                                 available_fault_models, bernoulli_jnp,
+                                 bernoulli_np, delays_active, fault_descriptor,
+                                 fault_hash_jnp, get_delay_model,
+                                 get_fault_model, register_delay_model,
+                                 register_fault_model, resolve_delay_model,
+                                 resolve_fault_model, unregister_delay_model,
+                                 unregister_fault_model)
+from repro.faults.wire import (append_checksum, checksum_u8,
+                               corrupt_roundtrip_bufs, corrupt_wire,
+                               verify_strip)
+
+__all__ = [
+    "FaultConfig", "FaultModel", "DelayModel",
+    "register_fault_model", "register_delay_model",
+    "available_fault_models", "available_delay_models",
+    "get_fault_model", "get_delay_model",
+    "unregister_fault_model", "unregister_delay_model",
+    "resolve_fault_model", "resolve_delay_model",
+    "fault_hash_jnp", "bernoulli_np", "bernoulli_jnp",
+    "fault_descriptor", "delays_active",
+    "checksum_u8", "append_checksum", "verify_strip", "corrupt_wire",
+    "corrupt_roundtrip_bufs",
+]

@@ -1,0 +1,416 @@
+"""Message-level fault plane: pluggable fault + delay models.
+
+This module answers two questions for the engines, deterministically:
+
+- **Fault models** (``@register_fault_model``): *what goes wrong with the wire
+  worker w publishes at step k?* ``drop`` loses it outright, ``corrupt`` flips
+  bytes in the packed uint8 wire (detected by the checksum in
+  :mod:`repro.faults.wire` and discarded), ``byzantine_scale`` /
+  ``byzantine_noise`` model adversarial workers that always publish garbage
+  rows.
+- **Delay models** (``@register_delay_model``): *when does a wire dispatched at
+  virtual time t arrive?* Used by the async engine's pending-exchange queue —
+  arrival = dispatch + delay, so staleness decouples from step-count gaps.
+
+**Determinism contract** (the ``codec_seeds`` / ``repro.hetero`` pattern):
+every stochastic draw is a pure hash of ``(FaultConfig.seed, worker, step)``
+— no host RNG stream is consumed, so a fault trace is bit-reproducible across
+process restarts, checkpoint resumes, and unrelated ``np.random`` use. Draws
+needed *inside* a jitted step (the sim engine's wire boundary, where ``step``
+is traced) use :func:`fault_hash_jnp`, a uint32 mirror of
+:func:`repro.hetero.models.hetero_hash` — uint32 multiplication wraps mod
+2**32, which is exactly the masked-uint64 arithmetic of the host version, so
+the two produce identical hashes (asserted in tests/test_faults.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FaultConfig
+from repro.hetero.models import hetero_hash, hetero_normal, hetero_uniform
+
+# Hash salts: one per independent draw family. Retry re-dispatches offset the
+# delay salt by the attempt index so backoff draws are fresh but reproducible.
+SALT_DROP = 101
+SALT_CORRUPT = 202
+SALT_DELAY = 303
+SALT_BYTE = 404
+
+
+# ---------------------------------------------------------------------------
+# in-trace hash mirror (uint32 lanes; == hetero_hash bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def _fmix32_jnp(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
+
+
+def _u32(x: int) -> jnp.ndarray:
+    return jnp.uint32(x & 0xFFFFFFFF)
+
+
+def fault_hash_jnp(seed: int, worker, step, salt: int = 0):
+    """uint32[...] hash of (seed, worker, step, salt), traceable (``worker`` /
+    ``step`` may be traced int arrays). Bit-identical to
+    :func:`repro.hetero.models.hetero_hash`: uint32 ops wrap mod 2**32, which
+    is what the host version's masked uint64 arithmetic computes."""
+    w = jnp.asarray(worker).astype(jnp.uint32)
+    k = jnp.asarray(step).astype(jnp.uint32)
+    h = _u32((seed & 0xFFFFFFFF) + 1) * jnp.uint32(2654435761)
+    h = _fmix32_jnp(h ^ (w * jnp.uint32(0x9E3779B9) + jnp.uint32(0x85EBCA6B)))
+    h = _fmix32_jnp(h ^ (k * jnp.uint32(2246822519)
+                         + _u32(salt) * jnp.uint32(2654435761)))
+    return h
+
+
+def _bernoulli_threshold(rate: float) -> int:
+    """Integer threshold for an exact Bernoulli(rate) over a uint32 hash:
+    fires iff hash < threshold. Exact (no float comparison), so the host and
+    in-trace draws agree bit-for-bit."""
+    if rate <= 0.0:
+        return 0
+    if rate >= 1.0:
+        return 1 << 32
+    return int(round(rate * float(1 << 32)))
+
+
+def bernoulli_np(seed: int, worker, step, rate: float, salt: int) -> np.ndarray:
+    thr = _bernoulli_threshold(rate)
+    h = hetero_hash(seed, worker, step, salt)
+    if thr >= (1 << 32):
+        return np.ones(h.shape, bool)
+    return (h < np.uint64(thr)).astype(bool)
+
+
+def bernoulli_jnp(seed: int, worker, step, rate: float, salt: int):
+    thr = _bernoulli_threshold(rate)
+    h = fault_hash_jnp(seed, worker, step, salt)
+    if thr >= (1 << 32):
+        return jnp.ones(h.shape, bool)
+    return h < jnp.uint32(thr)
+
+
+# ---------------------------------------------------------------------------
+# registries (mirror repro.hetero.register_time_model)
+# ---------------------------------------------------------------------------
+
+_FAULTS: Dict[str, type] = {}
+_DELAYS: Dict[str, type] = {}
+
+
+def register_fault_model(name: str) -> Callable[[type], type]:
+    """Class decorator: register a FaultModel subclass under ``name``."""
+    def deco(cls: type) -> type:
+        if name in _FAULTS and _FAULTS[name] is not cls:
+            raise ValueError(f"fault model {name!r} already registered "
+                             f"({_FAULTS[name].__qualname__})")
+        cls.name = name
+        _FAULTS[name] = cls
+        return cls
+    return deco
+
+
+def register_delay_model(name: str) -> Callable[[type], type]:
+    """Class decorator: register a DelayModel subclass under ``name``."""
+    def deco(cls: type) -> type:
+        if name in _DELAYS and _DELAYS[name] is not cls:
+            raise ValueError(f"delay model {name!r} already registered "
+                             f"({_DELAYS[name].__qualname__})")
+        cls.name = name
+        _DELAYS[name] = cls
+        return cls
+    return deco
+
+
+def available_fault_models() -> Tuple[str, ...]:
+    return tuple(sorted(_FAULTS))
+
+
+def available_delay_models() -> Tuple[str, ...]:
+    return tuple(sorted(_DELAYS))
+
+
+def get_fault_model(name: str) -> type:
+    try:
+        return _FAULTS[name]
+    except KeyError:
+        raise ValueError(f"unknown fault model {name!r}; "
+                         f"registered: {sorted(_FAULTS)}") from None
+
+
+def get_delay_model(name: str) -> type:
+    try:
+        return _DELAYS[name]
+    except KeyError:
+        raise ValueError(f"unknown delay model {name!r}; "
+                         f"registered: {sorted(_DELAYS)}") from None
+
+
+def unregister_fault_model(name: str) -> None:
+    _FAULTS.pop(name, None)
+
+
+def unregister_delay_model(name: str) -> None:
+    _DELAYS.pop(name, None)
+
+
+def resolve_fault_model(cfg: FaultConfig) -> "FaultModel":
+    return get_fault_model(cfg.fault_model)(cfg)
+
+
+def resolve_delay_model(cfg: FaultConfig) -> "DelayModel":
+    return get_delay_model(cfg.delay_model)(cfg)
+
+
+# ---------------------------------------------------------------------------
+# fault models
+# ---------------------------------------------------------------------------
+
+class FaultModel:
+    """Base class: what goes wrong with the wire worker ``w`` publishes at
+    step ``k``. Instances are immutable views over a frozen
+    :class:`FaultConfig`; all draws are pure in (cfg.seed, worker, step).
+
+    Capability flags are trace-time constants the engines branch on, so a
+    model that injects nothing leaves the step jaxpr untouched.
+    """
+
+    name = ""            # set by @register_fault_model
+    injects_drop = False      # drop_mask can be non-False
+    injects_corrupt = False   # corrupt_mask can be non-False (wire checksum path)
+    injects_byzantine = False  # garble_bufs can rewrite rows
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+
+    # -- host-side draws (async engine event loop) --------------------------
+    def drop_mask(self, worker, step) -> np.ndarray:
+        """bool[...]: is the wire (sender ``worker``, step ``step``) lost?"""
+        return np.zeros(np.broadcast(np.asarray(worker), np.asarray(step)).shape, bool)
+
+    def corrupt_mask(self, worker, step) -> np.ndarray:
+        """bool[...]: is the wire corrupted in flight? (detected by checksum)"""
+        return np.zeros(np.broadcast(np.asarray(worker), np.asarray(step)).shape, bool)
+
+    # -- in-trace draws (sim engine wire boundary; ``step`` traced) ----------
+    def drop_mask_jnp(self, step, num_workers: int):
+        return jnp.zeros((num_workers,), bool)
+
+    def corrupt_mask_jnp(self, step, num_workers: int):
+        return jnp.zeros((num_workers,), bool)
+
+    # -- Byzantine workers ---------------------------------------------------
+    def num_byzantine(self, num_workers: int) -> int:
+        return 0
+
+    def byzantine_mask(self, num_workers: int) -> np.ndarray:
+        """bool[W]: which workers always publish garbage (deterministic: the
+        first ``round(fault_frac * W)`` workers, fixed for the run)."""
+        return np.arange(num_workers) < self.num_byzantine(num_workers)
+
+    def garble_bufs(self, bufs, step, num_workers: int):
+        """Rewrite Byzantine rows of the per-bucket transmit dict (traceable).
+        Identity unless ``injects_byzantine``."""
+        return bufs
+
+    def garble_row(self, row_bufs, worker: int, step, num_workers: int):
+        """What worker ``worker`` actually publishes for ONE captured wire
+        (``{bucket: [n]}`` single-row dict) — the async message path's per-wire
+        realization of :meth:`garble_bufs`. Default identity; Byzantine models
+        produce the SAME garbage row the plane path would."""
+        return row_bufs
+
+
+@register_fault_model("none")
+class NoFault(FaultModel):
+    """Null model: nothing goes wrong. The engines still run the fault wiring
+    when a FaultConfig is supplied, which is how the zero-fault bit-exactness
+    contract is exercised."""
+
+
+@register_fault_model("drop")
+class DropFault(FaultModel):
+    """Each wire is lost i.i.d. with probability ``fault_rate`` per
+    (sender, step). The receiver keeps its own row for the lost share (the
+    mixing matrix's off-diagonal weight returns to the diagonal), so row sums
+    — and therefore consensus mass — are preserved."""
+
+    injects_drop = True
+
+    def drop_mask(self, worker, step):
+        return bernoulli_np(self.cfg.seed, worker, step, self.cfg.fault_rate,
+                            SALT_DROP)
+
+    def drop_mask_jnp(self, step, num_workers):
+        return bernoulli_jnp(self.cfg.seed, jnp.arange(num_workers), step,
+                             self.cfg.fault_rate, SALT_DROP)
+
+
+@register_fault_model("corrupt")
+class CorruptFault(FaultModel):
+    """Each wire has bytes flipped in flight i.i.d. with probability
+    ``fault_rate`` per (sender, step). Corruption is injected on the packed
+    uint8 wire and *detected* by the appended checksum
+    (:mod:`repro.faults.wire`); a detected wire is discarded like a drop,
+    never applied."""
+
+    injects_corrupt = True
+
+    def corrupt_mask(self, worker, step):
+        return bernoulli_np(self.cfg.seed, worker, step, self.cfg.fault_rate,
+                            SALT_CORRUPT)
+
+    def corrupt_mask_jnp(self, step, num_workers):
+        return bernoulli_jnp(self.cfg.seed, jnp.arange(num_workers), step,
+                             self.cfg.fault_rate, SALT_CORRUPT)
+
+
+class _Byzantine(FaultModel):
+    injects_byzantine = True
+
+    def num_byzantine(self, num_workers):
+        return int(round(self.cfg.fault_frac * num_workers))
+
+
+@register_fault_model("byzantine_scale")
+class ByzantineScale(_Byzantine):
+    """The first ``round(fault_frac * W)`` workers publish their row scaled by
+    ``cfg.scale`` — a large-magnitude adversary that plain averaging absorbs
+    straight into every neighbour."""
+
+    def garble_bufs(self, bufs, step, num_workers):
+        k = self.num_byzantine(num_workers)
+        if k == 0:
+            return bufs
+        byz = jnp.arange(num_workers) < k
+        out = {}
+        for name, buf in bufs.items():
+            s = jnp.where(byz[:, None], jnp.asarray(self.cfg.scale, buf.dtype),
+                          jnp.ones((), buf.dtype))
+            out[name] = buf * s
+        return out
+
+    def garble_row(self, row_bufs, worker, step, num_workers):
+        if worker >= self.num_byzantine(num_workers):
+            return row_bufs
+        return {k: v * jnp.asarray(self.cfg.scale, v.dtype)
+                for k, v in row_bufs.items()}
+
+
+@register_fault_model("byzantine_noise")
+class ByzantineNoise(_Byzantine):
+    """The first ``round(fault_frac * W)`` workers publish pure noise rows
+    (std ``noise_std``) instead of parameters. Noise is drawn from
+    ``fold_in(PRNGKey(seed), step)`` — pure in (seed, step, worker), so the
+    garbage itself is restart-exact."""
+
+    def garble_bufs(self, bufs, step, num_workers):
+        k = self.num_byzantine(num_workers)
+        if k == 0:
+            return bufs
+        byz = jnp.arange(num_workers) < k
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 jnp.asarray(step, jnp.uint32))
+        out = {}
+        for i, (name, buf) in enumerate(sorted(bufs.items())):
+            noise = self.cfg.noise_std * jax.random.normal(
+                jax.random.fold_in(key, i), buf.shape, jnp.float32)
+            out[name] = jnp.where(byz[:, None], noise.astype(buf.dtype), buf)
+        return out
+
+    def garble_row(self, row_bufs, worker, step, num_workers):
+        if worker >= self.num_byzantine(num_workers):
+            return row_bufs
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 jnp.asarray(step, jnp.uint32))
+        out = {}
+        for i, (name, buf) in enumerate(sorted(row_bufs.items())):
+            # the (num_workers, n)-shaped draw keeps this row's noise equal to
+            # the plane path's garble_bufs row for the same (seed, step)
+            noise = self.cfg.noise_std * jax.random.normal(
+                jax.random.fold_in(key, i),
+                (num_workers,) + buf.shape, jnp.float32)
+            out[name] = noise[worker].astype(buf.dtype)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# delay models (async engine)
+# ---------------------------------------------------------------------------
+
+class DelayModel:
+    """Base class: wire latency. ``wire_delay(worker, step, attempt)`` is the
+    virtual-seconds delay of the wire worker ``worker`` dispatches at its
+    ``step``-th local step; retries salt the draw with the attempt index so
+    each re-dispatch sees a fresh (but reproducible) latency."""
+
+    name = ""            # set by @register_delay_model
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+
+    def wire_delay(self, worker, step, attempt: int = 0) -> np.ndarray:
+        raise NotImplementedError
+
+
+@register_delay_model("none")
+class NoDelay(DelayModel):
+    """Wires arrive instantly — the async engine keeps its in-window exchange
+    path and the delay plane stays out of the trace entirely."""
+
+    def wire_delay(self, worker, step, attempt=0):
+        return np.zeros(np.broadcast(np.asarray(worker), np.asarray(step)).shape)
+
+
+@register_delay_model("constant")
+class ConstantDelay(DelayModel):
+    def wire_delay(self, worker, step, attempt=0):
+        return np.full(np.broadcast(np.asarray(worker), np.asarray(step)).shape,
+                       self.cfg.delay, np.float64)
+
+
+@register_delay_model("uniform")
+class UniformDelay(DelayModel):
+    """delay ~ U(0, 2 * cfg.delay): mean-preserving jitter."""
+
+    def wire_delay(self, worker, step, attempt=0):
+        u = hetero_uniform(self.cfg.seed, worker, step, SALT_DELAY + attempt)
+        return 2.0 * self.cfg.delay * u
+
+
+@register_delay_model("lognormal")
+class LognormalDelay(DelayModel):
+    """delay ~ cfg.delay * LogNormal(-sigma^2/2, sigma): the heavy-tailed
+    network-latency distribution, mean-preserving like the hetero lognormal
+    compute model."""
+
+    def wire_delay(self, worker, step, attempt=0):
+        z = hetero_normal(self.cfg.seed, worker, step, SALT_DELAY + attempt)
+        s = self.cfg.delay_sigma
+        return self.cfg.delay * np.exp(s * z - 0.5 * s * s)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def fault_descriptor(cfg: FaultConfig) -> dict:
+    """JSON-able descriptor of the fault plane — persisted in checkpoint meta
+    and validated on restore (resuming under a different fault plane is a
+    different fleet; see repro.api.trainer)."""
+    import dataclasses
+    return dataclasses.asdict(cfg)
+
+
+def delays_active(cfg: FaultConfig) -> bool:
+    """Does this config route exchanges through the async pending-wire queue
+    (message mode) instead of the in-window path?"""
+    return cfg.delay_model != "none" or cfg.rendezvous or cfg.timeout > 0.0

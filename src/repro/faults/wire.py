@@ -1,0 +1,82 @@
+"""Wire-level integrity: checksums + in-flight corruption.
+
+The corrupt fault model flips bytes on the packed uint8 wire (the same
+``[W, L]`` buffer the dist engine ppermutes, with the gate tail); detection is
+a per-bucket uint32 checksum appended to each row. Everything here is
+traceable jnp — the sim engine runs it inside the jitted step.
+
+Checksum: position-weighted byte sum, ``sum_j (2j+1) * byte_j  (mod 2**32)``.
+The weights are odd, hence invertible mod 2**32, so *any* single-byte change
+is always detected (a change ``d`` at position ``j`` shifts the sum by
+``d * (2j+1) != 0 mod 2**32``); multi-byte collisions are ~2**-32 and the
+fault models flip exactly one byte per bucket. Cheap (one multiply-add pass),
+deterministic, and dtype-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codecs import _from_u8, _u8
+from repro.faults.models import SALT_BYTE, fault_hash_jnp
+
+CHECKSUM_BYTES = 4
+
+
+def checksum_u8(wire: jax.Array) -> jax.Array:
+    """uint32[W] checksum of a packed uint8 [W, L] wire (odd position
+    weights; see module docstring)."""
+    L = wire.shape[-1]
+    weights = (2 * jnp.arange(L, dtype=jnp.uint32) + 1)
+    return jnp.sum(wire.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+def append_checksum(wire: jax.Array) -> jax.Array:
+    """[W, L] uint8 -> [W, L+4] uint8 with the row checksum in the tail
+    (riding behind the codec payload exactly like the dist gate tail)."""
+    return jnp.concatenate([wire, _u8(checksum_u8(wire)[:, None])], axis=-1)
+
+
+def verify_strip(wire_ext: jax.Array):
+    """Inverse of :func:`append_checksum`: -> (wire [W, L], ok bool[W])."""
+    wire = wire_ext[:, :-CHECKSUM_BYTES]
+    got = _from_u8(wire_ext[:, -CHECKSUM_BYTES:], jnp.uint32)[:, 0]
+    return wire, checksum_u8(wire) == got
+
+
+def corrupt_wire(wire_ext: jax.Array, mask, seed: int, step, salt: int = SALT_BYTE):
+    """Flip ONE hash-chosen byte (position and xor-value pure in
+    (seed, worker, step, salt)) in each row where ``mask`` — the in-flight
+    corruption the checksum must catch. With an all-false mask the xor plane
+    is all zeros, so the wire is returned bit-identical."""
+    W, L = wire_ext.shape
+    h = fault_hash_jnp(seed, jnp.arange(W), step, salt)
+    pos = (h % jnp.uint32(L)).astype(jnp.int32)
+    flip = ((h >> jnp.uint32(8)) % jnp.uint32(255) + jnp.uint32(1)).astype(jnp.uint8)
+    plane = (jax.nn.one_hot(pos, L, dtype=jnp.uint8) * flip[:, None]
+             * jnp.asarray(mask, jnp.uint8)[:, None])
+    return wire_ext ^ plane
+
+
+def corrupt_roundtrip_buf(buf: jax.Array, mask, seed: int, step, salt: int):
+    """Uncompressed-wire corruption round trip for one [W, n] flat bucket:
+    bitcast -> checksum -> corrupt -> verify. Returns (reconstruction, ok);
+    rows that fail verification are zeroed (NEVER applied — the mixing step
+    discards them, and zeroing keeps flipped-to-NaN bytes from propagating
+    through the mix einsum as NaN * 0)."""
+    wire = corrupt_wire(append_checksum(_u8(buf)), mask, seed, step, salt)
+    payload, ok = verify_strip(wire)
+    out = _from_u8(payload, buf.dtype).reshape(buf.shape)
+    return jnp.where(ok[:, None], out, jnp.zeros((), buf.dtype)), ok
+
+
+def corrupt_roundtrip_bufs(bufs, mask, seed: int, step):
+    """Per-bucket corruption round trip over a transmit dict. Returns
+    (bufs', ok bool[W]) with ok = every bucket verified for that row."""
+    out = {}
+    ok = None
+    for i, name in enumerate(sorted(bufs)):
+        out[name], ok_b = corrupt_roundtrip_buf(bufs[name], mask, seed, step,
+                                                SALT_BYTE + i)
+        ok = ok_b if ok is None else (ok & ok_b)
+    return out, ok

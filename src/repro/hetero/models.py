@@ -148,6 +148,13 @@ class ComputeTimeModel:
         return (np.asarray(clocks, np.float64)
                 + self.step_duration(w, np.asarray(steps_done)))
 
+    def outage_window(self, steps_done: np.ndarray, clocks: np.ndarray):
+        """Virtual time the fleet comes back when NO worker can complete a
+        step from the current clocks (a full-fleet outage), else ``None``.
+        The async engine uses this to advance the clocks across the dark
+        window without dispatching a device program."""
+        return None
+
 
 @register_time_model("constant")
 class ConstantTime(ComputeTimeModel):
@@ -189,11 +196,19 @@ class FailRejoinTime(ComputeTimeModel):
     """Availability fault: worker ``slow_worker`` is offline during virtual
     ``[fail_at, rejoin_at)``. A step whose compute window overlaps the outage
     is lost and re-runs from ``rejoin_at`` (the worker rejoins with the
-    parameters it last published — the gossip protocol re-absorbs it)."""
+    parameters it last published — the gossip protocol re-absorbs it).
+    ``slow_worker = -1`` fails the WHOLE fleet: every worker is dark during
+    the window, which the async engine surfaces as an empty event window
+    (clocks advance, no device program runs)."""
 
     def step_duration(self, worker, step):
         return np.full(np.broadcast(worker, step).shape, self.cfg.mean_step_time,
                        np.float64)
+
+    def _affected(self, w: np.ndarray) -> np.ndarray:
+        if self.cfg.slow_worker < 0:
+            return np.ones(w.shape, bool)
+        return w == self.cfg.slow_worker
 
     def next_completion(self, steps_done, clocks):
         cfg = self.cfg
@@ -203,5 +218,17 @@ class FailRejoinTime(ComputeTimeModel):
             return t
         w = np.arange(len(t))
         dur = self.step_duration(w, np.asarray(steps_done))
-        lost = (w == cfg.slow_worker) & (t >= cfg.fail_at) & (start < cfg.rejoin_at)
+        lost = self._affected(w) & (t >= cfg.fail_at) & (start < cfg.rejoin_at)
         return np.where(lost, cfg.rejoin_at + dur, t)
+
+    def outage_window(self, steps_done, clocks):
+        cfg = self.cfg
+        if cfg.slow_worker >= 0 or cfg.rejoin_at <= cfg.fail_at:
+            return None
+        start = np.asarray(clocks, np.float64)
+        nat = ComputeTimeModel.next_completion(self, steps_done, clocks)
+        # full-fleet outage: nobody can complete before the window and nobody
+        # has crossed it yet -> one empty event advances clocks to rejoin_at
+        if np.all(nat >= cfg.fail_at) and np.all(start < cfg.rejoin_at):
+            return float(cfg.rejoin_at)
+        return None

@@ -18,6 +18,7 @@ from repro.kernels import codec as _codec
 from repro.kernels import fused_update as _fu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref
+from repro.kernels import robust as _rb
 
 PyTree = Any
 
@@ -68,6 +69,30 @@ def fused_flat_nag_update(theta, v, g, eta, mu, *,
     return _fu.fused_flat_nag_update(
         theta, v, g, eta, mu,
         interpret=(not on_tpu()) if interpret is None else interpret)
+
+
+def robust_flat_apply(theta, delta, scale, thr, *,
+                      use_kernel: Optional[bool] = None,
+                      interpret: Optional[bool] = None):
+    """[W, N] robust displacement apply: theta + scale * trim(delta, thr) —
+    the robust-gossip protocols' one pass over the flat plane."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if not use_kernel:
+        return ref.robust_flat_apply(theta, delta, scale, thr)
+    return _rb.robust_flat_apply(
+        theta, delta, scale, thr,
+        interpret=(not on_tpu()) if interpret is None else interpret)
+
+
+def robust_bufs_apply(theta_bufs, delta_bufs, scale, thr, *,
+                      use_kernel: Optional[bool] = None,
+                      interpret: Optional[bool] = None):
+    """Per-dtype-bucket dispatch of :func:`robust_flat_apply` over flat-buffer
+    dicts (the robust protocols' comm hot path)."""
+    return {k: robust_flat_apply(theta_bufs[k], delta_bufs[k], scale, thr,
+                                 use_kernel=use_kernel, interpret=interpret)
+            for k in theta_bufs}
 
 
 def fused_bufs_elastic_nag(theta_bufs, peer_bufs, v_bufs, g_bufs, coef, eta, mu,

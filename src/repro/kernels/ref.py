@@ -48,6 +48,18 @@ def fused_flat_nag_update(theta, v, g, eta, mu):
     return theta_new.astype(theta.dtype), v_new.astype(v.dtype)
 
 
+def robust_flat_apply(theta, delta, scale, thr):
+    """Robust-gossip displacement apply oracle (Pallas kernel in robust.py):
+    theta + scale * delta, with delta coordinates above the per-row trim
+    threshold zeroed (thr = +inf disables trimming)."""
+    W = theta.shape[0]
+    s, t = _per_replica(scale, W), _per_replica(thr, W)
+    df = delta.astype(jnp.float32)
+    keep = (jnp.abs(df) <= t).astype(jnp.float32)
+    out = theta.astype(jnp.float32) + s * (df * keep)
+    return out.astype(theta.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Gossip-compression codec oracles (repro.comm; Pallas kernels in codec.py)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: robust gossip displacement apply.
+
+The robust mixing protocols (repro.api.robust: ``clipped_gossip`` /
+``trimmed_gossip``) reduce to ONE elementwise pass over the flat ``[W, N]``
+plane once the per-row statistics (norm-clip scale, trim threshold,
+staleness-adaptive rate) are known:
+
+    theta'[w, :] = theta[w, :] + scale[w] * delta[w, :] * (|delta[w, :]| <= thr[w])
+
+where ``delta`` is the mixing displacement (mixed - local), ``scale`` folds
+the norm-clip factor and the staleness-adaptive rate, and ``thr`` is the
+coordinate-trim threshold (+inf disables trimming). The per-row reductions
+that produce scale/thr are O(W) scalars off a single norm pass, so this apply
+is the bandwidth-bound part — 3 streams, read theta/delta once, write theta'
+once. Tiling/aliasing follows :mod:`repro.kernels.fused_update`: when tiles
+cover N exactly the theta input aliases the output (in-place on the resident
+buffers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_update import BLOCK, _pad_blocks, _scalar_rows, _tile
+
+
+def _robust_kernel(theta_ref, delta_ref, sc_ref, out_ref):
+    t = theta_ref[...].astype(jnp.float32)
+    d = delta_ref[...].astype(jnp.float32)
+    scale, thr = sc_ref[0, 0], sc_ref[0, 1]
+    keep = (jnp.abs(d) <= thr).astype(jnp.float32)
+    out_ref[...] = (t + scale * (d * keep)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def robust_flat_apply(theta, delta, scale, thr, *, block: int = BLOCK,
+                      interpret: bool = False):
+    """theta/delta: [W, N] flat buffers; scale/thr: scalar or [W] per-replica
+    (traced OK — they ride in a VMEM scalar row). Returns theta' [W, N], with
+    theta aliased into the output (in-place) when the tiling covers N exactly.
+    """
+    W, n = theta.shape
+    block, nblocks, padded = _tile(n, block)
+    tf = _pad_blocks(theta, n, nblocks, block)
+    df = _pad_blocks(delta, n, nblocks, block)
+    sc = _scalar_rows(W, scale, thr)
+
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    sc_spec = pl.BlockSpec((1, 2), lambda i, j: (i, 0))
+    out = pl.pallas_call(
+        _robust_kernel,
+        grid=(W, nblocks),
+        in_specs=[spec, spec, sc_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((W, nblocks * block), theta.dtype),
+        input_output_aliases={} if padded else {0: 0},
+        interpret=interpret,
+    )(tf, df, sc)
+    return out[:, :n]

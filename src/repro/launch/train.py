@@ -37,8 +37,9 @@ import numpy as np
 
 from repro.api import GossipTrainer, available_engines, available_protocols
 from repro.comm import available_codecs
-from repro.common.config import (HeteroConfig, MeshConfig, OptimizerConfig,
-                                 ProtocolConfig)
+from repro.common.config import (FaultConfig, HeteroConfig, MeshConfig,
+                                 OptimizerConfig, ProtocolConfig)
+from repro.faults import available_delay_models, available_fault_models
 from repro.hetero import available_time_models
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.consensus import divergence_metrics
@@ -79,18 +80,34 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         production_mesh: bool = False, multi_pod: bool = False,
         codec: str = "none", engine: str = "dist",
         time_model: str = "constant", mean_step_time: float = 1.0,
-        sigma: float = 0.25, slow_worker: int = 0, slow_factor: float = 4.0):
+        sigma: float = 0.25, slow_worker: int = 0, slow_factor: float = 4.0,
+        fault_model: str = "none", fault_rate: float = 0.0,
+        fault_frac: float = 0.0, delay_model: str = "none",
+        delay: float = 0.0, timeout: float = 0.0):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
                            comm_period=tau, codec=codec)
     opt = OptimizerConfig(name="nag", learning_rate=lr, momentum=0.9)
+    # fault plane (repro.faults): only construct a FaultConfig when something
+    # is actually enabled, so the default path keeps the exact no-faults
+    # engine behaviour (bit-for-bit — tests/test_faults.py)
+    faults = None
+    if fault_model != "none" or delay_model != "none" or timeout > 0:
+        faults = FaultConfig(fault_model=fault_model, fault_rate=fault_rate,
+                             fault_frac=fault_frac, delay_model=delay_model,
+                             delay=delay, timeout=timeout, seed=seed)
 
     def init_fn(key):
         params, _ = tr.init_lm(key, cfg)
         return params
 
     if engine == "dist":
+        if faults is not None:
+            raise ValueError(
+                'engine="dist" does not support fault injection; use '
+                '--engine sim or --engine async for --fault-model/'
+                '--delay-model runs')
         if production_mesh:
             mesh_cfg = MeshConfig(data=16, model=16, pods=2 if multi_pod else 1,
                                   workers_per_pod=workers)
@@ -121,7 +138,7 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         trainer = GossipTrainer(
             engine=engine, protocol=proto, optimizer=opt, loss_fn=loss_fn,
             num_workers=num_workers, init_fn=init_fn, seed=seed,
-            hetero=hetero if engine == "async" else None)
+            hetero=hetero if engine == "async" else None, faults=faults)
         as_batch = lambda b: (b["tokens"], b["labels"])
     state = trainer.init_state(seed)
     batches = lm_batches(cfg, num_workers, global_batch // num_workers,
@@ -171,6 +188,25 @@ def main() -> None:
                     help="lognormal straggler log-space std")
     ap.add_argument("--slow-worker", type=int, default=0)
     ap.add_argument("--slow-factor", type=float, default=4.0)
+    # fault-injection plane (repro.faults) — unknown names fail at parse time
+    # with the registered list, same contract as --method/--codec
+    ap.add_argument("--fault-model", default="none",
+                    choices=available_fault_models(),
+                    help="message-level fault model on the gossip wire "
+                         "(repro.faults registry)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-(worker,step) drop/corrupt probability")
+    ap.add_argument("--fault-frac", type=float, default=0.0,
+                    help="fraction of Byzantine workers (byzantine_* models)")
+    ap.add_argument("--delay-model", default="none",
+                    choices=available_delay_models(),
+                    help='network-delay model for --engine async '
+                         '(repro.faults registry)')
+    ap.add_argument("--delay", type=float, default=0.0,
+                    help="delay-model scale (mean / constant, virtual time)")
+    ap.add_argument("--timeout", type=float, default=0.0,
+                    help="per-exchange timeout before skip-and-retry "
+                         "(0 = wait forever)")
     ap.add_argument("--p", type=float, default=0.25)
     ap.add_argument("--tau", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=0.5)
@@ -188,7 +224,10 @@ def main() -> None:
         production_mesh=a.production_mesh, multi_pod=a.multi_pod, codec=a.codec,
         engine=a.engine, time_model=a.time_model,
         mean_step_time=a.mean_step_time, sigma=a.sigma,
-        slow_worker=a.slow_worker, slow_factor=a.slow_factor)
+        slow_worker=a.slow_worker, slow_factor=a.slow_factor,
+        fault_model=a.fault_model, fault_rate=a.fault_rate,
+        fault_frac=a.fault_frac, delay_model=a.delay_model,
+        delay=a.delay, timeout=a.timeout)
 
 
 if __name__ == "__main__":

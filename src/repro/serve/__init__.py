@@ -12,8 +12,8 @@ snapshot staleness — the claims in benchmarks/serve_live.py.
 """
 from repro.serve.live import LiveServer
 from repro.serve.loop import TrainServeLoop
-from repro.serve.snapshot import Snapshot, SnapshotBus
+from repro.serve.snapshot import Snapshot, SnapshotBus, snapshot_valid
 from repro.serve.traffic import ContinuousBatcher, Request, TrafficGen
 
-__all__ = ["Snapshot", "SnapshotBus", "LiveServer", "TrainServeLoop",
-           "ContinuousBatcher", "Request", "TrafficGen"]
+__all__ = ["Snapshot", "SnapshotBus", "snapshot_valid", "LiveServer",
+           "TrainServeLoop", "ContinuousBatcher", "Request", "TrafficGen"]

@@ -41,6 +41,8 @@ class LiveServer:
         self.seq: int = 0            # bus seq of the weights being served
         self.train_step: int = -1    # train-step provenance (-1: initial params)
         self.swap_pauses: List[float] = []   # host seconds per completed swap
+        self.rejected_swaps: int = 0  # snapshots refused by re-validation
+        self._bad_seq: int = 0       # last refused seq (skip re-checking it)
         self._place = None           # (FlatSpec, jitted bufs -> placed params)
 
     # ------------------------------------------------------------------- swap
@@ -72,7 +74,21 @@ class LiveServer:
         contract: tokens before a swap boundary are bit-identical whether or
         not the swap happens)."""
         snap = self.bus.latest()
-        if snap is None or snap.seq <= self.seq:
+        if snap is None or snap.seq <= self.seq or snap.seq == self._bad_seq:
+            return False
+        # defensive re-validation (repro.faults graceful degradation): the
+        # bus already validates on publish, but a snapshot produced by
+        # another bus implementation — or loaded from disk — may not have
+        # been. A bad snapshot PINS the last good weights instead of swapping.
+        from repro.serve.snapshot import snapshot_valid
+        ok, why = snapshot_valid(snap.bufs, snap.spec)
+        if not ok:
+            self.rejected_swaps += 1
+            self._bad_seq = snap.seq
+            import warnings
+            warnings.warn(
+                f"LiveServer refused snapshot seq={snap.seq}: {why} — "
+                f"pinned to seq={self.seq}", RuntimeWarning, stacklevel=2)
             return False
         place = self._place_fn(snap.spec)
         t0 = time.perf_counter()
@@ -116,4 +132,5 @@ class LiveServer:
         n = len(self.swap_pauses)
         return {"swaps": n,
                 "swap_pause_mean_s": (sum(self.swap_pauses) / n) if n else 0.0,
-                "swap_pause_max_s": max(self.swap_pauses) if n else 0.0}
+                "swap_pause_max_s": max(self.swap_pauses) if n else 0.0,
+                "rejected_swaps": self.rejected_swaps}

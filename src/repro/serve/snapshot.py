@@ -32,7 +32,8 @@ Design points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+import warnings
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,26 @@ from repro.common.flat import FlatSpec
 
 PyTree = Any
 Buffers = Dict[str, jax.Array]
+
+
+def snapshot_valid(bufs: Buffers, spec0: FlatSpec) -> Tuple[bool, str]:
+    """(ok, reason): is this a servable consensus snapshot? Checks the
+    manifest (every spec bucket present with its exact flat length) and that
+    every float buffer is fully finite — a diverged or fault-corrupted
+    training state must never reach the decode engine (repro.faults graceful
+    degradation: the bus/server pin the last good snapshot instead)."""
+    totals = spec0.totals
+    if set(bufs) != set(totals):
+        return False, (f"bucket mismatch: snapshot has {sorted(bufs)}, "
+                       f"spec expects {sorted(totals)}")
+    for k, v in bufs.items():
+        if tuple(v.shape) != (totals[k],):
+            return False, (f"bucket {k!r} shape {tuple(v.shape)} != "
+                           f"({totals[k]},)")
+        if jnp.issubdtype(v.dtype, jnp.floating) and \
+                not bool(jnp.all(jnp.isfinite(v))):
+            return False, f"bucket {k!r} contains non-finite values"
+    return True, ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,10 +134,22 @@ class SnapshotBus:
         self._slots: list = [None, None]
         self._head: int = -1     # index of the slot holding the latest publish
         self._seq: int = 0       # last published sequence number (0 = none)
+        self.rejected: int = 0   # publishes refused by validation
 
     # ---------------------------------------------------------------- produce
-    def _publish(self, bufs: Buffers, spec0: FlatSpec, train_step: int) -> Snapshot:
+    def _publish(self, bufs: Buffers, spec0: FlatSpec,
+                 train_step: int) -> Optional[Snapshot]:
         from repro.checkpoint import io
+        ok, why = snapshot_valid(bufs, spec0)
+        if not ok:
+            # graceful degradation: a bad publish never flips the head, so
+            # every reader keeps the last good snapshot
+            self.rejected += 1
+            warnings.warn(
+                f"SnapshotBus rejected publish at train step {train_step}: "
+                f"{why} — serving keeps snapshot seq={self._seq}",
+                RuntimeWarning, stacklevel=3)
+            return None
         snap = Snapshot(seq=self._seq + 1, train_step=int(train_step),
                         bufs=bufs, manifest=io.flat_spec_manifest(spec0),
                         spec=spec0)
@@ -126,10 +159,12 @@ class SnapshotBus:
         self._seq = snap.seq
         return snap
 
-    def publish_state(self, state, train_step: int = 0) -> Snapshot:
+    def publish_state(self, state, train_step: int = 0) -> Optional[Snapshot]:
         """Publish the consensus of a flat-resident trainer state
         (:class:`repro.api.FlatState`): mean over the ``W`` replica rows of
-        the resident buffers, computed on the flat plane."""
+        the resident buffers, computed on the flat plane. Returns None (and
+        counts :attr:`rejected`) when validation refuses the snapshot —
+        readers keep the last good one."""
         from repro.serving.engine import consensus_bufs
         return self._publish(consensus_bufs(state.theta),
                              state.spec.with_lead(()), train_step)

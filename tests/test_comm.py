@@ -205,6 +205,46 @@ def test_comm_bytes_increments_survive_f32_granularity():
     assert float(state.comm_bytes) > float(lost)
 
 
+def test_dropped_exchanges_do_not_count_comm_bytes():
+    """repro.faults accounting contract: a dropped or corrupt-discarded wire
+    is NOT an applied exchange, so it must not appear in the exact
+    ``comm_units`` accumulator (nor in the derived ``comm_bytes``) — only in
+    the ``wire_dropped``/``wire_corrupt`` fault counters."""
+    from repro.api.protocols import WireFaults
+    W = 4
+    impl = resolve(ProtocolConfig(method="elastic_gossip", comm_probability=1.0,
+                                  moving_rate=0.5, topology="uniform"))
+    theta = {"w": jnp.zeros((W, 256))}
+    per_event = impl.comm_cost(impl.wire_stack_bytes(theta), W).bytes_per_event
+    state = impl.init_state(theta)._replace(
+        wire_dropped=jnp.int32(0), wire_corrupt=jnp.int32(0))
+    active = jnp.ones((W,), bool)
+    key = jax.random.PRNGKey(0)
+
+    dropped = jnp.asarray([True, False, True, False])
+    _, st = impl.comm_update(key, active, theta, state,
+                             wire_faults=WireFaults(dropped=dropped))
+    # 2 of 4 senders lost their wire: only the surviving participations count
+    assert int(st.comm_units) == W - 2
+    assert float(st.comm_bytes) == pytest.approx((per_event / W) * (W - 2))
+    assert int(st.wire_dropped) == 2 and int(st.wire_corrupt) == 0
+
+    # corrupt-discarded wires follow the same rule, via the corrupt counter
+    corrupt = jnp.asarray([False, True, False, False])
+    _, st2 = impl.comm_update(key, active, theta, state,
+                              wire_faults=WireFaults(corrupt=corrupt))
+    assert int(st2.comm_units) == W - 1
+    assert int(st2.wire_corrupt) == 1 and int(st2.wire_dropped) == 0
+
+    # an all-clear fault mask is accounting-identical to no faults at all
+    _, st3 = impl.comm_update(key, active, theta, state,
+                              wire_faults=WireFaults(
+                                  dropped=jnp.zeros((W,), bool)))
+    _, st4 = impl.comm_update(key, active, theta, state)
+    assert int(st3.comm_units) == int(st4.comm_units) == W
+    assert float(st3.comm_bytes) == float(st4.comm_bytes)
+
+
 # ---------------------------------------------------------------------------
 # sim engine: codec wiring end-to-end
 # ---------------------------------------------------------------------------
