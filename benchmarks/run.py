@@ -12,8 +12,8 @@ import argparse
 import time
 
 from benchmarks import (alpha_schedule, comm_compress, comm_cost, faults,
-                        fused_step, roofline_bench, serve_live, straggler,
-                        table_4_1, table_4_2, table_4_3, table_a_1)
+                        fleet, fused_step, roofline_bench, serve_live,
+                        straggler, table_4_1, table_4_2, table_4_3, table_a_1)
 
 TABLES = {
     "table_4_1": table_4_1.main,
@@ -29,6 +29,7 @@ TABLES = {
     "straggler": straggler.main,
     "serve_live": serve_live.main,
     "faults": faults.main,
+    "fleet": fleet.main,
 }
 
 

@@ -81,6 +81,16 @@ class ProtocolState(NamedTuple):
     wire_corrupt: Optional[jax.Array] = None   # i32 wires failing checksum
     exch_timeouts: Optional[jax.Array] = None  # i32 exchanges timed out (async)
     exch_retries: Optional[jax.Array] = None   # i32 wire re-dispatches (async)
+    # Mega-fleet plane (repro.fleet): None unless a FleetConfig enables the
+    # feature — non-fleet pytrees / checkpoints are unchanged. Token balances
+    # persist through checkpoints (VIRTUAL_TIME_KEYS); chunk_units is the
+    # per-chunk applied-exchange counter that keeps partitioned comm_bytes
+    # EXACT when chunk wire sizes differ (derived, never f32-accumulated).
+    tokens: Optional[jax.Array] = None         # f32[W] flow-control balances
+    flow_skipped: Optional[jax.Array] = None   # i32 initiations skipped by
+    #                                            flow control (never on wire)
+    chunk_units: Optional[jax.Array] = None    # i32[P] applied exchanges per
+    #                                            partition chunk id
 
 
 class WireFaults(NamedTuple):

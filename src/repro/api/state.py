@@ -116,6 +116,11 @@ class FlatState:
                 "wire_corrupt": self.proto.wire_corrupt,
                 "exch_timeouts": self.proto.exch_timeouts,
                 "exch_retries": self.proto.exch_retries,
+                # fleet-plane fields (None — and therefore absent from the
+                # flattened payload — unless a FleetConfig enables them)
+                "tokens": self.proto.tokens,
+                "flow_skipped": self.proto.flow_skipped,
+                "chunk_units": self.proto.chunk_units,
             }),
             "comm": {"residual": getattr(self.comm, "residual", None)},
             "key": self.key,
@@ -135,7 +140,9 @@ class FlatState:
                                 p.get("stale_time"), p.get("stale_steps"),
                                 p.get("stale_events"),
                                 p.get("wire_dropped"), p.get("wire_corrupt"),
-                                p.get("exch_timeouts"), p.get("exch_retries"))
+                                p.get("exch_timeouts"), p.get("exch_retries"),
+                                p.get("tokens"), p.get("flow_skipped"),
+                                p.get("chunk_units"))
         comm = self.comm
         if comm is not None:
             comm = type(comm)(d["comm"]["residual"])

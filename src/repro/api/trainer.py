@@ -130,7 +130,7 @@ class GossipTrainer:
                  grad_accum: int = 1, seed: int = 0, fused_update: bool = True,
                  codec: Optional[str] = None,
                  hetero: Optional[HeteroConfig] = None,
-                 faults=None,
+                 faults=None, fleet=None,
                  publish_every: Optional[int] = None,
                  snapshot_bus=None):
         backend_cls = registry.get_engine(engine)   # unknown names raise with
@@ -155,6 +155,11 @@ class GossipTrainer:
         # (sim + async engines) and, with a delay model, the async engine's
         # pending-wire message mode. None keeps every trace fault-free.
         self.faults = faults
+        # mega-fleet plane (repro.fleet): a FleetConfig turns on partitioned
+        # exchanges / token-account flow control (sim + async) and the
+        # host-resident FlatState plane (async only). None or the all-default
+        # config keeps every trace byte-identical to the non-fleet build.
+        self.fleet = fleet
         # train-while-serve hook (repro.serve): every ``publish_every`` facade
         # steps, :meth:`step` publishes an atomic consensus snapshot of the
         # resident flat buffers onto ``snapshot_bus`` (auto-created when only
@@ -281,6 +286,12 @@ class GossipTrainer:
         """
         from repro.checkpoint import io
         meta = io.load_meta(path)
+        # descriptor checks run BEFORE array restore: a fleet mismatch (e.g.
+        # a different partition) would otherwise surface as an opaque
+        # chunk_units shape assert instead of the config diff
+        validate = getattr(self._backend, "validate_checkpoint_meta", None)
+        if validate is not None:
+            validate(meta)
         state = io.restore_state(path, state_like, meta=meta)
         sched = getattr(self._backend, "sched", None)
         if sched is not None:
@@ -330,7 +341,7 @@ class _SimBackend(_MatchingScheduleMixin):
         self.mesh_cfg = mesh_cfg
         self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer,
                               fused_update=facade.fused_update,
-                              faults=facade.faults)
+                              faults=facade.faults, fleet=facade.fleet)
         self._pb = None
         self._wire = None
 
@@ -554,7 +565,7 @@ class _AsyncBackend(_SimBackend):
         self.sim = AsyncTrainer(loss_fn, num_workers, facade.protocol,
                                 facade.optimizer, hetero=hetero,
                                 fused_update=facade.fused_update,
-                                faults=facade.faults)
+                                faults=facade.faults, fleet=facade.fleet)
         self._pb = None
         self._wire = None
 
@@ -580,10 +591,14 @@ class _AsyncBackend(_SimBackend):
         if self.facade.faults is not None:
             from repro.faults import fault_descriptor
             extra["faults"] = fault_descriptor(self.facade.faults)
+        if self.facade.fleet is not None and self.facade.fleet.enabled():
+            extra["fleet"] = dataclasses.asdict(self.facade.fleet)
         return extra
 
-    def on_checkpoint_loaded(self, state, meta) -> None:
+    def validate_checkpoint_meta(self, meta) -> None:
         self._validate_fleet(meta)
+
+    def on_checkpoint_loaded(self, state, meta) -> None:
         hc = (meta or {}).get("hetero_clock")
         if hc:
             self.sim.anchor(hc["clocks"], hc["steps_done"])
@@ -614,3 +629,19 @@ class _AsyncBackend(_SimBackend):
                 "checkpoint was written WITHOUT a fault plane but this "
                 "trainer configures one — resuming would inject faults into "
                 "a run that never had them; drop faults= or start fresh")
+        fleet = self.facade.fleet
+        cur_fleet = (dataclasses.asdict(fleet)
+                     if fleet is not None and fleet.enabled() else None)
+        if "fleet" in meta:
+            if cur_fleet is None:
+                raise ValueError(
+                    "checkpoint was written under a fleet plane "
+                    f"({meta['fleet']!r}) but this trainer has none — the "
+                    "partition/flow draws are pure functions of it; pass the "
+                    "same FleetConfig (fleet=...) to resume this run")
+            _diff_descriptor("fleet", meta["fleet"], cur_fleet)
+        elif cur_fleet is not None:
+            raise ValueError(
+                "checkpoint was written WITHOUT a fleet plane but this "
+                "trainer configures one — resuming would change every "
+                "partition/flow draw; drop fleet= or start fresh")

@@ -36,15 +36,17 @@ SEP = "::"
 
 FLAT_FORMAT = 2       # checkpoint format version written by save_state
 
-# optional FlatState payload keys: the async engine's virtual-time fields and
-# the fault-plane counters (repro.faults) are None (hence absent) in
-# checkpoints written by engines not using them — a cross-engine restore keeps
-# the template's (zero-initialized) values
+# optional FlatState payload keys: the async engine's virtual-time fields,
+# the fault-plane counters (repro.faults) and the fleet-plane fields
+# (repro.fleet: token balances, flow-skip and per-chunk exchange counters)
+# are None (hence absent) in checkpoints written by engines not using them —
+# a cross-engine restore keeps the template's (zero-initialized) values
 VIRTUAL_TIME_KEYS = tuple(
     f"proto{SEP}{k}" for k in ("clocks", "worker_steps", "stale_time",
                                "stale_steps", "stale_events",
                                "wire_dropped", "wire_corrupt",
-                               "exch_timeouts", "exch_retries"))
+                               "exch_timeouts", "exch_retries",
+                               "tokens", "flow_skipped", "chunk_units"))
 
 
 def _path_key(path) -> str:

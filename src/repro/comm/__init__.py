@@ -43,4 +43,5 @@ from repro.comm.codecs import (  # noqa: F401
     init_comm_state,
     roundtrip_bufs,
     wire_param_bytes,
+    wire_partition_bytes,
 )

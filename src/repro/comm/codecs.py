@@ -275,6 +275,28 @@ def wire_param_bytes(codec: Codec, spec: FlatSpec) -> int:
                    for b, n in spec.totals.items()))
 
 
+def wire_partition_bytes(codec: Codec, spec: FlatSpec, bounds) -> tuple:
+    """Wire bytes per partition chunk id (repro.fleet partitioned exchanges).
+
+    ``bounds`` is ``{bucket: ((lo, hi), ...)}`` — one (lo, hi) slice of the
+    bucket's [total] dim per chunk id, aligned across buckets: chunk ``c``'s
+    wire is the concatenation of every bucket's ``[lo_c, hi_c)`` slice pushed
+    through ``codec`` (the identity codec ships the raw slice). Returns a
+    tuple of per-chunk byte counts, the per-event values the partitioned
+    ``comm_bytes`` accounting derives from the exact ``chunk_units``
+    counters."""
+    num_chunks = len(next(iter(bounds.values())))
+    out = []
+    for c in range(num_chunks):
+        total = 0
+        for b in spec.totals:
+            lo, hi = bounds[b][c]
+            if hi > lo:
+                total += codec.wire_bytes(int(hi - lo), jnp.dtype(b).itemsize)
+        out.append(int(total))
+    return tuple(out)
+
+
 def roundtrip_bufs(codec: Codec, bufs, seeds, res_bufs=None, gate=None):
     """decode(encode(.)) over a dict of flat-plane buckets — THE fidelity
     surface both sim paths share (engine hot loop and facade parity oracle).
@@ -286,6 +308,9 @@ def roundtrip_bufs(codec: Codec, bufs, seeds, res_bufs=None, gate=None):
     receiver discards is carried, not dropped. (For pull-gossip a passive
     partner's wire may still be applied while its residual also carries — the
     mass is re-sent later: error feedback stays conservative, never lossy.)
+    ``gate`` may also be a per-bucket dict of masks (the fleet partition
+    plane gates the residual per COLUMN chunk as well as per row: only the
+    shipped chunk's mass clears, the rest keeps carrying).
     Returns (hat_bufs, new_res_bufs_or_None).
     """
     res_bufs = res_bufs or {}
@@ -296,7 +321,8 @@ def roundtrip_bufs(codec: Codec, bufs, seeds, res_bufs=None, gate=None):
             r = jnp.zeros(b.shape, jnp.float32)
         hat[k], r2 = codec.roundtrip(b, seeds, residual=r)
         if codec.stateful:
-            new_res[k] = r2 if gate is None else jnp.where(gate, r2, r)
+            g = gate.get(k) if isinstance(gate, dict) else gate
+            new_res[k] = r2 if g is None else jnp.where(g, r2, r)
     return hat, (new_res if codec.stateful else None)
 
 

@@ -353,6 +353,46 @@ class FaultConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Mega-fleet gossip plane (repro.fleet) — partitioned exchanges,
+    token-account flow control, and the host-resident plane mode that bounds
+    W by host RAM instead of device memory.
+
+    All stochastic draws (the chunk a worker ships this step, the randomized
+    token-account initiation draw) are pure hashes of ``(seed, worker, step)``
+    — the ``codec_seeds`` / ``repro.hetero`` pattern — so a fleet schedule is
+    bit-reproducible across restarts. The all-default config is inert: the
+    engines add ZERO trace ops, so ``partition=1, flow_control="none",
+    plane="device"`` reproduces the non-fleet engines bit-exactly.
+    """
+    # partitioned exchanges: each gossip exchange ships ONE contiguous chunk
+    # (1/partition of every dtype bucket's [total] dim); the chunk id is a
+    # pure hash of (seed, worker, step). 1 = full-replica exchange.
+    partition: int = 1
+    # flow control: none | token_account | randomized_token_account | any
+    # @register_flow_control name. Gates whether a worker INITIATES an
+    # exchange this step; skipped initiations never reach the wire and are
+    # excluded from comm_units/comm_bytes (applied-exchange accounting).
+    flow_control: str = "none"
+    token_capacity: float = 20.0     # C: max token balance per worker
+    token_rate: float = 1.0          # tokens credited per completed local step
+    token_threshold: float = 10.0    # A: randomized_token_account initiates
+    #                                  with probability min(1, balance / A)
+    token_init: float = -1.0         # starting balance; < 0 -> token_capacity
+    # resident plane for the async engine: "device" keeps the [W, total]
+    # FlatState buffers in device memory (existing behavior); "host" keeps
+    # them in host RAM (numpy) and streams only the active event window's
+    # rows to device per fused pass — W bounded by host memory, not HBM.
+    plane: str = "device"
+    seed: int = 0                    # hash-seed for per-(worker, step) draws
+
+    def enabled(self) -> bool:
+        """True if any fleet feature departs from the inert default."""
+        return (self.partition != 1 or self.flow_control != "none"
+                or self.plane != "device")
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "nag"                # sgd | nag | adamw  (paper uses NAG, Alg. 5)
     learning_rate: float = 1e-3

@@ -100,12 +100,17 @@ class AsyncTrainer(SimTrainer):
     ``ProtocolState.worker_steps``.
     """
 
+    # the event-window execution model streams window rows from host RAM
+    # (repro.fleet.hostplane) — the sim engine cannot
+    _supports_host_plane = True
+
     def __init__(self, loss_fn: Callable, num_workers: int,
                  protocol: ProtocolConfig, optimizer: OptimizerConfig,
                  hetero: Optional[HeteroConfig] = None,
-                 fused_update: bool = True, faults=None):
+                 fused_update: bool = True, faults=None, fleet=None):
         super().__init__(loss_fn, num_workers, protocol, optimizer,
-                         fused_update=fused_update, faults=faults)
+                         fused_update=fused_update, faults=faults,
+                         fleet=fleet)
         if not self._impl.barrier_free:
             raise ValueError(
                 f"protocol {protocol.method!r} needs a global step barrier "
@@ -152,12 +157,44 @@ class AsyncTrainer(SimTrainer):
                     "delay models route exchanges through the host wire "
                     "queue, which ships raw rows; codecs do not compose "
                     f"with delay model {faults.delay_model!r} yet")
+        if self._message_mode and (self.partition > 1 or self.flow is not None):
+            raise ValueError(
+                "the fleet plane (partition / flow control) does not compose "
+                "with delay-model message mode yet — exchanges would need "
+                "per-chunk wires and dispatch-time token draws in the host "
+                "pending queue")
+        # ---- host-resident plane (repro.fleet.hostplane) -------------------
+        self.host_plane = fleet is not None and fleet.plane == "host"
+        self._hostplane = None
+        if self.host_plane:
+            if self.codec is not None:
+                raise ValueError(
+                    "plane='host' ships raw host rows; codecs do not compose "
+                    "with the host-resident plane yet")
+            if faults is not None:
+                raise ValueError(
+                    "plane='host' does not compose with the message-level "
+                    "fault plane yet")
+            if optimizer.name != "nag":
+                raise ValueError(
+                    "plane='host' runs the fused NAG rows program; optimizer "
+                    f"{optimizer.name!r} is not supported")
+            if not self._impl.pairwise:
+                raise ValueError(
+                    "plane='host' realizes exchanges host-side pairwise; "
+                    f"protocol {protocol.method!r} is not pairwise")
+            from repro.fleet.hostplane import HostPlane
+            self._hostplane = HostPlane(self)
         self._pending: list = []
         self._per_event = 0.0
         self._draw_fn = jax.jit(self._draws)
 
     # ------------------------------------------------------------- lifecycle
     def init(self, params_stack: PyTree, seed: int = 0) -> FlatState:
+        if self.host_plane:
+            # host-resident plane: never materialize [W, total] on device
+            self._pending = []
+            return self._hostplane.init_state(params_stack, seed)
         state = super().init(params_stack, seed)
         W = self.num_workers
         self.anchor(np.zeros((W,)), np.zeros((W,), np.int64))
@@ -208,9 +245,17 @@ class AsyncTrainer(SimTrainer):
         if hold is not None:
             return self._outage_step(state, float(hold))
         t, mask, nxt = self.next_window()
+        if self.host_plane:
+            # host-resident plane: the event window runs as a gathered-rows
+            # device program + host-side exchanges (repro.fleet.hostplane)
+            return self._hostplane.window_step(state, x, y, t, mask, nxt)
         # pre-step PRNG key / step for the clock program's draw re-derivation
         # (copies: the step donates the state's buffers)
         key0, step0 = jnp.array(state.key), jnp.array(state.step)
+        # flow control masks the clock program's staleness draws with the
+        # PRE-step token balances (the step program consumes and updates them)
+        tokens0 = (jnp.array(state.proto.tokens) if self.flow is not None
+                   else None)
         if self._message_mode:
             return self._message_step(state, x, y, t, mask, nxt, key0, step0)
         if mask.all():
@@ -219,7 +264,8 @@ class AsyncTrainer(SimTrainer):
         else:
             state, m = self._step_fn(state, x, y, jnp.asarray(mask))
         proto = self._clock_fn(state.proto, key0, step0,
-                               jnp.asarray(nxt, jnp.float32), jnp.asarray(mask))
+                               jnp.asarray(nxt, jnp.float32), jnp.asarray(mask),
+                               tokens0=tokens0)
         state = state.replace(proto=proto)
         self.clocks = np.where(mask, nxt, self.clocks)
         self.steps_done = self.steps_done + mask
@@ -408,7 +454,7 @@ class AsyncTrainer(SimTrainer):
 
     # ------------------------------------------------- traced window pieces
     def _advance_clocks(self, proto, key0, step0, new_clocks, worker_mask,
-                        count_stale: bool = True):
+                        tokens0=None, count_stale: bool = True):
         """Clock program: advance virtual clocks / local step counts for the
         window and accumulate per-exchange staleness. Gate and partner draws
         are re-derived from the PRE-step PRNG key — pure functions of it, so
@@ -426,6 +472,10 @@ class AsyncTrainer(SimTrainer):
             active = jnp.logical_and(
                 protocols.comm_gate(self.protocol, gate_key, step0,
                                     self.num_workers), worker_mask)
+            if self.flow is not None and tokens0 is not None:
+                # same pre-step balances the step program's flow gate saw
+                active = jnp.logical_and(active,
+                                         self.flow.allow(step0, tokens0))
             peers = self._impl.sample_peers(sel_key, self.num_workers)
             act_f = active.astype(jnp.float32)
             act_i = active.astype(jnp.int32)

@@ -49,9 +49,13 @@ class SimTrainer:
     (``params`` is the single-replica pytree view of the resident plane).
     """
 
+    # host-resident FlatState plane (repro.fleet): only the async engine's
+    # event-window execution model can stream window rows from host RAM
+    _supports_host_plane = False
+
     def __init__(self, loss_fn: Callable, num_workers: int,
                  protocol: ProtocolConfig, optimizer: OptimizerConfig,
-                 fused_update: bool = True, faults=None):
+                 fused_update: bool = True, faults=None, fleet=None):
         self.loss_fn = loss_fn
         self.num_workers = num_workers
         self.protocol = protocol
@@ -97,6 +101,29 @@ class SimTrainer:
                 f"fault model {fm.name!r} discards wires, but protocol "
                 f"{protocol.method!r} overrides comm_update without a "
                 "wire_faults kwarg — it cannot honor the discard")
+        # fleet plane (repro.fleet): partitioned exchanges + token-account
+        # flow control + plane residency. The all-default FleetConfig is
+        # INERT — no trace ops are added, so the non-fleet step program is
+        # reproduced bit-exactly by construction.
+        self.fleet = fleet
+        self.flow = None
+        self.partition = 1
+        self._plans: dict = {}
+        if fleet is not None and fleet.enabled():
+            from repro.fleet import flow as fleet_flow
+            self.flow = fleet_flow.resolve_flow_control(fleet)
+            self.partition = int(fleet.partition)
+            if self.partition < 1:
+                raise ValueError(f"partition must be >= 1, got {fleet.partition}")
+            if self.partition > 1 and not self._impl.pairwise:
+                raise ValueError(
+                    f"partitioned exchanges need a pairwise protocol; "
+                    f"{protocol.method!r} is not pairwise")
+            if fleet.plane == "host" and not self._supports_host_plane:
+                raise ValueError(
+                    "plane='host' (host-resident FlatState) requires the "
+                    "async engine — use GossipTrainer(engine='async') / "
+                    "launch.train --engine async")
         # donate the resident state so the flat buffers update in place
         # instead of doubling HBM residency every step
         self._step_fn = jax.jit(self._step, donate_argnums=(0,),
@@ -112,6 +139,27 @@ class SimTrainer:
             return float(sum(s.size * s.dtype.itemsize for s in spec.slots))
         return float(comm.wire_param_bytes(self.codec, spec))
 
+    def _fleet_plan(self, spec: flat_plane.FlatSpec):
+        """Static PartitionPlan for ``spec`` (cached — spec is hashable)."""
+        plan = self._plans.get(spec)
+        if plan is None:
+            from repro.fleet.partition import build_plan
+            plan = build_plan(spec, self.partition, self.codec)
+            self._plans[spec] = plan
+        return plan
+
+    def _fleet_proto_seed(self, proto):
+        """Seed the fleet-plane ProtocolState fields so the state pytree
+        structure is stable across steps (comm updates _replace in place)."""
+        if self.flow is not None:
+            proto = proto._replace(
+                tokens=self.flow.init_tokens(self.num_workers),
+                flow_skipped=jnp.zeros((), jnp.int32))
+        if self.partition > 1:
+            proto = proto._replace(
+                chunk_units=jnp.zeros((self.partition,), jnp.int32))
+        return proto
+
     def init(self, params_stack: PyTree, seed: int = 0) -> FlatState:
         """Flatten ONCE: the returned state holds the resident buffers; the
         ``params_stack`` pytree is not referenced again."""
@@ -123,6 +171,7 @@ class SimTrainer:
             # across steps (comm_update _replaces them in place)
             proto = proto._replace(wire_dropped=jnp.zeros((), jnp.int32),
                                    wire_corrupt=jnp.zeros((), jnp.int32))
+        proto = self._fleet_proto_seed(proto)
         return FlatState(
             spec=spec,
             theta=theta,
@@ -132,7 +181,8 @@ class SimTrainer:
             key=jax.random.PRNGKey(seed),
             step=jnp.zeros((), jnp.int32))
 
-    def _codec_transmit(self, state: FlatState, active, publish=None):
+    def _codec_transmit(self, state: FlatState, active, publish=None,
+                        col_gate=None):
         """decode(encode(theta)) on the resident plane: what peers RECEIVE
         this round, plus the advanced error-feedback residual (already flat
         f32 buffers in ``state.comm``). Seeds derive from (comm round counter,
@@ -143,7 +193,10 @@ class SimTrainer:
         worker's OWN participation (matching the dist engine) so wire mass a
         receiver discards is carried forward. ``publish`` (optional) is what
         workers put on the wire instead of ``state.theta`` — the fault
-        plane's Byzantine garbling hook."""
+        plane's Byzantine garbling hook. ``col_gate`` (optional,
+        ``{bucket: bool[W, N]}``) restricts the residual advance per COLUMN
+        too — the partition plane's gate: only the chunk a worker actually
+        shipped carries its wire mass forward."""
         codec = self.codec
         if publish is None:
             publish = state.theta
@@ -151,10 +204,13 @@ class SimTrainer:
         def fire():
             seeds = comm.codec_seeds(state.proto.comm_rounds,
                                      jnp.arange(self.num_workers))
+            gate = jnp.asarray(active).reshape(-1, 1)
+            if col_gate is not None:
+                gate = {k: gate & col_gate[k] for k in publish}
             hat, new_res = comm.roundtrip_bufs(
                 codec, publish, seeds,
                 state.comm.residual if codec.stateful else None,
-                gate=jnp.asarray(active).reshape(-1, 1))
+                gate=gate)
             # decode reconstructs in f32; match the storage dtype so both
             # cond branches agree (and mixing casts exactly like the wire)
             hat = {k: v.astype(state.theta[k].dtype) for k, v in hat.items()}
@@ -168,7 +224,7 @@ class SimTrainer:
         return jax.lax.cond(jnp.any(active), fire, skip)
 
     def _codec_transmit_checked(self, state: FlatState, active, publish,
-                                corrupt_mask):
+                                corrupt_mask, col_gate=None):
         """:meth:`_codec_transmit` through the PACKED uint8 wire with a
         checksum tail and in-flight corruption (repro.faults): per bucket,
         encode -> pack -> append checksum -> corrupt -> verify -> decode.
@@ -204,7 +260,8 @@ class SimTrainer:
                 hat[k] = dec.astype(state.theta[k].dtype)
                 ok = ok_b if ok is None else ok & ok_b
                 if codec.stateful:
-                    new_res[k] = r2 if gate is None else jnp.where(gate, r2, r)
+                    g = gate if col_gate is None else gate & col_gate[k]
+                    new_res[k] = jnp.where(g, r2, r)
             comm_new = comm.CommState(new_res) if codec.stateful else state.comm
             return hat, comm_new, ok
 
@@ -248,12 +305,41 @@ class SimTrainer:
             # passively through the mixing matrix with their last published row
             active = jnp.logical_and(active, worker_mask)
 
+        # token-account flow control (repro.fleet): a worker whose gate fired
+        # but whose account cannot cover the spend SKIPS the initiation — the
+        # wire never carries it, so it never reaches comm_units/comm_bytes
+        # (applied-exchange accounting); skips land in flow_skipped instead.
+        proto0 = state.proto
+        if self.flow is not None:
+            allowed = self.flow.allow(state.step, proto0.tokens)
+            skipped = jnp.sum((active & ~allowed).astype(jnp.int32))
+            active = jnp.logical_and(active, allowed)
+            stepped = (worker_mask if worker_mask is not None
+                       else jnp.ones((self.num_workers,), bool))
+            proto0 = proto0._replace(
+                tokens=self.flow.update(proto0.tokens, stepped, active),
+                flow_skipped=proto0.flow_skipped + skipped)
+
+        # partition plane (repro.fleet): hash-scheduled chunk per initiator,
+        # pure in (fleet seed, worker, step) — sim and async agree
+        part_ids = col_gate = None
+        if self.partition > 1:
+            from repro.fleet.partition import partition_ids
+            part_ids = partition_ids(self.fleet.seed, state.step,
+                                     self.num_workers, self.partition)
+            if self.codec is not None:
+                plan = self._fleet_plan(spec)
+                col_gate = {
+                    b: part_ids[:, None] == jnp.asarray(
+                        plan.col_chunks(b, state.theta[b].shape[1]))[None, :]
+                    for b in state.theta}
+
         if defer_comm:
             # async message mode: exchanges live in the host pending-wire
             # queue (dispatch at this window, apply at arrival) — the step
             # program keeps its PRNG splits and the pure local update, and
             # skips the in-program mixing entirely
-            theta_comm, proto_new, comm_new = (state.theta, state.proto,
+            theta_comm, proto_new, comm_new = (state.theta, proto0,
                                                state.comm)
             return self._step_epilogue(state, worker_mask, theta_comm,
                                        proto_new, comm_new, grads, losses,
@@ -276,10 +362,11 @@ class SimTrainer:
         if self.codec is not None:
             if corrupt_mask is not None:
                 transmit, comm_new, ok = self._codec_transmit_checked(
-                    state, active, publish, corrupt_mask)
+                    state, active, publish, corrupt_mask, col_gate)
                 detected = ~ok
             else:
-                transmit, comm_new = self._codec_transmit(state, active, publish)
+                transmit, comm_new = self._codec_transmit(state, active,
+                                                          publish, col_gate)
         elif corrupt_mask is not None:
             # uncompressed wire: bitcast -> checksum -> corrupt -> verify
             from repro.faults import wire as fwire
@@ -299,11 +386,18 @@ class SimTrainer:
             from repro.api.protocols import WireFaults
             wire_faults = WireFaults(dropped=dropped, corrupt=detected)
 
-        kw = ({"wire_bytes": self._wire_bytes(spec)} if self._pass_wire_bytes
-              else {})
-        theta_comm, proto_new = protocols.comm_update(
-            cfg, sel_key, active, state.theta, state.proto, step=state.step,
-            transmit=transmit, wire_faults=wire_faults, **kw)
+        if part_ids is not None:
+            from repro.fleet.partition import partitioned_comm_update
+            theta_comm, proto_new = partitioned_comm_update(
+                self._impl, sel_key, active, state.theta, proto0,
+                step=state.step, transmit=transmit, wire_faults=wire_faults,
+                part_ids=part_ids, plan=self._fleet_plan(spec))
+        else:
+            kw = ({"wire_bytes": self._wire_bytes(spec)}
+                  if self._pass_wire_bytes else {})
+            theta_comm, proto_new = protocols.comm_update(
+                cfg, sel_key, active, state.theta, proto0, step=state.step,
+                transmit=transmit, wire_faults=wire_faults, **kw)
         return self._step_epilogue(state, worker_mask, theta_comm, proto_new,
                                    comm_new, grads, losses, active, key)
 

@@ -1,0 +1,70 @@
+"""repro.fleet — mega-fleet gossip: partitioned exchanges, token-account
+flow control, and host-resident planes for W=256-1024 workers.
+
+Three composable mechanisms behind one :class:`~repro.common.config.FleetConfig`:
+
+- :mod:`repro.fleet.partition` — each exchange ships ONE hash-scheduled
+  contiguous chunk of the flat plane (``--partition P``), with exact
+  per-chunk byte accounting and partition-aware robust mixing;
+- :mod:`repro.fleet.flow` — ``@register_flow_control`` token-account models
+  gating which workers may initiate an exchange each step
+  (``--flow-control token_account | randomized_token_account``);
+- :mod:`repro.fleet.hostplane` — the async engine's FlatState plane resident
+  in host RAM, only the active event window's rows streamed to device
+  (``--plane host``), W bounded by RAM instead of device memory;
+- :mod:`repro.fleet.memory` — up-front W-vs-memory validation for
+  ``launch.train`` (clear error instead of a deep OOM).
+
+``FleetConfig()`` (partition=1, flow_control="none", plane="device") is INERT:
+the engines add zero trace ops, so the non-fleet step programs are reproduced
+bit-exactly by construction.
+"""
+from repro.common.config import FleetConfig
+from repro.fleet.flow import (
+    SALT_FLOW,
+    SALT_PARTITION,
+    FlowControl,
+    available_flow_controls,
+    get_flow_control,
+    register_flow_control,
+    resolve_flow_control,
+    unregister_flow_control,
+)
+from repro.fleet.memory import (
+    DEVICE_RESIDENT_FACTOR,
+    HOST_RESIDENT_FACTOR,
+    available_host_bytes,
+    plane_bytes,
+    validate_fleet_memory,
+)
+from repro.fleet.partition import (
+    PartitionPlan,
+    build_plan,
+    chunk_bounds,
+    partition_ids,
+    partition_ids_np,
+    partitioned_comm_update,
+)
+
+__all__ = [
+    "FleetConfig",
+    "SALT_FLOW",
+    "SALT_PARTITION",
+    "FlowControl",
+    "available_flow_controls",
+    "get_flow_control",
+    "register_flow_control",
+    "resolve_flow_control",
+    "unregister_flow_control",
+    "DEVICE_RESIDENT_FACTOR",
+    "HOST_RESIDENT_FACTOR",
+    "available_host_bytes",
+    "plane_bytes",
+    "validate_fleet_memory",
+    "PartitionPlan",
+    "build_plan",
+    "chunk_bounds",
+    "partition_ids",
+    "partition_ids_np",
+    "partitioned_comm_update",
+]

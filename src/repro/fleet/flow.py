@@ -1,0 +1,183 @@
+"""Token-account flow control — who gets to INITIATE a gossip exchange.
+
+At IoT/edge cardinality the gossip fabric itself becomes the contended
+resource: with W in the hundreds, every worker firing its Bernoulli gate every
+step floods the wire. Flow control (gossipy's ``TokenAccount`` /
+``RandomizedTokenAccount`` idea, SNIPPETS.md §3) throttles initiations with a
+per-worker token balance: a completed local step earns ``token_rate`` tokens
+(capped at ``token_capacity``), an initiated exchange spends one, and a worker
+whose gate fired but whose account cannot cover the spend SKIPS the exchange —
+the wire never carries it, and (applied-exchange accounting) it never reaches
+``comm_units`` / ``comm_bytes``; skips are counted in
+``ProtocolState.flow_skipped`` instead.
+
+Every model is a :class:`FlowControl` subclass registered under a name via
+``@register_flow_control`` — the ``@register_time_model`` /
+``@register_fault_model`` extension pattern: a newly registered model is
+immediately selectable through ``FleetConfig(flow_control="<name>")`` and the
+``launch.train --flow-control`` CLI, no engine changes.
+
+Determinism: the randomized model's initiation draw hashes
+``(FleetConfig.seed, worker, step)`` (the ``codec_seeds`` pattern) — given the
+same token balance the draw is bit-reproducible across restarts and identical
+host-side (numpy, the host-resident plane) and in-trace (jnp, the device
+engines), because both compare the same uint32 hash lane against the same
+threshold.
+"""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FleetConfig
+from repro.faults.models import fault_hash_jnp
+from repro.hetero.models import hetero_hash
+
+# fleet-plane hash salts — distinct from the fault plane's 101/202/303/404
+SALT_PARTITION = 505   # which chunk a worker ships this step
+SALT_FLOW = 606        # randomized token-account initiation draw
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.hetero.register_time_model)
+# ---------------------------------------------------------------------------
+
+_FLOW: Dict[str, Type["FlowControl"]] = {}
+
+
+def register_flow_control(name: str):
+    """Class decorator: register a :class:`FlowControl` under ``name``."""
+    def deco(cls):
+        if not (isinstance(cls, type) and issubclass(cls, FlowControl)):
+            raise TypeError(f"{cls!r} must subclass FlowControl")
+        if name in _FLOW:
+            raise ValueError(f"flow control {name!r} already registered "
+                             f"({_FLOW[name].__qualname__})")
+        cls.name = name
+        _FLOW[name] = cls
+        return cls
+    return deco
+
+
+def available_flow_controls():
+    return sorted(_FLOW)
+
+
+def get_flow_control(name: str) -> Type["FlowControl"]:
+    if name not in _FLOW:
+        raise KeyError(f"unknown flow control {name!r}; available: "
+                       f"{available_flow_controls()}")
+    return _FLOW[name]
+
+
+def unregister_flow_control(name: str) -> None:
+    _FLOW.pop(name, None)
+
+
+def resolve_flow_control(cfg: FleetConfig):
+    """FleetConfig -> FlowControl instance, or None for the trivial model —
+    engines add ZERO trace ops when flow control is off (the bit-exactness
+    anchor)."""
+    model = get_flow_control(cfg.flow_control)(cfg)
+    return None if model.trivial else model
+
+
+# ---------------------------------------------------------------------------
+# models
+# ---------------------------------------------------------------------------
+
+class FlowControl:
+    """One initiation-throttling policy. Balances live in
+    ``ProtocolState.tokens`` (f32[W], checkpointed); the model is stateless.
+
+    The engine calls :meth:`allow` on the PRE-step balances to mask the comm
+    gate, then :meth:`update` with the masks of workers that completed a
+    local step (credit) and that actually initiated (debit).
+    """
+
+    name = ""          # set by @register_flow_control
+    trivial = False    # True -> resolve_flow_control returns None
+
+    def __init__(self, cfg: FleetConfig):
+        self.cfg = cfg
+        self.capacity = float(cfg.token_capacity)
+        self.rate = float(cfg.token_rate)
+        self.threshold = float(cfg.token_threshold)
+        self.init_balance = (self.capacity if cfg.token_init < 0
+                            else float(cfg.token_init))
+        assert self.capacity > 0 and self.threshold > 0, cfg
+
+    def init_tokens(self, num_workers: int) -> jnp.ndarray:
+        return jnp.full((num_workers,), self.init_balance, jnp.float32)
+
+    def allow(self, step, tokens) -> jnp.ndarray:
+        """bool[W]: may worker w initiate at ``step`` given balances
+        ``tokens``? Traced (jnp)."""
+        raise NotImplementedError
+
+    def allow_np(self, step: int, tokens: np.ndarray) -> np.ndarray:
+        """Host mirror of :meth:`allow` (numpy) — the host-resident plane's
+        event loop runs flow control without touching the device. Must agree
+        with :meth:`allow` bit-for-bit given the same balances."""
+        raise NotImplementedError
+
+    def update(self, tokens, stepped, initiated):
+        """New balances: credit ``token_rate`` per completed local step
+        (capped at capacity), debit 1 per initiated exchange (floored at 0).
+        ``stepped``/``initiated`` are bool[W]. Works on jnp and numpy alike
+        (pure arithmetic), so both planes share one implementation."""
+        credited = tokens + self.rate * stepped.astype(tokens.dtype)
+        if isinstance(tokens, np.ndarray):
+            credited = np.minimum(credited, tokens.dtype.type(self.capacity))
+            return np.maximum(credited - initiated.astype(tokens.dtype), 0.0)
+        credited = jnp.minimum(credited, self.capacity)
+        return jnp.maximum(credited - initiated.astype(tokens.dtype), 0.0)
+
+
+@register_flow_control("none")
+class NoFlowControl(FlowControl):
+    """Every gated initiation goes through — the non-fleet engines' behavior
+    (``resolve_flow_control`` returns None, so no trace ops are added)."""
+    trivial = True
+
+
+@register_flow_control("token_account")
+class TokenAccount(FlowControl):
+    """Deterministic account: initiate iff the balance covers the spend
+    (>= 1 token). Steady-state initiation rate is min(gate rate, token_rate)."""
+
+    def allow(self, step, tokens):
+        return tokens >= jnp.float32(1.0)
+
+    def allow_np(self, step, tokens):
+        return tokens >= np.float32(1.0)
+
+
+@register_flow_control("randomized_token_account")
+class RandomizedTokenAccount(FlowControl):
+    """gossipy's ``RandomizedTokenAccount(C, A)`` policy on the flat plane:
+    below the aggressiveness threshold A a worker initiates with probability
+    ``balance / A`` (full balance -> always), so send pressure degrades
+    smoothly instead of oscillating at the account boundary. The Bernoulli
+    draw is an exact uint32-threshold comparison over the
+    ``(seed, worker, step)`` hash — host and traced draws agree bit-for-bit.
+    """
+
+    def _prob(self, tokens, xp):
+        p = tokens / xp.asarray(self.threshold, tokens.dtype)
+        return xp.clip(p, 0.0, 1.0)
+
+    def allow(self, step, tokens):
+        W = tokens.shape[0]
+        h = fault_hash_jnp(self.cfg.seed, jnp.arange(W), step, SALT_FLOW)
+        # u in [0, 1) with 24 bits — exactly representable in f32 on both
+        # planes, so the host/traced comparison cannot disagree
+        u = (h >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
+        return (tokens >= jnp.float32(1.0)) & (u < self._prob(tokens, jnp))
+
+    def allow_np(self, step, tokens):
+        W = tokens.shape[0]
+        h = hetero_hash(self.cfg.seed, np.arange(W), step, SALT_FLOW)
+        u = (h >> np.uint64(8)).astype(np.float32) / np.float32(1 << 24)
+        return (tokens >= np.float32(1.0)) & (u < self._prob(tokens, np))

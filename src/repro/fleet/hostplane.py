@@ -1,0 +1,279 @@
+"""Host-resident plane for the async engine — W bounded by RAM, not HBM.
+
+The device-resident engines keep the full ``[W, total]`` FlatState plane in
+device memory and run every step program over all W rows at once: at
+IoT/edge cardinality (W=256-1024) the plane plus the vmapped gradient stack
+and mixing temporaries no longer fit. This module keeps theta and velocity as
+**numpy buffers in host RAM** and streams ONLY the active event window's rows
+to the device per step:
+
+- the **local step** gathers the window rows (padded to the next power of two
+  so jit retraces stay O(log W)), runs the same vmapped value_and_grad +
+  fused NAG pass the device engines run (``ops.fused_bufs_elastic_nag`` with
+  a zero elastic coefficient — peer := theta makes the elastic term vanish),
+  and scatters the updated rows back into the host plane;
+- **gossip exchanges** are realized host-side per partition chunk, mirroring
+  the async engine's semantics exactly: an active in-window initiator moves
+  toward its partner's published row; the partner row moves symmetrically
+  ONLY if the partner is also in this window (a worker's resident row is its
+  last *published* step and changes only at its own windows). Robust
+  protocols route through their ``robust_pair_apply`` hook on the chunk
+  slices, so clip/trim coefficients are per-chunk here too;
+- local-update and exchange displacements are both computed from the
+  window's step-t rows and composed additively — the device engines'
+  simultaneity contract (paper §2.3).
+
+All bookkeeping (virtual clocks, staleness, token balances, the exact
+applied-exchange / per-chunk byte accounting) runs in host numpy and is
+mirrored into the small device-side ``ProtocolState`` fields each window, so
+checkpoints and metrics look identical to the device plane's.
+
+Composition limits (validated at construction): NAG + pairwise/no-comm
+protocols; codecs, fault models and delay-model message mode do not compose
+with the host plane yet.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import comm
+from repro.api.state import FlatState
+from repro.common import flat as flat_plane
+from repro.common.pytree import tree_take_leading
+from repro.fleet.partition import partition_ids_np
+from repro.kernels import ops
+from repro.optim.optimizers import OptState, _clip
+from repro.optim.schedule import lr_at
+
+PyTree = Any
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+class HostPlane:
+    """Host-resident execution strategy bound to one
+    :class:`~repro.core.gossip_async.AsyncTrainer`."""
+
+    def __init__(self, trainer):
+        self.tr = trainer
+        self._rows_fns: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, params_stack: PyTree, seed: int = 0) -> FlatState:
+        """FlatState whose theta/velocity buffers are numpy host arrays.
+        Flattens ONE replica on device and tiles it host-side (every engine
+        initializes the fleet to a common replica), so peak device use is one
+        replica, never ``[W, total]``."""
+        tr = self.tr
+        W = tr.num_workers
+        spec = flat_plane.FlatSpec.build(params_stack, leading=1)
+        row_bufs = spec.with_lead(()).flatten(tree_take_leading(params_stack, 0))
+        theta = {b: np.tile(np.asarray(v)[None], (W, 1))
+                 for b, v in row_bufs.items()}
+        mu = {b: np.zeros_like(v) for b, v in theta.items()}
+        proto = tr._impl.init_state(theta)
+        proto = tr._fleet_proto_seed(proto)
+        proto = proto._replace(
+            clocks=jnp.zeros((W,), jnp.float32),
+            worker_steps=jnp.zeros((W,), jnp.int32),
+            stale_time=jnp.zeros((), jnp.float32),
+            stale_steps=jnp.zeros((), jnp.int32),
+            stale_events=jnp.zeros((), jnp.int32))
+        tr.anchor(np.zeros((W,)), np.zeros((W,), np.int64))
+        return FlatState(
+            spec=spec, theta=theta,
+            opt=OptState(jnp.zeros((), jnp.int32), mu, {}),
+            proto=proto,
+            comm=comm.init_comm_state(None, theta),
+            key=jax.random.PRNGKey(seed),
+            step=jnp.zeros((), jnp.int32))
+
+    def _ensure_host(self, state: FlatState) -> FlatState:
+        """Convert device buffers to host numpy in place of the state (a
+        checkpoint restore hands back jnp arrays) — one copy, then resident."""
+        if isinstance(next(iter(state.theta.values())), np.ndarray):
+            return state
+        theta = {b: np.asarray(v) for b, v in state.theta.items()}
+        mu = {b: np.asarray(v) for b, v in state.opt.mu.items()}
+        return state.replace(theta=theta,
+                             opt=OptState(state.opt.step, mu, state.opt.nu))
+
+    # ----------------------------------------------------------- row program
+    def _rows_fn(self, pad: int, spec):
+        """Jitted local step over ``pad`` gathered rows — the device engines'
+        vmapped value_and_grad + fused NAG pass, elastic term zeroed."""
+        fn = self._rows_fns.get(pad)
+        if fn is None:
+            tr = self.tr
+            row_spec = spec.with_lead(())
+            ocfg = tr.optimizer_cfg
+
+            def run(theta_rows, mu_rows, xb, yb, opt_step):
+                def one_loss(bufs, xi, yi):
+                    return tr.loss_fn(row_spec.views(bufs), xi, yi)
+                losses, grads = jax.vmap(jax.value_and_grad(one_loss))(
+                    theta_rows, xb, yb)
+                grads = _clip(ocfg, grads)
+                eta = lr_at(ocfg, opt_step)
+                th, mu = ops.fused_bufs_elastic_nag(
+                    theta_rows, theta_rows, mu_rows, grads,
+                    jnp.zeros((pad,), jnp.float32), eta, ocfg.momentum)
+                return th, mu, losses
+            fn = jax.jit(run)
+            self._rows_fns[pad] = fn
+        return fn
+
+    # ---------------------------------------------------------- event window
+    def window_step(self, state: FlatState, x, y, t, mask, nxt):
+        tr = self.tr
+        W = tr.num_workers
+        state = self._ensure_host(state)
+        proto = state.proto
+        step0 = int(state.step)
+
+        # draws: same pure functions of the pre-step key the device plane uses
+        gate, peers = tr._draw_fn(state.key, state.step)
+        gate, peers = np.asarray(gate), np.asarray(peers)
+        key_new = jax.random.split(state.key, 3)[0]
+        active = gate & mask
+
+        # flow control (host mirror of the traced model — bit-identical draws)
+        tokens_np = None
+        skipped = 0
+        if tr.flow is not None:
+            tokens_np = np.asarray(proto.tokens)
+            allowed = tr.flow.allow_np(step0, tokens_np)
+            skipped = int(np.sum(active & ~allowed))
+            active = active & allowed
+            tokens_np = tr.flow.update(tokens_np, mask, active)
+
+        # ---- local step on the gathered window rows (device) ----------------
+        idx = np.nonzero(mask)[0]
+        n = len(idx)
+        pad = min(_next_pow2(n), W)
+        idx_pad = np.concatenate([idx, np.full(pad - n, idx[0], idx.dtype)])
+        theta_rows = {b: jnp.asarray(v[idx_pad]) for b, v in state.theta.items()}
+        mu_rows = {b: jnp.asarray(v[idx_pad]) for b, v in state.opt.mu.items()}
+        th_new, mu_new, losses = self._rows_fn(pad, state.spec)(
+            theta_rows, mu_rows, x[idx_pad], y[idx_pad], state.opt.step)
+        losses = np.asarray(losses)[:n]
+
+        # ---- exchange displacements from the step-t rows (host, per chunk) --
+        part = tr.partition
+        plan = tr._fleet_plan(state.spec) if part > 1 else None
+        pids = (partition_ids_np(tr.fleet.seed, step0, W, part)
+                if part > 1 else None)
+        coef = float(tr._impl.alpha_at(state.step))
+        robust_pair = getattr(tr._impl, "robust_pair_apply", None)
+        new_clocks = np.where(mask, nxt, tr.clocks)
+        wsteps_new = tr.steps_done + mask
+
+        def chunk_rows(row, c):
+            out = {}
+            for b, buf in state.theta.items():
+                lo, hi = plan.bounds[b][c] if part > 1 else (0, buf.shape[1])
+                out[b] = buf[row, lo:hi].astype(np.float32)
+            return out
+
+        deltas = []          # (row, chunk, {bucket: f32 delta over the chunk})
+        chunk_counts = np.zeros((max(part, 1),), np.int64)
+        seen = set()         # (lo, hi, chunk): mutual initiations i<->k on the
+        n_engaged = stale_s = 0   # same chunk are ONE undirected edge in the
+        stale_t = 0.0             # device plane's mixing matrix — apply once
+        for i in np.nonzero(active)[0]:
+            i = int(i)
+            k = int(peers[i])
+            c = int(pids[i]) if part > 1 else 0
+            # accounting mirrors the device plane: every active initiator is
+            # an engaged participation (self-pairs mix by identity, and both
+            # sides of a mutual edge count their initiation)
+            n_engaged += 1
+            chunk_counts[c] += 1
+            gap = abs(int(wsteps_new[i]) - int(wsteps_new[k]))
+            stale_t += abs(float(new_clocks[i]) - float(new_clocks[k]))
+            stale_s += gap
+            if k == i:
+                continue
+            edge = (min(i, k), max(i, k), c)
+            if edge in seen:
+                continue
+            seen.add(edge)
+            loc_i, loc_k = chunk_rows(i, c), chunk_rows(k, c)
+            if robust_pair is not None:
+                jl = {b: jnp.asarray(v) for b, v in loc_i.items()}
+                jk = {b: jnp.asarray(v) for b, v in loc_k.items()}
+                d_i = {b: np.asarray(v) - loc_i[b]
+                       for b, v in robust_pair(jl, jk, coef, gap=gap).items()}
+                d_k = {b: np.asarray(v) - loc_k[b]
+                       for b, v in robust_pair(jk, jl, coef, gap=gap).items()}
+            else:
+                d_i = {b: coef * (loc_k[b] - loc_i[b]) for b in loc_i}
+                d_k = {b: coef * (loc_i[b] - loc_k[b]) for b in loc_i}
+            deltas.append((i, c, d_i))
+            if mask[k]:
+                # the partner row only moves at its OWN window (its resident
+                # row is its last published step — async engine contract)
+                deltas.append((k, c, d_k))
+
+        # ---- scatter: local rows, then the precomputed displacements --------
+        for b, buf in state.theta.items():
+            buf[idx] = np.asarray(th_new[b])[:n].astype(buf.dtype)
+            state.opt.mu[b][idx] = np.asarray(mu_new[b])[:n]
+        for row, c, d in deltas:
+            for b, buf in state.theta.items():
+                lo, hi = plan.bounds[b][c] if part > 1 else (0, buf.shape[1])
+                buf[row, lo:hi] = (buf[row, lo:hi].astype(np.float32)
+                                   + d[b]).astype(buf.dtype)
+
+        # ---- exact accounting, mirrored into the device-side proto ----------
+        from repro.api.protocols import _bytes_dtype
+        units = min(int(proto.comm_units) + n_engaged, 2 ** 31 - 1)
+        if part > 1:
+            per_chunk = [tr._impl.comm_cost(bc, W).bytes_per_event
+                         for bc in plan.wire_bytes]
+            cu = np.minimum(np.asarray(proto.chunk_units, np.int64)
+                            + chunk_counts, 2 ** 31 - 1)
+            bytes_ = float(np.dot(per_chunk, cu)) / W
+        else:
+            cu = None
+            per_event = tr._impl.comm_cost(tr._wire_bytes(state.spec),
+                                           W).bytes_per_event
+            bytes_ = (per_event / W) * units
+        upd = dict(
+            comm_rounds=proto.comm_rounds + jnp.int32(1 if active.any() else 0),
+            comm_units=jnp.int32(units),
+            comm_bytes=jnp.asarray(bytes_, _bytes_dtype()),
+            clocks=jnp.asarray(new_clocks, jnp.float32),
+            worker_steps=proto.worker_steps + jnp.asarray(mask, jnp.int32),
+            stale_time=proto.stale_time + jnp.float32(stale_t),
+            stale_steps=proto.stale_steps + jnp.int32(stale_s),
+            stale_events=proto.stale_events + jnp.int32(n_engaged))
+        if cu is not None:
+            upd["chunk_units"] = jnp.asarray(cu.astype(np.int32))
+        if tr.flow is not None:
+            upd["tokens"] = jnp.asarray(tokens_np)
+            upd["flow_skipped"] = proto.flow_skipped + jnp.int32(skipped)
+        proto = proto._replace(**upd)
+
+        tr.clocks = new_clocks
+        tr.steps_done = wsteps_new
+        state = state.replace(
+            proto=proto,
+            opt=OptState(state.opt.step + 1, state.opt.mu, state.opt.nu),
+            key=key_new, step=state.step + 1)
+        m = {"loss_mean": float(np.mean(losses)) if n else float("nan"),
+             "loss_max": float(np.max(losses)) if n else float("nan"),
+             "comm_active": int(np.sum(active)),
+             "virtual_time": t, "window_size": n,
+             "stale_time": proto.stale_time,
+             "stale_steps": proto.stale_steps,
+             "stale_events": proto.stale_events}
+        if tr.flow is not None:
+            m["flow_skipped"] = int(proto.flow_skipped)
+        return state, m

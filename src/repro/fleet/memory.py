@@ -1,0 +1,83 @@
+"""Up-front fleet memory validation — fail fast, not deep in init.
+
+``launch.train --workers 256`` used to OOM somewhere inside plane allocation
+or the first jitted step, long after argument parsing. This module estimates
+what a W-worker run actually needs BEFORE any buffer is allocated and raises
+one clear, actionable error instead:
+
+- **device-resident** (``plane="device"``, the sim / async default): the
+  ``[W, total]`` theta + velocity planes, the gradient stack the vmapped
+  value_and_grad materializes, and the mixing/epilogue temporaries all live
+  in device memory at once — ~``DEVICE_RESIDENT_FACTOR`` replica-sizes per
+  worker;
+- **host-resident** (``plane="host"``, repro.fleet): theta + velocity live in
+  host RAM (2 replica-sizes per worker) and only the active event window's
+  rows are streamed to device, so W is bounded by host memory.
+
+On the CPU container "device" memory IS host RAM — the estimate still holds
+because the device-resident step program materializes its W-scaled
+intermediates there. Available memory comes from ``/proc/meminfo``
+(MemAvailable); when unreadable (non-Linux), validation passes with a best
+effort of None.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+# replica-sizes of simultaneously-live device memory per worker for the
+# device-resident engines: theta + mu + grad stack + comm/mixing temporaries
+# + donation headroom (conservative, order-of-magnitude is what matters here)
+DEVICE_RESIDENT_FACTOR = 6.0
+# host-resident plane: theta + mu in host RAM
+HOST_RESIDENT_FACTOR = 2.0
+# refuse above this fraction of MemAvailable (leave room for data, jit, OS)
+SAFETY_FRACTION = 0.7
+
+
+def available_host_bytes() -> Optional[int]:
+    """MemAvailable from /proc/meminfo, or None when unreadable."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return None
+
+
+def plane_bytes(num_workers: int, replica_bytes: int, plane: str) -> int:
+    """Estimated bytes the resident plane (plus step intermediates for the
+    device plane) needs for W workers of ``replica_bytes`` each."""
+    factor = (HOST_RESIDENT_FACTOR if plane == "host"
+              else DEVICE_RESIDENT_FACTOR)
+    return int(num_workers * replica_bytes * factor)
+
+
+def validate_fleet_memory(num_workers: int, replica_bytes: int, plane: str,
+                          *, available: Optional[int] = None,
+                          what: str = "model") -> int:
+    """Raise ValueError (clear, actionable) when a W-worker run of
+    ``replica_bytes``-sized replicas cannot fit the ``plane`` budget; return
+    the estimated need in bytes otherwise. ``available`` overrides the
+    /proc/meminfo probe (tests / benchmarks)."""
+    need = plane_bytes(num_workers, replica_bytes, plane)
+    avail = available_host_bytes() if available is None else available
+    if avail is None:                      # unknown platform: best effort
+        return need
+    budget = int(avail * SAFETY_FRACTION)
+    if need > budget:
+        gib = 1024.0 ** 3
+        hint = (
+            "reduce --workers"
+            if plane == "host" else
+            "run with --plane host (host-resident FlatState, repro.fleet) "
+            "or reduce --workers")
+        raise ValueError(
+            f"workers={num_workers} needs ~{need / gib:.1f} GiB for the "
+            f"{plane}-resident plane of {what} "
+            f"({replica_bytes / gib:.2f} GiB/replica x "
+            f"{HOST_RESIDENT_FACTOR if plane == 'host' else DEVICE_RESIDENT_FACTOR:.0f}), "
+            f"but only ~{budget / gib:.1f} GiB is safely available "
+            f"({avail / gib:.1f} GiB MemAvailable x {SAFETY_FRACTION}); {hint}")
+    return need

@@ -1,0 +1,217 @@
+"""Partitioned gossip exchanges — ship ONE chunk of the plane per exchange.
+
+GoSGD / GossipGraD (and the gossipy exemplar's ``TorchModelPartition``) show
+that gossip exchanges need not carry the whole replica: partial exchanges
+preserve convergence while cutting per-exchange wire cost by the partition
+factor. On the flat plane the natural unit is a contiguous chunk of every
+dtype bucket's ``[total]`` dim: ``partition=P`` splits each bucket into P
+slices ``[lo_c, hi_c)`` with ``lo_c = (c * total) // P`` (exact integer
+split — covers the plane with no overlap for ANY total, lane-aligned or not),
+and each exchange ships chunk ``c = hash(seed, worker, step) % P`` — pure in
+``(seed, worker, step)`` (the ``codec_seeds`` pattern), so sim and async
+schedule the same chunks and the wire parity anchor holds.
+
+Mixing stays the engines' exact matrix realization, restricted per chunk: for
+chunk ``c`` the participation mask is ``active & (chunk_of(worker) == c)``
+(an exchange mixes ONLY the chunk its initiator scheduled), the protocol's
+``mix_matrix`` is built from that mask, and the chunk slice is mixed with the
+same ``apply_mix`` / ``apply_mix_split`` (codec transmit) path the
+full-replica engines use. Robust protocols are partition-aware: clip/trim
+coefficients are computed PER CHUNK (chunk-local ``||theta||`` / ``||delta||``
+norms across buckets), so a Byzantine chunk is bounded against the norms of
+the slice it actually touches, not diluted by the whole plane.
+
+Accounting is exact: per-chunk wire bytes can differ when P does not divide a
+bucket's total (or under a codec's block rounding), so ``comm_bytes`` cannot
+be derived from the scalar ``comm_units`` alone — ``ProtocolState.chunk_units``
+(i32[P], saturating) counts applied exchanges per chunk id, and
+``comm_bytes = sum_c wire_bytes[c] * chunk_units[c] / W`` is derived from it
+every update, never f32-accumulated (the PR-4 exact-accounting contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import protocols as api_protocols
+from repro.faults.models import fault_hash_jnp
+from repro.fleet.flow import SALT_PARTITION
+from repro.hetero.models import hetero_hash
+
+
+def _topology():
+    from repro.core import topology
+    return topology
+
+
+# ---------------------------------------------------------------------------
+# chunk schedule
+# ---------------------------------------------------------------------------
+
+def chunk_bounds(total: int, partition: int) -> Tuple[Tuple[int, int], ...]:
+    """P contiguous ``(lo, hi)`` slices covering ``[0, total)`` exactly:
+    ``lo_c = (c * total) // P``. Sizes differ by at most one element."""
+    P = int(partition)
+    assert P >= 1, partition
+    return tuple(((c * total) // P, ((c + 1) * total) // P) for c in range(P))
+
+
+def partition_ids(seed: int, step, num_workers: int, partition: int) -> jnp.ndarray:
+    """i32[W] chunk id each worker ships at ``step`` — traced (jnp)."""
+    h = fault_hash_jnp(seed, jnp.arange(num_workers), step, SALT_PARTITION)
+    return (h % jnp.uint32(partition)).astype(jnp.int32)
+
+
+def partition_ids_np(seed: int, step: int, num_workers: int,
+                     partition: int) -> np.ndarray:
+    """Host mirror of :func:`partition_ids` (numpy) — bit-identical: the
+    uint32 hash is < 2**32, so the masked-uint64 modulo agrees."""
+    h = hetero_hash(seed, np.arange(num_workers), step, SALT_PARTITION)
+    return (h % np.uint64(partition)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# plan (static layout — built once per FlatSpec, never traced)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Static per-spec partition layout: chunk slices per bucket (aligned by
+    chunk id across buckets — chunk c's wire is every bucket's slice c) and
+    the per-chunk wire bytes feeding the exact ``comm_bytes`` derivation."""
+    partition: int
+    bounds: Dict[str, Tuple[Tuple[int, int], ...]]
+    wire_bytes: Tuple[int, ...]          # per chunk id, summed over buckets
+
+    def col_chunks(self, bucket: str, total: int) -> np.ndarray:
+        """i32[total] column -> chunk-id map for one bucket (static)."""
+        out = np.empty((total,), np.int32)
+        for c, (lo, hi) in enumerate(self.bounds[bucket]):
+            out[lo:hi] = c
+        return out
+
+
+def build_plan(spec, partition: int, codec=None) -> PartitionPlan:
+    """PartitionPlan for ``spec`` under ``codec`` (None = raw slices). Chunks
+    slice the RESIDENT plane (``spec.totals``, lane padding included) — that
+    is what actually rides the wire, exactly like the codec convention."""
+    from repro import comm
+    P = int(partition)
+    bounds = {b: chunk_bounds(int(n), P) for b, n in spec.totals.items()}
+    if codec is None:
+        # raw-wire convention (engines' _wire_bytes): only REAL leaf elements
+        # ship — the lane-padding columns inside [lo, hi) never ride the wire,
+        # so a chunk's bytes are its overlap with the unpadded slot extents
+        # and sum_c wire[c] == the full-replica raw wire exactly
+        wire = tuple(
+            int(sum(
+                max(0, min(bounds[s.bucket][c][1], s.offset + s.size)
+                    - max(bounds[s.bucket][c][0], s.offset))
+                * s.dtype.itemsize
+                for s in spec.slots))
+            for c in range(P))
+    else:
+        wire = comm.wire_partition_bytes(codec, spec, bounds)
+    return PartitionPlan(P, bounds, wire)
+
+
+# ---------------------------------------------------------------------------
+# partitioned comm update (the engines' partition-plane realization)
+# ---------------------------------------------------------------------------
+
+def partitioned_comm_update(impl, key, active, theta_stack, state, *,
+                            step=None, transmit=None, wire_faults=None,
+                            part_ids, plan: PartitionPlan):
+    """Partition-plane counterpart of ``Protocol.comm_update`` for pairwise
+    protocols: same peer sampling, same fault discard, same mixing matrices —
+    restricted chunk by chunk. ``part_ids`` is the i32[W] chunk schedule for
+    this step (:func:`partition_ids`); ``plan`` the static layout.
+
+    Robust protocols (``robust_coeffs`` hook present) get per-chunk clip/trim
+    coefficients: chunk-local row norms are accumulated across buckets, one
+    (scale, thr) pair per chunk id. Returns ``(theta_new, state_new)`` with
+    the exact per-chunk byte accounting folded in.
+    """
+    topo = _topology()
+    W = active.shape[0]
+    P = plan.partition
+    if state.chunk_units is None:
+        raise ValueError(
+            "partitioned comm needs ProtocolState.chunk_units seeded "
+            "(engine init with a FleetConfig(partition>1))")
+    peers = impl.sample_peers(key, W)
+    lost = wire_faults.lost() if wire_faults is not None else None
+    robust = hasattr(impl, "robust_coeffs")
+
+    mixes, engaged = [], []
+    for c in range(P):
+        a_c = active & (part_ids == jnp.int32(c))
+        m = impl.mix_matrix(peers, a_c, step=step)
+        if lost is not None:
+            m = topo.discard_lost(m, lost)
+            engaged.append(a_c & (~lost))
+        else:
+            engaged.append(a_c)
+        mixes.append(m)
+
+    def mixed_chunk(c, sl, tsl):
+        if tsl is None:
+            return topo.apply_mix(mixes[c], sl)
+        return topo.apply_mix_split(mixes[c], sl, tsl)
+
+    new_bufs = {}
+    if not robust:
+        for b, x in theta_stack.items():
+            pieces = []
+            for c, (lo, hi) in enumerate(plan.bounds[b]):
+                tsl = None if transmit is None else transmit[b][:, lo:hi]
+                pieces.append(mixed_chunk(c, x[:, lo:hi], tsl))
+            new_bufs[b] = jnp.concatenate(pieces, axis=1)
+    else:
+        stale = impl.stale_scale(peers, state)
+        theta_sq = [jnp.zeros((W,), jnp.float32) for _ in range(P)]
+        delta_sq = [jnp.zeros((W,), jnp.float32) for _ in range(P)]
+        row_elems = [0] * P
+        deltas = {b: [None] * P for b in theta_stack}
+        for b, x in theta_stack.items():
+            for c, (lo, hi) in enumerate(plan.bounds[b]):
+                sl = x[:, lo:hi].astype(jnp.float32)
+                tsl = None if transmit is None else transmit[b][:, lo:hi]
+                d = mixed_chunk(c, x[:, lo:hi], tsl).astype(jnp.float32) - sl
+                deltas[b][c] = d
+                theta_sq[c] = theta_sq[c] + jnp.sum(sl * sl, axis=1)
+                delta_sq[c] = delta_sq[c] + jnp.sum(d * d, axis=1)
+                row_elems[c] += int(hi - lo)
+        from repro.kernels import ops
+        scales, thrs = [], []
+        for c in range(P):
+            scale, thr = impl.robust_coeffs(theta_sq[c], delta_sq[c],
+                                            max(row_elems[c], 1))
+            if stale is not None:
+                scale = scale * stale
+            scales.append(scale)
+            thrs.append(thr)
+        for b, x in theta_stack.items():
+            pieces = []
+            for c, (lo, hi) in enumerate(plan.bounds[b]):
+                out = ops.robust_flat_apply(x[:, lo:hi], deltas[b][c],
+                                            scales[c], thrs[c])
+                pieces.append(out.astype(x.dtype))
+            new_bufs[b] = jnp.concatenate(pieces, axis=1)
+
+    # exact per-chunk applied-exchange accounting
+    counts = jnp.stack([jnp.sum(e.astype(jnp.int32)) for e in engaged])
+    chunk_units = api_protocols._saturating_units_add(state.chunk_units, counts)
+    units = api_protocols._saturating_units_add(state.comm_units,
+                                                jnp.sum(counts))
+    dt = api_protocols._bytes_dtype()
+    per_event = jnp.asarray(
+        [impl.comm_cost(bc, W).bytes_per_event for bc in plan.wire_bytes], dt)
+    bytes_ = jnp.dot(per_event, chunk_units.astype(dt)) / W
+    rounds = state.comm_rounds + jnp.any(active).astype(jnp.int32)
+    state = impl._count_wire_faults(state, active, wire_faults)
+    return new_bufs, state._replace(comm_rounds=rounds, comm_units=units,
+                                    comm_bytes=bytes_, chunk_units=chunk_units)

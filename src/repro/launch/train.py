@@ -37,9 +37,10 @@ import numpy as np
 
 from repro.api import GossipTrainer, available_engines, available_protocols
 from repro.comm import available_codecs
-from repro.common.config import (FaultConfig, HeteroConfig, MeshConfig,
-                                 OptimizerConfig, ProtocolConfig)
+from repro.common.config import (FaultConfig, FleetConfig, HeteroConfig,
+                                 MeshConfig, OptimizerConfig, ProtocolConfig)
 from repro.faults import available_delay_models, available_fault_models
+from repro.fleet import available_flow_controls
 from repro.hetero import available_time_models
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core.consensus import divergence_metrics
@@ -83,7 +84,10 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         sigma: float = 0.25, slow_worker: int = 0, slow_factor: float = 4.0,
         fault_model: str = "none", fault_rate: float = 0.0,
         fault_frac: float = 0.0, delay_model: str = "none",
-        delay: float = 0.0, timeout: float = 0.0):
+        delay: float = 0.0, timeout: float = 0.0,
+        partition: int = 1, flow_control: str = "none",
+        plane: str = "device", token_capacity: float = 20.0,
+        token_rate: float = 1.0, token_threshold: float = 10.0):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
@@ -97,6 +101,19 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         faults = FaultConfig(fault_model=fault_model, fault_rate=fault_rate,
                              fault_frac=fault_frac, delay_model=delay_model,
                              delay=delay, timeout=timeout, seed=seed)
+    # fleet plane (repro.fleet): only construct a FleetConfig when something
+    # is enabled — the default path keeps every engine trace bit-identical
+    fleet = None
+    if partition != 1 or flow_control != "none" or plane != "device":
+        fleet = FleetConfig(partition=partition, flow_control=flow_control,
+                            plane=plane, token_capacity=token_capacity,
+                            token_rate=token_rate,
+                            token_threshold=token_threshold, seed=seed)
+        if engine == "dist":
+            raise ValueError(
+                'engine="dist" does not take the fleet plane '
+                "(--partition/--flow-control/--plane); use --engine sim or "
+                "--engine async")
 
     def init_fn(key):
         params, _ = tr.init_lm(key, cfg)
@@ -128,6 +145,17 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         # engine="async" additionally takes the heterogeneity config — each
         # facade step then processes one virtual-time event window
         num_workers = workers
+        # validate W against available memory UP FRONT (repro.fleet.memory):
+        # one clear error here beats an OOM deep inside plane allocation or
+        # the first jitted step. The estimate is plane-aware — plane="host"
+        # (async) is bounded by host RAM at 2 replica-sizes per worker.
+        from repro.fleet import validate_fleet_memory
+        abstract, _ = tr.abstract_lm(cfg)
+        replica_bytes = sum(
+            int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(abstract))
+        validate_fleet_memory(num_workers, replica_bytes, plane,
+                              what=f"arch {arch!r}")
         hetero = HeteroConfig(time_model=time_model, mean_step_time=mean_step_time,
                               sigma=sigma, slow_worker=slow_worker,
                               slow_factor=slow_factor, seed=seed)
@@ -138,7 +166,8 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         trainer = GossipTrainer(
             engine=engine, protocol=proto, optimizer=opt, loss_fn=loss_fn,
             num_workers=num_workers, init_fn=init_fn, seed=seed,
-            hetero=hetero if engine == "async" else None, faults=faults)
+            hetero=hetero if engine == "async" else None, faults=faults,
+            fleet=fleet)
         as_batch = lambda b: (b["tokens"], b["labels"])
     state = trainer.init_state(seed)
     batches = lm_batches(cfg, num_workers, global_batch // num_workers,
@@ -207,6 +236,23 @@ def main() -> None:
     ap.add_argument("--timeout", type=float, default=0.0,
                     help="per-exchange timeout before skip-and-retry "
                          "(0 = wait forever)")
+    # mega-fleet plane (repro.fleet) — unknown flow-control names fail at
+    # parse time with the registered list, same contract as --method/--codec
+    ap.add_argument("--partition", type=int, default=1,
+                    help="split each exchange into 1/P of the flat plane "
+                         "(hash-scheduled contiguous chunk, repro.fleet)")
+    ap.add_argument("--flow-control", default="none",
+                    choices=available_flow_controls(),
+                    help="token-account initiation throttling "
+                         "(repro.fleet registry)")
+    ap.add_argument("--plane", default="device", choices=["device", "host"],
+                    help='FlatState residency: "host" keeps the [W, total] '
+                         "plane in host RAM (async engine only) and streams "
+                         "event-window rows to device")
+    ap.add_argument("--token-capacity", type=float, default=20.0)
+    ap.add_argument("--token-rate", type=float, default=1.0)
+    ap.add_argument("--token-threshold", type=float, default=10.0,
+                    help="randomized_token_account aggressiveness threshold")
     ap.add_argument("--p", type=float, default=0.25)
     ap.add_argument("--tau", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=0.5)
@@ -227,7 +273,10 @@ def main() -> None:
         slow_worker=a.slow_worker, slow_factor=a.slow_factor,
         fault_model=a.fault_model, fault_rate=a.fault_rate,
         fault_frac=a.fault_frac, delay_model=a.delay_model,
-        delay=a.delay, timeout=a.timeout)
+        delay=a.delay, timeout=a.timeout,
+        partition=a.partition, flow_control=a.flow_control, plane=a.plane,
+        token_capacity=a.token_capacity, token_rate=a.token_rate,
+        token_threshold=a.token_threshold)
 
 
 if __name__ == "__main__":

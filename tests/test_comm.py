@@ -245,6 +245,36 @@ def test_dropped_exchanges_do_not_count_comm_bytes():
     assert float(st3.comm_bytes) == float(st4.comm_bytes)
 
 
+def test_flow_skipped_exchanges_do_not_count_comm_bytes():
+    """repro.fleet extension of the applied-exchange accounting contract: an
+    initiation skipped by token-account flow control never rides the wire, so
+    it must not appear in ``comm_units``/``comm_bytes`` — only in the
+    ``flow_skipped`` counter. A 3-token non-replenishing account with p=1
+    means every worker initiates exactly 3 times, then skips forever."""
+    from repro.common.config import FleetConfig
+    W, steps = 4, 10
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=1.0,
+                           moving_rate=0.5, topology="uniform")
+    fleet = FleetConfig(flow_control="token_account", token_capacity=3.0,
+                        token_rate=0.0, token_init=3.0)
+    t = GossipTrainer(
+        engine="sim", protocol=proto, fleet=fleet,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=_mlp_loss, num_workers=W,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=16, depth=2,
+                                            num_classes=3)[0])
+    s = t.init_state(0)
+    x, y = _problem()
+    for _ in range(steps):
+        s, m = t.step(s, (x, y))
+    assert int(s.proto.comm_units) == 3 * W
+    assert int(s.proto.flow_skipped) == (steps - 3) * W
+    assert float(s.proto.comm_bytes) == pytest.approx(
+        3 * t.comm_cost().bytes_per_event, rel=1e-6)
+    np.testing.assert_array_equal(np.asarray(s.proto.tokens),
+                                  np.zeros((W,), np.float32))
+
+
 # ---------------------------------------------------------------------------
 # sim engine: codec wiring end-to-end
 # ---------------------------------------------------------------------------
