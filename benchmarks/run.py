@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (alpha_schedule, comm_compress, comm_cost, faults,
                         fleet, fused_step, roofline_bench, serve_live,
-                        straggler, table_4_1, table_4_2, table_4_3, table_a_1)
+                        shard, straggler, table_4_1, table_4_2, table_4_3,
+                        table_a_1)
 
 TABLES = {
     "table_4_1": table_4_1.main,
@@ -30,6 +31,7 @@ TABLES = {
     "serve_live": serve_live.main,
     "faults": faults.main,
     "fleet": fleet.main,
+    "shard": shard.main,
 }
 
 

@@ -1,0 +1,205 @@
+"""Sharded-plane frontiers (repro.shard). Writes ``BENCH_shard.json`` at the
+repo root.
+
+Scenarios:
+
+- **Inert anchor**: the all-default ``ShardConfig`` reproduces the un-sharded
+  ``engine="sim"`` run bit-exactly — params, velocity, comm accounting and
+  the traced PRNG key (the engines add zero trace ops at n_shards=1).
+- **Per-device wire frontier** (the ISSUE 9 headline): with ``n_shards=S``
+  each device ships only its local column shard, so the per-exchange,
+  per-device wire is EXACTLY ``wire / S`` — asserted analytically
+  (``shard_wire_bytes`` sums to the un-sharded wire, padding never billed)
+  and measured live (cumulative ``comm_bytes`` over a training run divide by
+  exactly S), for raw and q8 wires.
+- **Step time**: measured sim steps/sec whole-replica vs sharded (the
+  semantic realization adds only two contiguous reshapes at the codec
+  boundary).
+- **Memory admission evidence**: the real (full-size) ``gemma2_9b`` replica
+  from ``src/repro/configs`` against this machine's MemAvailable —
+  ``validate_fleet_memory`` REFUSES the whole-replica device plane
+  (suggesting ``--shard``) and ADMITS the same fleet at the reported minimal
+  power-of-two ``n_shards``: the big-model config only trains sharded.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO, "BENCH_shard.json")
+
+WORKERS = 8
+SHARDS = (1, 2, 4, 8)
+
+
+def _problem(num_workers=WORKERS, n=64, d=10, classes=3, seed=0):
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(classes, d) * 2
+    y = rng.randint(0, classes, (num_workers, n)).astype(np.int32)
+    x = protos[y] + rng.randn(num_workers, n, d).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def _make_trainer(shard=None, codec=None, num_workers=WORKERS, hidden=24):
+    from repro.api import GossipTrainer
+    from repro.common.config import OptimizerConfig, ProtocolConfig
+    from repro.models import simple
+
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=1.0,
+                           moving_rate=0.5, topology="uniform")
+    return GossipTrainer(
+        engine="sim", protocol=proto, shard=shard, codec=codec,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05,
+                                  momentum=0.9),
+        loss_fn=lambda p, x, y: simple.xent_loss(simple.mlp_logits(p, x), y),
+        num_workers=num_workers,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=10, hidden=hidden,
+                                            depth=2, num_classes=3)[0])
+
+
+def _assert_default_shard_bit_exact(batch, steps):
+    """ShardConfig() (n_shards=1) must reproduce the shard-free run
+    bit-for-bit on the sim engine."""
+    from repro.common.config import ShardConfig
+    base = _make_trainer()
+    withs = _make_trainer(shard=ShardConfig())
+    s0, s1 = base.init_state(0), withs.init_state(0)
+    for _ in range(steps):
+        s0, _ = base.step(s0, batch)
+        s1, _ = withs.step(s1, batch)
+    for k in s0.theta:
+        assert bool(jnp.all(s0.theta[k] == s1.theta[k])), f"theta[{k}] drifted"
+    for k in s0.opt.mu:
+        assert bool(jnp.all(s0.opt.mu[k] == s1.opt.mu[k])), f"mu[{k}] drifted"
+    assert float(s0.proto.comm_bytes) == float(s1.proto.comm_bytes)
+    assert bool(jnp.all(jax.random.key_data(s0.key)
+                        == jax.random.key_data(s1.key)))
+
+
+def _wire_frontier(batch, steps, codec):
+    """Per-device wire bytes and measured comm_bytes, whole-replica vs
+    sharded. Raw wires charge only real leaf elements, so the per-device
+    account is EXACTLY 1/S of the whole-replica run (the headline); codec
+    wires ship whole blocks, so the exact invariant is per-device ==
+    wire(padded plane)/S — the ratio approaches S as the plane outgrows
+    S*block (tiny-model block rounding is visible and reported here)."""
+    from repro import shard as shard_plane
+    from repro.common.config import ShardConfig
+    rows = []
+    base_bytes = None
+    for S in SHARDS:
+        tr = _make_trainer(shard=ShardConfig(n_shards=S) if S > 1 else None,
+                           codec=codec)
+        state = tr.init_state(0)
+        t0 = time.time()
+        for _ in range(steps):
+            state, m = tr.step(state, batch)
+        jax.block_until_ready(state.theta)
+        wall = time.time() - t0
+        wire = tr._backend.wire_bytes()
+        cb = float(m["comm_bytes"])
+        if S == 1:
+            base_bytes = cb
+            ratio = 1.0
+        else:
+            # exact accounting: every fired exchange charges exactly the
+            # analytic per-device shard wire (p=1.0 -> one fire per step)
+            layout = tr._backend.sim.shard_layout
+            per_dev = shard_plane.wire_per_device(layout, state.spec,
+                                                  tr.codec)
+            assert cb == steps * per_dev, (codec, S, cb, per_dev)
+            assert wire == int(per_dev), (codec, S, wire, per_dev)
+            if codec is None:
+                # raw headline: exactly 1/S, padding never billed
+                assert cb * S == base_bytes, (codec, S, cb, base_bytes)
+            ratio = base_bytes / cb
+            assert ratio > 1.0, (codec, S, ratio)
+        rows.append({"n_shards": S, "wire_bytes_per_device": wire,
+                     "comm_bytes": cb, "whole_over_sharded": round(ratio, 3),
+                     "steps_per_sec": round(steps / wall, 1)})
+    return rows
+
+
+def _memory_admission(num_workers=8):
+    """The big-model claim, as data: the FULL gemma2_9b replica (not the
+    reduced test config) is refused whole-replica on this machine and
+    admitted at the minimal power-of-two n_shards."""
+    from repro.configs import get_config
+    from repro.fleet import available_host_bytes, validate_fleet_memory
+    from repro.models import transformer
+
+    cfg = get_config("gemma2_9b")
+    abstract, _ = transformer.abstract_lm(cfg)
+    replica = sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                  for l in jax.tree.leaves(abstract))
+    avail = available_host_bytes()
+    rec = {"arch": cfg.name, "workers": num_workers,
+           "replica_bytes": replica, "mem_available_bytes": avail}
+    if avail is None:
+        rec["skipped"] = "MemAvailable unreadable on this platform"
+        return rec
+    try:
+        validate_fleet_memory(num_workers, replica, "device", what=cfg.name)
+        rec["whole_replica"] = "admitted"
+    except ValueError as e:
+        rec["whole_replica"] = "refused"
+        rec["whole_replica_error"] = str(e)
+    assert rec["whole_replica"] == "refused", (
+        "expected the full gemma2_9b fleet to exceed this container")
+    assert "--shard" in rec["whole_replica_error"]
+    n = 2
+    while n <= 2 ** 20:
+        try:
+            need = validate_fleet_memory(num_workers, replica, "device",
+                                         what=cfg.name, n_shards=n)
+            rec["admitted_n_shards"] = n
+            rec["per_device_need_bytes"] = need
+            break
+        except ValueError:
+            n *= 2
+    assert "admitted_n_shards" in rec, "no n_shards admitted the fleet"
+    return rec
+
+
+def main(quick: bool = True) -> None:
+    steps = 60 if quick else 200
+    x, y = _problem()
+
+    t0 = time.time()
+    _assert_default_shard_bit_exact((x, y), min(steps, 20))
+
+    frontier = {codec or "raw": _wire_frontier((x, y), steps, codec)
+                for codec in (None, "q8")}
+    memory = _memory_admission()
+
+    result = {
+        "workers": WORKERS, "steps": steps,
+        "default_shard_bit_exact": True,
+        "wire_frontier": frontier,
+        "memory_admission": memory,
+        "wall_seconds": round(time.time() - t0, 1),
+        "notes": (
+            "Raw wires charge only real leaf elements — per-device bytes "
+            "are EXACTLY whole/n_shards. Codec wires ship whole blocks: "
+            "per-device == wire(padded plane)/n_shards exactly, with the "
+            "whole_over_sharded ratio approaching n_shards once the plane "
+            "outgrows n_shards*block (this tiny model floors at one block "
+            "per shard). The memory row uses the FULL gemma2_9b replica "
+            "from src/repro/configs against this machine's MemAvailable: "
+            "whole-replica refused (the error suggests --shard), sharded "
+            "admitted."),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,34 @@ def _diff_descriptor(name: str, saved: dict, current: dict) -> None:
             "and fault draws are pure functions of it) or start a fresh run")
 
 
+def _validate_shard_meta(facade, meta) -> None:
+    """Refuse to restore across shard layouts, BEFORE any array is touched:
+    the persisted shard descriptor (n_shards / axes / quantum) must match the
+    live trainer's — the resident buffer widths, codec block streams and
+    device placement are all functions of it. Field-by-field diff via
+    :func:`_diff_descriptor`; the bucket totals themselves are additionally
+    validated by the FlatSpec manifest check during restore."""
+    from repro.shard import shard_descriptor
+    meta = meta or {}
+    shard = facade.shard
+    cur = (shard_descriptor(shard, facade.codec)
+           if shard is not None and shard.enabled() else None)
+    if "shard" in meta:
+        if cur is None:
+            raise ValueError(
+                "checkpoint was written under a sharded plane "
+                f"({meta['shard']!r}) but this trainer is un-sharded — the "
+                "resident buffer widths and codec streams depend on the "
+                "layout; pass the same ShardConfig (shard=...) to resume")
+        _diff_descriptor("shard", meta["shard"], cur)
+    elif cur is not None:
+        raise ValueError(
+            "checkpoint was written WITHOUT a sharded plane but this "
+            "trainer configures one — restoring would reinterpret the "
+            "un-padded buffers under the sharded layout; drop shard= or "
+            "start a fresh run")
+
+
 class GossipTrainer:
     """Protocol-agnostic, engine-agnostic trainer facade.
 
@@ -130,7 +158,7 @@ class GossipTrainer:
                  grad_accum: int = 1, seed: int = 0, fused_update: bool = True,
                  codec: Optional[str] = None,
                  hetero: Optional[HeteroConfig] = None,
-                 faults=None, fleet=None,
+                 faults=None, fleet=None, shard=None,
                  publish_every: Optional[int] = None,
                  snapshot_bus=None):
         backend_cls = registry.get_engine(engine)   # unknown names raise with
@@ -160,6 +188,22 @@ class GossipTrainer:
         # host-resident FlatState plane (async only). None or the all-default
         # config keeps every trace byte-identical to the non-fleet build.
         self.fleet = fleet
+        # the host plane streams RAW host rows — a codec would silently ship
+        # uncompressed bytes while comm accounting claimed the codec wire.
+        # Refuse the composition up front (facade-level, before any backend
+        # is built), matching the other refused compositions.
+        if (fleet is not None and getattr(fleet, "plane", "device") == "host"
+                and self.codec is not None):
+            raise ValueError(
+                "host wires are raw rows; codecs unsupported on "
+                "plane='host' — drop the codec or use plane='device'")
+        # sharded flat plane (repro.shard): a ShardConfig with n_shards>1
+        # splits every dtype bucket's plane dim into equal device shards
+        # (('fsdp','model') mesh axes under engine="dist", semantically under
+        # sim/async) so gossip wire bytes and plane memory scale per-device.
+        # None or the all-default config is inert: every trace and account is
+        # byte-identical to the un-sharded build.
+        self.shard = shard
         # train-while-serve hook (repro.serve): every ``publish_every`` facade
         # steps, :meth:`step` publishes an atomic consensus snapshot of the
         # resident flat buffers onto ``snapshot_bus`` (auto-created when only
@@ -274,6 +318,9 @@ class GossipTrainer:
         from repro.checkpoint import io
         meta = dict(meta or {})
         meta.setdefault("protocol", dataclasses.asdict(self.protocol))
+        if self.shard is not None and self.shard.enabled():
+            from repro.shard import shard_descriptor
+            meta.setdefault("shard", shard_descriptor(self.shard, self.codec))
         meta.update(self._backend.checkpoint_extra())
         io.save_state(path, state, meta=meta,
                       schedule=getattr(self._backend, "sched", None))
@@ -341,7 +388,8 @@ class _SimBackend(_MatchingScheduleMixin):
         self.mesh_cfg = mesh_cfg
         self.sim = SimTrainer(loss_fn, num_workers, facade.protocol, facade.optimizer,
                               fused_update=facade.fused_update,
-                              faults=facade.faults, fleet=facade.fleet)
+                              faults=facade.faults, fleet=facade.fleet,
+                              shard=facade.shard)
         self._pb = None
         self._wire = None
 
@@ -359,7 +407,12 @@ class _SimBackend(_MatchingScheduleMixin):
         self._pb = stacked_param_bytes(stacked)
         self._wire = int(self.facade.impl.wire_stack_bytes(stacked))
         sim_seed = int(seed) if isinstance(seed, (int, np.integer)) else 0
-        return self.sim.init(stacked, sim_seed)
+        state = self.sim.init(stacked, sim_seed)
+        if self.sim.shard_layout is not None:
+            # sharded plane: the facade-level wire account is per-DEVICE
+            # egress — exactly the engine's own (padded wire / n_shards)
+            self._wire = int(self.sim._wire_bytes(state.spec))
+        return state
 
     def step(self, state, batch):
         x, y = (batch["x"], batch["y"]) if isinstance(batch, dict) else batch
@@ -397,8 +450,29 @@ class _SimBackend(_MatchingScheduleMixin):
             return topology.apply_mix(mix, params_stack)
         spec = FlatSpec.build(params_stack, leading=1)
         W = jax.tree.leaves(params_stack)[0].shape[0]
-        hat, _ = comm.roundtrip_bufs(codec, spec.flatten(params_stack),
-                                     comm.codec_seeds(round_idx, jnp.arange(W)))
+        bufs = spec.flatten(params_stack)
+        layout = self.sim.shard_layout
+        shard = self.facade.shard
+        if layout is None and shard is not None and shard.enabled():
+            # parity surface may run before init_state: derive the layout
+            # from the stacked params directly (same spec → same layout)
+            from repro import shard as shard_plane
+            layout = shard_plane.build_layout(spec, shard, codec)
+        if layout is not None:
+            # sharded plane: encode per SHARD row, seeded by the dist
+            # engine's worker*n_shards+shard coordinate (see
+            # SimTrainer._codec_transmit) — the parity surface stays
+            # engine-exact under shard ∘ q8/topk too
+            from repro import shard as shard_plane
+            widths = {k: b.shape[-1] for k, b in bufs.items()}
+            rows = layout.shard_rows(shard_plane.pad_bufs(bufs, layout))
+            hat, _ = comm.roundtrip_bufs(
+                codec, rows,
+                comm.codec_seeds(round_idx, jnp.arange(W * layout.n_shards)))
+            hat = shard_plane.slice_bufs(layout.unshard_rows(hat), widths)
+        else:
+            hat, _ = comm.roundtrip_bufs(
+                codec, bufs, comm.codec_seeds(round_idx, jnp.arange(W)))
         return topology.apply_mix_split(mix, params_stack, spec.unflatten(hat))
 
     def schedule_state(self) -> dict:
@@ -409,6 +483,9 @@ class _SimBackend(_MatchingScheduleMixin):
 
     def checkpoint_extra(self) -> dict:
         return {}  # comm_bytes lives in ProtocolState, saved with the state
+
+    def validate_checkpoint_meta(self, meta) -> None:
+        _validate_shard_meta(self.facade, meta)
 
     def on_checkpoint_loaded(self, state, meta) -> None:
         pass
@@ -443,7 +520,8 @@ class _DistBackend(_MatchingScheduleMixin):
         tcfg = TrainConfig(protocol=facade.protocol, optimizer=facade.optimizer,
                            fused_update=facade.fused_update)
         self.trainer = DistTrainer(mesh, mesh_cfg, model_cfg, tcfg, init_fn,
-                                   params_axes, loss_fn=loss_fn, grad_accum=grad_accum)
+                                   params_axes, loss_fn=loss_fn,
+                                   grad_accum=grad_accum, shard=facade.shard)
         if global_batch is not None:
             self.trainer.set_shape(global_batch, seq_len or 4096)
         self.sched = GossipSchedule(facade.protocol, self.num_workers, seed=seed + 1,
@@ -460,6 +538,13 @@ class _DistBackend(_MatchingScheduleMixin):
         # the collective, else the raw parameter bytes.
         self._pb = stacked_param_bytes(self.trainer.param_shapes)
         self._wire = int(facade.impl.wire_stack_bytes(self.trainer.param_shapes))
+        if self.trainer.shard_layout is not None:
+            # sharded plane: account per-DEVICE egress (each device ships
+            # only its local shard of the wire)
+            from repro.shard import wire_per_device
+            self._wire = int(wire_per_device(self.trainer.shard_layout,
+                                             self.trainer.flat_spec,
+                                             facade.codec))
         self._cost = facade.impl.comm_cost(self._wire, self.num_workers)
         # host mirror of state.step: polling the schedule with it (instead of
         # int(state.step)) keeps the hot loop free of per-step device syncs.
@@ -531,6 +616,9 @@ class _DistBackend(_MatchingScheduleMixin):
         # keep the cumulative egress metric instead of restarting at 0
         return {"comm_bytes": float(self.comm_bytes)}
 
+    def validate_checkpoint_meta(self, meta) -> None:
+        _validate_shard_meta(self.facade, meta)
+
     def on_checkpoint_loaded(self, state, meta) -> None:
         self._host_step = int(state.step)   # one sync, at load time only
         if meta and "comm_bytes" in meta:
@@ -565,7 +653,8 @@ class _AsyncBackend(_SimBackend):
         self.sim = AsyncTrainer(loss_fn, num_workers, facade.protocol,
                                 facade.optimizer, hetero=hetero,
                                 fused_update=facade.fused_update,
-                                faults=facade.faults, fleet=facade.fleet)
+                                faults=facade.faults, fleet=facade.fleet,
+                                shard=facade.shard)
         self._pb = None
         self._wire = None
 
@@ -597,6 +686,7 @@ class _AsyncBackend(_SimBackend):
 
     def validate_checkpoint_meta(self, meta) -> None:
         self._validate_fleet(meta)
+        _validate_shard_meta(self.facade, meta)
 
     def on_checkpoint_loaded(self, state, meta) -> None:
         hc = (meta or {}).get("hetero_clock")

@@ -393,6 +393,38 @@ class FleetConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardConfig:
+    """Sharded flat plane (repro.shard) — split each dtype bucket's ``total``
+    dim into ``n_shards`` equal device shards while the replica dim keeps
+    sharding over ('pod','worker') as today.
+
+    On the distributed engine the shards live on the ``axes`` mesh axes
+    (``n_shards`` must equal the product of those axis sizes), so the gossip
+    ppermute ships only the LOCAL shard — per-device wire bytes scale with
+    ``1/n_shards``, which is what admits the big-model configs
+    (``src/repro/configs``) that a whole-replica plane refuses. The sim/async
+    engines realize the same layout semantically: per-shard codec encoding
+    (bit-identical to the dist wire) and per-device wire accounting on the
+    shard-padded plane.
+
+    The all-default config is INERT: ``n_shards=1`` adds ZERO trace ops and
+    reproduces the un-sharded engines bit-exactly (params, velocity, comm
+    accounting, PRNG key) — the FleetConfig anchor pattern.
+    """
+    # number of equal column shards of every dtype bucket; each bucket total
+    # is padded up to a multiple of n_shards * quantum (quantum = the codec
+    # block when a codec rides the wire, else the LANE width) so shard
+    # boundaries always fall on codec-block boundaries.
+    n_shards: int = 1
+    # mesh axes the plane dim shards over (dist engine), outermost first
+    axes: Tuple[str, ...] = ("fsdp", "model")
+
+    def enabled(self) -> bool:
+        """True if the plane is actually sharded (inert at n_shards=1)."""
+        return self.n_shards != 1
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "nag"                # sgd | nag | adamw  (paper uses NAG, Alg. 5)
     learning_rate: float = 1e-3

@@ -107,10 +107,11 @@ class AsyncTrainer(SimTrainer):
     def __init__(self, loss_fn: Callable, num_workers: int,
                  protocol: ProtocolConfig, optimizer: OptimizerConfig,
                  hetero: Optional[HeteroConfig] = None,
-                 fused_update: bool = True, faults=None, fleet=None):
+                 fused_update: bool = True, faults=None, fleet=None,
+                 shard=None):
         super().__init__(loss_fn, num_workers, protocol, optimizer,
                          fused_update=fused_update, faults=faults,
-                         fleet=fleet)
+                         fleet=fleet, shard=shard)
         if not self._impl.barrier_free:
             raise ValueError(
                 f"protocol {protocol.method!r} needs a global step barrier "

@@ -83,7 +83,7 @@ def _gate_and_coef(cfg: ProtocolConfig, my_active, peer_active):
 
 def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
                      param_specs: PyTree, schedule_kind: str = "hypercube",
-                     mode: str = "apply"):
+                     mode: str = "apply", shard=None):
     """Build gossip_step(params_stack, active[Wtot], round_idx).
 
     params_stack leaves: [Wtot_local..., ...] sharded per param_specs (leading
@@ -115,6 +115,15 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
     Stateful codecs (topk error feedback) additionally take/return the
     residual tree: every mode's signature gains a ``residual`` argument after
     the params and a residual output at the end.
+
+    ``shard`` (a ShardConfig with ``enabled()``): the plane dim is ALSO
+    sharded over ``shard.axes`` — each shard_map instance holds
+    ``[1, shard_size]`` of the plane, the ppermute still runs along
+    'worker'/'pod' (instances with equal shard coordinates exchange, so the
+    wire is exactly the local shard), and the codec's rounding-seed
+    coordinate becomes ``worker * n_shards + shard_index`` — the stream the
+    sim engine replicates with its shard-rows reshape, keeping the wires
+    bit-identical.
     """
     assert mode in ("apply", "peer", "fused"), mode
     schedule = build_schedule(mesh_cfg, schedule_kind)
@@ -133,6 +142,13 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
     # shard-local bytes only.
     manual = set(mesh.axis_names)
 
+    sharded = shard is not None and shard.enabled()
+    if sharded:
+        missing = [a for a in shard.axes if a not in mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"shard axes {missing} not in mesh axes {mesh.axis_names}")
+
     def _worker_index():
         """Global worker index of the local shard (inside shard_map) — the
         codec's rounding-seed coordinate, matching the sim engine's
@@ -143,6 +159,18 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
         if "worker" in mesh.axis_names:
             idx = idx + jax.lax.axis_index("worker")
         return idx
+
+    def _seed_index():
+        """Codec seed coordinate: the worker index, or — with the sharded
+        plane — ``worker * n_shards + shard_index`` with the shard index
+        folded row-major over ``shard.axes`` (GSPMD's tuple-axes order), so
+        it matches the sim engine's shard-rows ``jnp.arange(W * S)``."""
+        if not sharded:
+            return _worker_index()
+        s_idx = jnp.int32(0)
+        for ax in shard.axes:
+            s_idx = s_idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        return _worker_index() * shard.n_shards + s_idx
 
     def switch_exchange(bufs, act, round_idx):
         """ONE ppermute per dtype bucket (gate in the carrier's tail element):
@@ -180,7 +208,7 @@ def make_gossip_step(mesh: Mesh, mesh_cfg: MeshConfig, cfg: ProtocolConfig,
         if codec is None:
             peer, peer_act = switch_exchange(bufs, act, round_idx)
             return peer, peer_act, None
-        seeds = jnp.reshape(comm.codec_seeds(round_idx, _worker_index()), (1,))
+        seeds = jnp.reshape(comm.codec_seeds(round_idx, _seed_index()), (1,))
         res_bufs = spec.flatten(residual) if stateful else {}
         wires, new_res = {}, {}
         for k, b in bufs.items():

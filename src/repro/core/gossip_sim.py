@@ -55,7 +55,8 @@ class SimTrainer:
 
     def __init__(self, loss_fn: Callable, num_workers: int,
                  protocol: ProtocolConfig, optimizer: OptimizerConfig,
-                 fused_update: bool = True, faults=None, fleet=None):
+                 fused_update: bool = True, faults=None, fleet=None,
+                 shard=None):
         self.loss_fn = loss_fn
         self.num_workers = num_workers
         self.protocol = protocol
@@ -124,6 +125,28 @@ class SimTrainer:
                     "plane='host' (host-resident FlatState) requires the "
                     "async engine — use GossipTrainer(engine='async') / "
                     "launch.train --engine async")
+        # sharded plane (repro.shard): bucket totals split into equal device
+        # shards — the sim engine realizes the per-shard wire semantically
+        # (shard-rows reshape at the codec boundary + per-device accounting).
+        # The all-default ShardConfig is INERT: no layout is built, no trace
+        # ops are added, so the un-sharded step program is reproduced
+        # bit-exactly by construction.
+        self.shard = shard
+        self.shard_layout = None
+        if shard is not None and shard.enabled():
+            if not self._impl.pairwise:
+                raise ValueError(
+                    f"sharded plane (repro.shard) needs a pairwise protocol; "
+                    f"{protocol.method!r} is not pairwise")
+            if faults is not None:
+                raise ValueError(
+                    "the fault plane (repro.faults) garbles/checksums whole "
+                    "replica wires; it does not compose with the sharded "
+                    "plane (repro.shard) yet")
+            if fleet is not None and fleet.enabled() and fleet.plane == "host":
+                raise ValueError(
+                    "plane='host' streams whole host rows; it does not "
+                    "compose with the sharded plane (repro.shard) yet")
         # donate the resident state so the flat buffers update in place
         # instead of doubling HBM residency every step
         self._step_fn = jax.jit(self._step, donate_argnums=(0,),
@@ -134,17 +157,34 @@ class SimTrainer:
         shape math, no cache): the resident buffers carry lane padding, so
         deriving raw bytes from their shapes would over-count — the raw size
         sums the unpadded slot sizes; a codec wire is genuinely the padded
-        plane (what actually ships)."""
+        plane (what actually ships). With a sharded plane the account is
+        per-DEVICE egress: each device ships only its local shard, so the
+        whole-plane wire divides exactly by n_shards (equal quantum-aligned
+        shards; raw per-shard wires sum exactly to the un-sharded wire)."""
         if self.codec is None:
-            return float(sum(s.size * s.dtype.itemsize for s in spec.slots))
-        return float(comm.wire_param_bytes(self.codec, spec))
+            wire = float(sum(s.size * s.dtype.itemsize for s in spec.slots))
+        else:
+            wire = float(comm.wire_param_bytes(self.codec, spec))
+        if self.shard_layout is not None:
+            wire /= self.shard_layout.n_shards
+        return wire
 
     def _fleet_plan(self, spec: flat_plane.FlatSpec):
-        """Static PartitionPlan for ``spec`` (cached — spec is hashable)."""
+        """Static PartitionPlan for ``spec`` (cached — spec is hashable).
+        Partition chunks are defined on the GLOBAL (shard-padded) totals and
+        realized on local shards: with a sharded plane each device ships its
+        1/n_shards columns of the scheduled chunk, so the plan's per-chunk
+        wire accounts scale by 1/n_shards (mean per-device egress)."""
         plan = self._plans.get(spec)
         if plan is None:
+            import dataclasses as _dc
+
             from repro.fleet.partition import build_plan
             plan = build_plan(spec, self.partition, self.codec)
+            if self.shard_layout is not None:
+                S = self.shard_layout.n_shards
+                plan = _dc.replace(
+                    plan, wire_bytes=tuple(w / S for w in plan.wire_bytes))
             self._plans[spec] = plan
         return plan
 
@@ -165,6 +205,17 @@ class SimTrainer:
         ``params_stack`` pytree is not referenced again."""
         spec = flat_plane.FlatSpec.build(params_stack, leading=1)
         theta = spec.flatten(params_stack)
+        if self.shard is not None and self.shard.enabled():
+            # sharded plane: pad every bucket to n_shards equal quantum-
+            # aligned shards (tail-only, so leaf views are untouched) and
+            # re-bind the spec to the padded totals — the resident state,
+            # optimizer/protocol/residual buffers all follow the padded
+            # widths from here on.
+            from repro import shard as shard_plane
+            self.shard_layout = shard_plane.build_layout(
+                spec, self.shard, self.codec)
+            spec = shard_plane.padded_spec(spec, self.shard_layout)
+            theta = shard_plane.pad_bufs(theta, self.shard_layout)
         proto = self._impl.init_state(theta)
         if self.fault_model is not None:
             # seed the fault counters so the state pytree structure is stable
@@ -196,21 +247,47 @@ class SimTrainer:
         plane's Byzantine garbling hook. ``col_gate`` (optional,
         ``{bucket: bool[W, N]}``) restricts the residual advance per COLUMN
         too — the partition plane's gate: only the chunk a worker actually
-        shipped carries its wire mass forward."""
+        shipped carries its wire mass forward.
+
+        With a sharded plane (repro.shard) the codec runs per SHARD, not per
+        replica: the ``[W, total]`` buffers reshape to ``[W*S, shard_size]``
+        rows (contiguous — shard boundaries are codec-block aligned by
+        layout construction, so the block layout is IDENTICAL to the
+        whole-plane encode) and row ``w*S + s`` seeds from worker-coordinate
+        ``w*S + s`` — exactly the stream a sharded dist device uses, which is
+        what keeps sim and dist wires bit-identical under shard ∘ q8/topk."""
         codec = self.codec
+        layout = self.shard_layout
         if publish is None:
             publish = state.theta
 
         def fire():
-            seeds = comm.codec_seeds(state.proto.comm_rounds,
-                                     jnp.arange(self.num_workers))
-            gate = jnp.asarray(active).reshape(-1, 1)
-            if col_gate is not None:
-                gate = {k: gate & col_gate[k] for k in publish}
-            hat, new_res = comm.roundtrip_bufs(
-                codec, publish, seeds,
-                state.comm.residual if codec.stateful else None,
-                gate=gate)
+            res = state.comm.residual if codec.stateful else None
+            gate = jnp.asarray(active)
+            if layout is not None:
+                S = layout.n_shards
+                publish_w = layout.shard_rows(publish)
+                res = layout.shard_rows(res) if res is not None else None
+                seeds = comm.codec_seeds(
+                    state.proto.comm_rounds,
+                    jnp.arange(self.num_workers * S))
+                gate = jnp.repeat(gate, S).reshape(-1, 1)
+                if col_gate is not None:
+                    gate = {k: gate & layout.shard_rows(col_gate)[k]
+                            for k in publish_w}
+            else:
+                publish_w = publish
+                seeds = comm.codec_seeds(state.proto.comm_rounds,
+                                         jnp.arange(self.num_workers))
+                gate = gate.reshape(-1, 1)
+                if col_gate is not None:
+                    gate = {k: gate & col_gate[k] for k in publish_w}
+            hat, new_res = comm.roundtrip_bufs(codec, publish_w, seeds, res,
+                                               gate=gate)
+            if layout is not None:
+                hat = layout.unshard_rows(hat)
+                if new_res is not None:
+                    new_res = layout.unshard_rows(new_res)
             # decode reconstructs in f32; match the storage dtype so both
             # cond branches agree (and mixing casts exactly like the wire)
             hat = {k: v.astype(state.theta[k].dtype) for k, v in hat.items()}

@@ -46,38 +46,53 @@ def available_host_bytes() -> Optional[int]:
     return None
 
 
-def plane_bytes(num_workers: int, replica_bytes: int, plane: str) -> int:
+def plane_bytes(num_workers: int, replica_bytes: int, plane: str,
+                n_shards: int = 1) -> int:
     """Estimated bytes the resident plane (plus step intermediates for the
-    device plane) needs for W workers of ``replica_bytes`` each."""
+    device plane) needs for W workers of ``replica_bytes`` each. With a
+    sharded plane (repro.shard, ``n_shards > 1``) each device holds only its
+    ``1/n_shards`` column shard of every buffer, so the per-device footprint
+    divides accordingly (the shard padding is at most one codec block per
+    bucket — noise next to the factor-of-6 intermediates estimate)."""
     factor = (HOST_RESIDENT_FACTOR if plane == "host"
               else DEVICE_RESIDENT_FACTOR)
-    return int(num_workers * replica_bytes * factor)
+    return int(num_workers * replica_bytes * factor / max(1, n_shards))
 
 
 def validate_fleet_memory(num_workers: int, replica_bytes: int, plane: str,
                           *, available: Optional[int] = None,
-                          what: str = "model") -> int:
+                          what: str = "model", n_shards: int = 1) -> int:
     """Raise ValueError (clear, actionable) when a W-worker run of
     ``replica_bytes``-sized replicas cannot fit the ``plane`` budget; return
     the estimated need in bytes otherwise. ``available`` overrides the
-    /proc/meminfo probe (tests / benchmarks)."""
-    need = plane_bytes(num_workers, replica_bytes, plane)
+    /proc/meminfo probe (tests / benchmarks). ``n_shards`` (repro.shard):
+    validate the PER-DEVICE footprint of the sharded plane — big-model
+    configs that shard fits are admitted, and the un-sharded refusal points
+    at ``--shard``."""
+    need = plane_bytes(num_workers, replica_bytes, plane, n_shards)
     avail = available_host_bytes() if available is None else available
     if avail is None:                      # unknown platform: best effort
         return need
     budget = int(avail * SAFETY_FRACTION)
     if need > budget:
         gib = 1024.0 ** 3
-        hint = (
-            "reduce --workers"
-            if plane == "host" else
-            "run with --plane host (host-resident FlatState, repro.fleet) "
-            "or reduce --workers")
+        if plane == "host":
+            hint = "reduce --workers"
+        elif n_shards > 1:
+            hint = ("raise --shard (more plane shards per replica) or "
+                    "reduce --workers")
+        else:
+            hint = ("shard the plane with --shard N (repro.shard: 1/N of "
+                    "every buffer per device), run with --plane host "
+                    "(host-resident FlatState, repro.fleet) or reduce "
+                    "--workers")
+        shard_note = f" / {n_shards} shards" if n_shards > 1 else ""
         raise ValueError(
             f"workers={num_workers} needs ~{need / gib:.1f} GiB for the "
             f"{plane}-resident plane of {what} "
             f"({replica_bytes / gib:.2f} GiB/replica x "
-            f"{HOST_RESIDENT_FACTOR if plane == 'host' else DEVICE_RESIDENT_FACTOR:.0f}), "
+            f"{HOST_RESIDENT_FACTOR if plane == 'host' else DEVICE_RESIDENT_FACTOR:.0f}"
+            f"{shard_note}), "
             f"but only ~{budget / gib:.1f} GiB is safely available "
             f"({avail / gib:.1f} GiB MemAvailable x {SAFETY_FRACTION}); {hint}")
     return need

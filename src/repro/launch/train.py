@@ -38,7 +38,8 @@ import numpy as np
 from repro.api import GossipTrainer, available_engines, available_protocols
 from repro.comm import available_codecs
 from repro.common.config import (FaultConfig, FleetConfig, HeteroConfig,
-                                 MeshConfig, OptimizerConfig, ProtocolConfig)
+                                 MeshConfig, OptimizerConfig, ProtocolConfig,
+                                 ShardConfig)
 from repro.faults import available_delay_models, available_fault_models
 from repro.fleet import available_flow_controls
 from repro.hetero import available_time_models
@@ -87,7 +88,8 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         delay: float = 0.0, timeout: float = 0.0,
         partition: int = 1, flow_control: str = "none",
         plane: str = "device", token_capacity: float = 20.0,
-        token_rate: float = 1.0, token_threshold: float = 10.0):
+        token_rate: float = 1.0, token_threshold: float = 10.0,
+        shard: int = 1):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
@@ -114,6 +116,9 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
                 'engine="dist" does not take the fleet plane '
                 "(--partition/--flow-control/--plane); use --engine sim or "
                 "--engine async")
+    # sharded plane (repro.shard): only construct a ShardConfig when the
+    # plane is actually split — None keeps every engine trace bit-identical
+    shard_cfg = ShardConfig(n_shards=shard) if shard != 1 else None
 
     def init_fn(key):
         params, _ = tr.init_lm(key, cfg)
@@ -137,7 +142,8 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         trainer = GossipTrainer(
             engine="dist", protocol=proto, optimizer=opt,
             mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=cfg, init_fn=init_fn,
-            params_axes=axes, global_batch=global_batch, seq_len=seq, seed=seed)
+            params_axes=axes, global_batch=global_batch, seq_len=seq, seed=seed,
+            shard=shard_cfg)
         num_workers = mesh_cfg.num_workers
         as_batch = lambda b: b
     else:
@@ -155,7 +161,7 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
             int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
             for l in jax.tree.leaves(abstract))
         validate_fleet_memory(num_workers, replica_bytes, plane,
-                              what=f"arch {arch!r}")
+                              what=f"arch {arch!r}", n_shards=shard)
         hetero = HeteroConfig(time_model=time_model, mean_step_time=mean_step_time,
                               sigma=sigma, slow_worker=slow_worker,
                               slow_factor=slow_factor, seed=seed)
@@ -167,7 +173,7 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
             engine=engine, protocol=proto, optimizer=opt, loss_fn=loss_fn,
             num_workers=num_workers, init_fn=init_fn, seed=seed,
             hetero=hetero if engine == "async" else None, faults=faults,
-            fleet=fleet)
+            fleet=fleet, shard=shard_cfg)
         as_batch = lambda b: (b["tokens"], b["labels"])
     state = trainer.init_state(seed)
     batches = lm_batches(cfg, num_workers, global_batch // num_workers,
@@ -249,6 +255,13 @@ def main() -> None:
                     help='FlatState residency: "host" keeps the [W, total] '
                          "plane in host RAM (async engine only) and streams "
                          "event-window rows to device")
+    # sharded flat plane (repro.shard): big-model gossip with 1/N of every
+    # buffer (and 1/N of the gossip wire) per device
+    ap.add_argument("--shard", type=int, default=1,
+                    help="split the flat plane into N device shards "
+                         "(repro.shard): per-device plane memory and gossip "
+                         "wire bytes scale with 1/N; engine='dist' realizes "
+                         "the shards over the ('fsdp','model') mesh axes")
     ap.add_argument("--token-capacity", type=float, default=20.0)
     ap.add_argument("--token-rate", type=float, default=1.0)
     ap.add_argument("--token-threshold", type=float, default=10.0,
@@ -276,7 +289,7 @@ def main() -> None:
         delay=a.delay, timeout=a.timeout,
         partition=a.partition, flow_control=a.flow_control, plane=a.plane,
         token_capacity=a.token_capacity, token_rate=a.token_rate,
-        token_threshold=a.token_threshold)
+        token_threshold=a.token_threshold, shard=a.shard)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""repro.shard — shard the flat plane itself.
+
+Splits each dtype bucket's ``total`` dim into equal device shards (realized
+over the ('fsdp','model') mesh axes in the distributed engine, semantically
+in the sim/async engines) so gossip wire bytes and plane memory scale
+per-device instead of per-model. See :mod:`repro.shard.layout` for the
+layout contract and ``ROADMAP.md`` for the architecture section.
+"""
+from repro.shard.layout import (
+    ShardLayout,
+    build_layout,
+    pad_bufs,
+    padded_spec,
+    shard_descriptor,
+    shard_manifest,
+    shard_quantum,
+    shard_wire_bytes,
+    slice_bufs,
+    wire_per_device,
+)
+
+__all__ = [
+    "ShardLayout", "build_layout", "padded_spec", "pad_bufs", "slice_bufs",
+    "shard_manifest", "shard_wire_bytes", "wire_per_device",
+    "shard_descriptor", "shard_quantum",
+]

@@ -1,0 +1,202 @@
+"""Shard-aware flat-plane layout — split each dtype bucket's ``total`` dim
+into ``n_shards`` equal device shards.
+
+The flat plane (:mod:`repro.common.flat`) is one lane-aligned ``[W, total]``
+buffer per dtype bucket. A :class:`ShardLayout` splits every bucket's
+``total`` dim into ``n_shards`` EQUAL contiguous column shards so the
+distributed engine can shard the plane dim over the ('fsdp','model') mesh
+axes (GSPMD/shard_map need even divisibility) and so the sim/async engines
+can realize the identical wire semantically. Three invariants everything
+downstream leans on:
+
+- **Equal, quantum-aligned shards.** Each bucket total is padded up to a
+  multiple of ``n_shards * quantum`` where ``quantum`` is the codec block
+  when a codec rides the wire (codec blocks are lane multiples by contract),
+  else the LANE width. Shard boundaries therefore always fall on codec-block
+  boundaries: a q8/topk block never straddles two shards, so encoding the
+  plane per shard (what a sharded device does locally) produces the SAME
+  block layout as encoding the whole padded plane — the sim and dist wires
+  stay bit-identical.
+- **Leaf views resolve across shard boundaries.** Shard padding is appended
+  at each bucket's TAIL only; every :class:`~repro.common.flat.LeafSlot`
+  keeps its offset, so ``unflatten``/``views`` slice the padded buffers
+  unchanged — a leaf that straddles a shard boundary is just a column range
+  of the (globally contiguous) buffer. Zero-size shards (a tiny bucket whose
+  real extent ends before a shard's columns begin) and odd remainders are
+  exact: the manifest records the real-element overlap per shard, and the
+  raw-wire accounting charges ONLY real leaf elements — lane/shard padding
+  never rides the raw wire.
+- **Exact per-device wire accounting.** ``shard_wire_bytes`` gives each
+  shard's wire (raw: real-element overlap with the shard's columns; codec:
+  the codec wire of one ``shard_size`` row — equal for every shard), and
+  ``wire_per_device`` their mean — the per-exchange, per-DEVICE egress the
+  engines account in ``comm_bytes`` when a ShardConfig is active. Raw
+  per-shard wires sum exactly to the un-sharded raw wire, so the mean is
+  exactly ``raw / n_shards``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import flat as flat_plane
+from repro.common.config import ShardConfig
+
+__all__ = [
+    "ShardLayout", "build_layout", "padded_spec", "pad_bufs", "slice_bufs",
+    "shard_manifest", "shard_wire_bytes", "wire_per_device",
+    "shard_descriptor", "shard_quantum",
+]
+
+
+def shard_quantum(codec=None, align: int = flat_plane.LANE) -> int:
+    """Shard-size granularity: the codec block when a codec rides the wire
+    (a lane multiple by the Codec contract), else the lane width."""
+    if codec is not None:
+        return int(codec.block)
+    return int(align)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Static shard layout of a FlatSpec (built once per trainer, never
+    traced). ``totals`` are the shard-PADDED bucket totals; every bucket's
+    ``shard_sizes[b] = totals[b] // n_shards`` is a ``quantum`` multiple."""
+    n_shards: int
+    axes: Tuple[str, ...]
+    quantum: int
+    totals: Dict[str, int]
+    shard_sizes: Dict[str, int]
+    bounds: Dict[str, Tuple[Tuple[int, int], ...]]   # bucket -> per-shard (lo, hi)
+
+    def __hash__(self):
+        return hash((self.n_shards, self.axes, self.quantum,
+                     tuple(sorted(self.totals.items()))))
+
+    # ------------------------------------------------------------ row views
+    def shard_rows(self, bufs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """``[W, totals[b]]`` -> ``[W * n_shards, shard_sizes[b]]``: row
+        ``w * n_shards + s`` is worker w's shard s — the contiguous reshape
+        that makes per-shard codec encoding a per-ROW encoding (the existing
+        [rows, N] codec surface), with rows ordered exactly like the dist
+        engine's ``worker * n_shards + shard_index`` seed coordinate."""
+        S = self.n_shards
+        return {k: b.reshape(b.shape[0] * S, self.shard_sizes[k])
+                for k, b in bufs.items()}
+
+    def unshard_rows(self, bufs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Inverse of :meth:`shard_rows`."""
+        S = self.n_shards
+        return {k: b.reshape(b.shape[0] // S, S * b.shape[1])
+                for k, b in bufs.items()}
+
+
+def build_layout(spec: flat_plane.FlatSpec, shard: ShardConfig,
+                 codec=None) -> ShardLayout:
+    """ShardLayout for ``spec`` under ``shard`` (and the active codec, which
+    fixes the quantum). Works for ANY (total, n_shards) — tiny buckets simply
+    get zero-real-element tail shards."""
+    S = int(shard.n_shards)
+    if S < 1:
+        raise ValueError(f"n_shards must be >= 1, got {shard.n_shards}")
+    q = shard_quantum(codec, spec.align)
+    totals = {b: flat_plane._align(int(n), S * q) for b, n in spec.totals.items()}
+    sizes = {b: t // S for b, t in totals.items()}
+    bounds = {b: tuple((s * sizes[b], (s + 1) * sizes[b]) for s in range(S))
+              for b in totals}
+    return ShardLayout(S, tuple(shard.axes), q, totals, sizes, bounds)
+
+
+def padded_spec(spec: flat_plane.FlatSpec, layout: ShardLayout) -> flat_plane.FlatSpec:
+    """``spec`` re-bound to the shard-padded bucket totals. Slots are
+    untouched (shard padding is tail-only), so views/unflatten still resolve
+    every leaf — including leaves straddling shard boundaries."""
+    return dataclasses.replace(spec, totals=dict(layout.totals))
+
+
+def pad_bufs(bufs: Dict[str, jax.Array], layout: ShardLayout) -> Dict[str, jax.Array]:
+    """Zero-pad each bucket's tail columns up to the shard-padded totals
+    (identity when already padded)."""
+    out = {}
+    for k, b in bufs.items():
+        pad = layout.totals[k] - b.shape[-1]
+        assert pad >= 0, (k, b.shape, layout.totals[k])
+        out[k] = b if pad == 0 else jnp.pad(
+            b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+    return out
+
+
+def slice_bufs(bufs: Dict[str, jax.Array],
+               totals: Dict[str, int]) -> Dict[str, jax.Array]:
+    """Drop the shard-padding tail columns back to ``totals`` (the inverse
+    boundary of :func:`pad_bufs` for parity/oracle surfaces)."""
+    return {k: b[..., :totals[k]] for k, b in bufs.items()}
+
+
+# ---------------------------------------------------------------------------
+# manifest + exact wire accounting
+# ---------------------------------------------------------------------------
+
+def shard_manifest(layout: ShardLayout, spec: flat_plane.FlatSpec) -> dict:
+    """JSON-able per-shard manifest: column bounds and REAL element counts
+    (slot-overlap, excluding lane/shard padding) per bucket per shard —
+    zero-size and odd-remainder shards appear exactly as such."""
+    real = {b: [0] * layout.n_shards for b in layout.totals}
+    for s in spec.slots:
+        for i, (lo, hi) in enumerate(layout.bounds[s.bucket]):
+            real[s.bucket][i] += max(0, min(hi, s.offset + s.size) - max(lo, s.offset))
+    return {
+        "n_shards": layout.n_shards,
+        "quantum": layout.quantum,
+        "totals": {b: int(n) for b, n in layout.totals.items()},
+        "bounds": {b: [[int(lo), int(hi)] for lo, hi in bs]
+                   for b, bs in layout.bounds.items()},
+        "real_elements": real,
+    }
+
+
+def shard_wire_bytes(layout: ShardLayout, spec: flat_plane.FlatSpec,
+                     codec=None) -> Tuple[float, ...]:
+    """Per-shard wire bytes of ONE replica row.
+
+    Raw (codec None): a shard ships only the REAL leaf elements inside its
+    columns (the engines' raw-wire convention — lane/shard padding never
+    charged), so shards of a tiny bucket can be 0 and
+    ``sum == un-sharded raw wire`` exactly. With a codec: every shard is the
+    same ``shard_sizes`` row, so each ships the identical codec wire (the
+    padded plane is genuinely what ships, the codec convention)."""
+    if codec is None:
+        per = []
+        for i in range(layout.n_shards):
+            tot = 0
+            for s in spec.slots:
+                lo, hi = layout.bounds[s.bucket][i]
+                tot += (max(0, min(hi, s.offset + s.size) - max(lo, s.offset))
+                        * s.dtype.itemsize)
+            per.append(float(tot))
+        return tuple(per)
+    one = float(sum(codec.wire_bytes(layout.shard_sizes[b], np.dtype(b).itemsize)
+                    for b in layout.shard_sizes))
+    return tuple(one for _ in range(layout.n_shards))
+
+
+def wire_per_device(layout: ShardLayout, spec: flat_plane.FlatSpec,
+                    codec=None) -> float:
+    """Mean per-shard wire bytes — the per-exchange, per-DEVICE egress the
+    engines account when the plane is sharded (raw: exactly
+    ``raw_wire / n_shards``; codec: the wire of one shard row)."""
+    per = shard_wire_bytes(layout, spec, codec)
+    return float(sum(per)) / layout.n_shards
+
+
+def shard_descriptor(shard: ShardConfig, codec=None,
+                     align: int = flat_plane.LANE) -> dict:
+    """Config-level shard descriptor persisted in checkpoint metadata and
+    diffed field-by-field on restore (the bucket totals themselves are
+    validated by the FlatSpec manifest check that follows)."""
+    return {"n_shards": int(shard.n_shards), "axes": list(shard.axes),
+            "quantum": shard_quantum(codec, align)}

@@ -28,9 +28,14 @@ the dry-run roofline can amortize gossip cost by its true expected frequency
 (p or 1/tau) instead of baking it into every step.
 
 Sharding contract of the resident plane: the replica dim shards over
-('pod','worker'); the plane dim is replicated within a replica group
-(fsdp/model sharding of the buffers is an open roadmap item — the per-leaf
-``params_axes`` are still accepted and used for batch/loss shardings).
+('pod','worker'). By default the plane dim is replicated within a replica
+group; with a ``ShardConfig`` (repro.shard) the plane dim ALSO shards over
+the ('fsdp','model') mesh axes — bucket totals are padded to n_shards equal
+codec-block-aligned shards, the buf specs gain the shard axes on the plane
+dim, and every shard-mapped program (gossip exchange, fused NAG, fused
+gossip) sees only its ``[1, shard_size]`` local shard, so gossip wire bytes
+and plane memory scale per-device. The per-leaf ``params_axes`` are still
+accepted and used for batch/loss shardings.
 """
 from __future__ import annotations
 
@@ -64,7 +69,8 @@ TrainState = FlatState
 class DistTrainer:
     def __init__(self, mesh: Mesh, mesh_cfg: MeshConfig, model_cfg: ModelConfig,
                  train_cfg: TrainConfig, init_fn: Callable, params_axes: PyTree,
-                 loss_fn: Optional[Callable] = None, grad_accum: int = 1):
+                 loss_fn: Optional[Callable] = None, grad_accum: int = 1,
+                 shard=None):
         """init_fn(key) -> single-replica params (no W dim)."""
         self.mesh, self.mesh_cfg, self.model_cfg, self.train_cfg = mesh, mesh_cfg, model_cfg, train_cfg
         self.loss_fn = loss_fn or losses.lm_loss_fn(model_cfg)
@@ -89,7 +95,37 @@ class DistTrainer:
         self.params_axes = params_axes
         self.flat_spec = flat_plane.FlatSpec.build(self.param_shapes, leading=1)
         lead_axes = tuple(a for a in ("pod", "worker") if a in mesh.axis_names)
-        self.buf_specs = {k: P(lead_axes) for k in self.flat_spec.buckets}
+        # sharded plane (repro.shard): pad bucket totals to n_shards equal
+        # quantum-aligned shards and put the shard axes on the PLANE dim of
+        # the buf specs — inert (spec/jaxpr-identical) at the default config
+        self.shard = shard
+        self.shard_layout = None
+        if shard is not None and shard.enabled():
+            if not self._impl.pairwise:
+                raise ValueError(
+                    f"sharded plane (repro.shard) needs a pairwise protocol; "
+                    f"{self.protocol.method!r} is not pairwise")
+            got = 1
+            for ax in shard.axes:
+                if ax not in mesh.shape:
+                    raise ValueError(
+                        f"shard axis {ax!r} not in mesh axes "
+                        f"{tuple(mesh.axis_names)}")
+                got *= mesh.shape[ax]
+            if got != shard.n_shards:
+                raise ValueError(
+                    f"ShardConfig(n_shards={shard.n_shards}) needs the mesh "
+                    f"product over axes {tuple(shard.axes)} to match, got "
+                    f"{got} (mesh shape {dict(mesh.shape)})")
+            from repro import shard as shard_plane
+            self.shard_layout = shard_plane.build_layout(
+                self.flat_spec, shard, self._codec)
+            self.flat_spec = shard_plane.padded_spec(self.flat_spec,
+                                                     self.shard_layout)
+            self.buf_specs = {k: P(lead_axes, tuple(shard.axes))
+                              for k in self.flat_spec.buckets}
+        else:
+            self.buf_specs = {k: P(lead_axes) for k in self.flat_spec.buckets}
         self.center_buf_specs = {k: P() for k in self.flat_spec.buckets}
         self.state_specs = FlatState(
             spec=self.flat_spec,
@@ -116,7 +152,11 @@ class DistTrainer:
         """Flatten ONCE into the resident plane; pytrees do not survive init."""
         single = self.init_fn(key)
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (self.W,) + x.shape), single)
-        theta = self._constrain_bufs(self.flat_spec.flatten(stacked))
+        theta = self.flat_spec.flatten(stacked)
+        if self.shard_layout is not None:
+            from repro import shard as shard_plane
+            theta = shard_plane.pad_bufs(theta, self.shard_layout)
+        theta = self._constrain_bufs(theta)
         vel = jax.tree.map(jnp.zeros_like, theta)
         center = (self.flat_spec.with_lead(()).flatten(single)
                   if self._impl.uses_center else None)
@@ -268,7 +308,7 @@ class DistTrainer:
         return gossip_dist.make_gossip_step(
             self.mesh, self.mesh_cfg, self.protocol, self.buf_specs,
             schedule_kind="hypercube" if self.protocol.topology == "matching" else "random",
-            mode=mode)
+            mode=mode, shard=self.shard)
 
     @property
     def _apply_gossip(self):
@@ -284,14 +324,22 @@ class DistTrainer:
         facade parity surface (a boundary: flatten in, unflatten out; the
         training loop itself never leaves the resident buffers). Stateful
         codecs run against a zero residual here (the live residual only
-        advances inside the training step)."""
+        advances inside the training step). With a sharded plane the pytree
+        flattens to the UN-padded widths, so pad to the shard-padded totals
+        on entry and slice the padding back off before unflattening."""
         spec = flat_plane.FlatSpec.build(params_stack, leading=1)
         bufs = spec.flatten(params_stack)
+        widths = {k: b.shape[-1] for k, b in bufs.items()}
+        if self.shard_layout is not None:
+            from repro import shard as shard_plane
+            bufs = shard_plane.pad_bufs(bufs, self.shard_layout)
         if self._codec_stateful:
             zeros = {k: jnp.zeros(b.shape, jnp.float32) for k, b in bufs.items()}
             out, _ = self._apply_gossip(bufs, zeros, active, round_idx)
         else:
             out = self._apply_gossip(bufs, active, round_idx)
+        if self.shard_layout is not None:
+            out = shard_plane.slice_bufs(out, widths)
         return spec.unflatten(out, like=params_stack)
 
     @property
