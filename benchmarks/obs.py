@@ -1,0 +1,222 @@
+"""Telemetry-plane overhead + acceptance evidence (repro.obs). Writes
+``BENCH_obs.json`` at the repo root.
+
+Scenarios:
+
+- **Zero-obs anchor**: the all-default ``ObsConfig`` builds no observer and
+  reproduces the obs=None ``engine="sim"`` run bit-exactly (params, velocity,
+  comm accounting, PRNG key) — the engines add zero trace ops.
+- **Headline — step-time overhead at default sampling** (``engine="sim"``,
+  W=8, the benchmark MLP): obs-off vs obs-on (trace + metrics, in-memory)
+  steps/sec, interleaved repetitions with min-aggregation so machine noise
+  cancels. The claim: observation is host-side only, so recording every step
+  costs **< 5%** step time.
+- **Recorder throughput**: raw ``TraceRecorder.emit`` events/sec (the bound
+  on how much richer the event stream could get before it matters).
+- **Acceptance run** (the ISSUE 10 scenario): a W=8 async run with drop
+  faults + token-account flow control exports a schema-valid Perfetto trace
+  (per-worker tracks, exchange arrows, fault/skip markers) and a metrics
+  JSONL whose report totals equal the engine's ``ProtocolState`` EXACTLY.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO, "BENCH_obs.json")
+
+WORKERS = 8
+OVERHEAD_BUDGET_PCT = 5.0
+
+
+def _problem(num_workers=WORKERS, n=16, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(num_workers, n, 784).astype(np.float32)
+    y = rng.randint(0, 10, (num_workers, n)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _make_trainer(engine="sim", obs=None, faults=None, fleet=None,
+                  hetero=None, hidden=256):
+    from repro.api import GossipTrainer
+    from repro.common.config import OptimizerConfig, ProtocolConfig
+    from repro.models import simple
+
+    proto = ProtocolConfig(method="elastic_gossip", comm_probability=0.5,
+                           moving_rate=0.5, topology="uniform")
+    return GossipTrainer(
+        engine=engine, protocol=proto, obs=obs, faults=faults, fleet=fleet,
+        hetero=hetero,
+        optimizer=OptimizerConfig(name="nag", learning_rate=0.05, momentum=0.9),
+        loss_fn=lambda p, x, y: simple.xent_loss(simple.mlp_logits(p, x), y),
+        num_workers=WORKERS,
+        init_fn=lambda key: simple.init_mlp(key, in_dim=784, hidden=hidden,
+                                            depth=3, num_classes=10)[0])
+
+
+def _assert_zero_obs_bit_exact(batch, steps=20):
+    """ObsConfig() must reproduce the obs-free run bit-for-bit."""
+    from repro.common.config import ObsConfig
+    base = _make_trainer()
+    anchored = _make_trainer(obs=ObsConfig())
+    assert anchored.observer is None
+    s0, s1 = base.init_state(0), anchored.init_state(0)
+    for _ in range(steps):
+        s0, _ = base.step(s0, batch)
+        s1, _ = anchored.step(s1, batch)
+    for k in s0.theta:
+        assert bool(jnp.all(s0.theta[k] == s1.theta[k])), f"theta[{k}] drifted"
+    for k in s0.opt.mu:
+        assert bool(jnp.all(s0.opt.mu[k] == s1.opt.mu[k])), f"mu[{k}] drifted"
+    assert float(s0.proto.comm_bytes) == float(s1.proto.comm_bytes)
+    assert bool(jnp.all(jax.random.key_data(s0.key)
+                        == jax.random.key_data(s1.key)))
+
+
+def _overhead(batch, steps, reps):
+    """Obs-off vs obs-on (trace + metrics) ms/step, interleaved reps, min —
+    the headline claim: host-side observation costs < 5% step time at
+    default (every-step) sampling."""
+    from repro.common.config import ObsConfig
+    base = _make_trainer()
+    rec = _make_trainer(obs=ObsConfig(trace=True, metrics=True))
+    sb, sr = base.init_state(0), rec.init_state(0)
+    for _ in range(10):                        # warm both compiled paths
+        sb, _ = base.step(sb, batch)
+        sr, _ = rec.step(sr, batch)
+    jax.block_until_ready((sb.theta, sr.theta))
+
+    def timed(t, st):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            st, _ = t.step(st, batch)
+        jax.block_until_ready(st.theta)
+        return st, (time.perf_counter() - t0) / steps
+
+    base_ms, rec_ms = [], []
+    for _ in range(reps):
+        sb, dt = timed(base, sb)
+        base_ms.append(dt * 1e3)
+        sr, dt = timed(rec, sr)
+        rec_ms.append(dt * 1e3)
+    b, r = min(base_ms), min(rec_ms)
+    overhead_pct = 100.0 * (r / b - 1.0)
+    rec.observer.flush()
+    events = len(rec.observer.trace.events)
+    rows = len(rec.observer.sink.records)
+    assert rows == 10 + steps * reps           # every step sampled
+    assert overhead_pct < OVERHEAD_BUDGET_PCT, (
+        f"obs overhead {overhead_pct:.2f}% exceeds the "
+        f"{OVERHEAD_BUDGET_PCT}% budget (base {b:.3f} ms, obs {r:.3f} ms)")
+    return {"steps_per_rep": steps, "reps": reps,
+            "base_ms_per_step": round(b, 4),
+            "obs_ms_per_step": round(r, 4),
+            "overhead_pct": round(overhead_pct, 3),
+            "events_recorded": events, "rows_recorded": rows}
+
+
+def _recorder_throughput(n=200_000):
+    from repro.obs import TraceRecorder
+    rec = TraceRecorder(max_events=n)
+    t0 = time.perf_counter()
+    for i in range(n):
+        rec.emit("exchange", i * 1e-3, i, worker=i % WORKERS,
+                 peer=(i + 1) % WORKERS)
+    dt = time.perf_counter() - t0
+    return {"events": n, "events_per_sec": round(n / dt)}
+
+
+def _acceptance_run(steps):
+    """W=8 async + drop faults + token-account flow: export, validate, and
+    check report totals against the engine's own accumulators EXACTLY."""
+    from repro.common.config import FaultConfig, FleetConfig, HeteroConfig, ObsConfig
+    from repro.obs import report, schema
+
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    trace_path = os.path.join(tmp, "run.json")
+    metrics_path = os.path.join(tmp, "run.jsonl")
+    t = _make_trainer(
+        "async", hidden=32,
+        obs=ObsConfig(trace_path=trace_path, metrics_path=metrics_path),
+        faults=FaultConfig(fault_model="drop", fault_rate=0.3, seed=3),
+        fleet=FleetConfig(flow_control="token_account", token_capacity=3.0,
+                          token_rate=0.5),
+        hetero=HeteroConfig(time_model="lognormal", sigma=0.5, seed=7))
+    batch = _problem(n=4, seed=1)
+    state = t.init_state(0)
+    t0 = time.time()
+    for _ in range(steps):
+        state, _ = t.step(state, batch)
+    out = t.export_obs()
+
+    with open(trace_path) as f:
+        doc = json.load(f)
+    errs = schema.validate_trace(doc)
+    assert errs == [], errs[:5]
+    kinds = {}
+    for e in doc["reproEvents"]:
+        kinds[e["ev"]] = kinds.get(e["ev"], 0) + 1
+    assert kinds.get("drop", 0) > 0 and kinds.get("flow_skip", 0) > 0
+
+    rows = report.load_jsonl(metrics_path)
+    tot = report.totals(rows)
+    proto = state.proto
+    exact = (tot["comm_bytes"] == float(proto.comm_bytes)
+             and tot["stale_time"] == float(proto.stale_time)
+             and tot["wire_dropped"] == float(proto.wire_dropped)
+             and tot["flow_skipped"] == float(proto.flow_skipped))
+    assert exact, (tot, proto)
+    return {"steps": steps, "exported": out, "event_counts": kinds,
+            "trace_schema_valid": True, "report_totals_exact": True,
+            "comm_bytes": tot["comm_bytes"],
+            "wire_dropped": tot["wire_dropped"],
+            "flow_skipped": tot["flow_skipped"],
+            "wall_seconds": round(time.time() - t0, 1)}
+
+
+def main(quick: bool = True) -> None:
+    steps, reps = (120, 3) if quick else (300, 5)
+    batch = _problem()
+
+    t0 = time.time()
+    _assert_zero_obs_bit_exact(batch)
+    overhead = _overhead(batch, steps, reps)
+    throughput = _recorder_throughput()
+    acceptance = _acceptance_run(40 if quick else 120)
+
+    result = {
+        "workers": WORKERS,
+        "zero_obs_bit_exact": True,
+        "overhead": overhead,
+        "overhead_budget_pct": OVERHEAD_BUDGET_PCT,
+        "recorder": throughput,
+        "acceptance_async_faults_flow": acceptance,
+        "wall_seconds": round(time.time() - t0, 1),
+        "notes": (
+            "Observation is host-side only: events are re-derived from the "
+            "pre-step PRNG key / host schedules / the pending-wire queue, "
+            "never from extra device ops, so a recording run is bit-exact "
+            "and the overhead is host bookkeeping. Metrics counters are "
+            "deltas of ProtocolState accumulators (one batched device_get "
+            "per sampled step) — report totals equal the engine's own "
+            "accounting exactly, by construction."),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"overhead: base {overhead['base_ms_per_step']} ms/step, "
+          f"obs {overhead['obs_ms_per_step']} ms/step "
+          f"({overhead['overhead_pct']}% < {OVERHEAD_BUDGET_PCT}% budget)")
+    print(f"recorder: {throughput['events_per_sec']:,} events/sec")
+    print(f"acceptance: {acceptance['event_counts']} -> totals exact")
+    print(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -12,7 +12,7 @@ import argparse
 import time
 
 from benchmarks import (alpha_schedule, comm_compress, comm_cost, faults,
-                        fleet, fused_step, roofline_bench, serve_live,
+                        fleet, fused_step, obs, roofline_bench, serve_live,
                         shard, straggler, table_4_1, table_4_2, table_4_3,
                         table_a_1)
 
@@ -32,6 +32,7 @@ TABLES = {
     "faults": faults.main,
     "fleet": fleet.main,
     "shard": shard.main,
+    "obs": obs.main,
 }
 
 

@@ -131,6 +131,8 @@ class GossipTrainer:
       optimizer:  OptimizerConfig (default NAG, as the paper)
       init_fn:    key -> single-replica params (no worker dim)
       seed:       base seed for the communication schedule
+      obs:        ObsConfig (repro.obs) — structured event tracing + metrics
+                  recording; None / all-default is inert (bit-exact anchor)
 
     ``engine="sim"`` additionally takes ``loss_fn(params, x, y)`` and
     ``num_workers`` (``mesh_cfg`` optionally, for a dist-matching gossip
@@ -160,7 +162,7 @@ class GossipTrainer:
                  hetero: Optional[HeteroConfig] = None,
                  faults=None, fleet=None, shard=None,
                  publish_every: Optional[int] = None,
-                 snapshot_bus=None):
+                 snapshot_bus=None, obs=None):
         backend_cls = registry.get_engine(engine)   # unknown names raise with
         self.engine = engine                        # the registered list
         # gossip-compression codec (repro.comm registry): an explicit
@@ -224,6 +226,20 @@ class GossipTrainer:
             mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=model_cfg,
             params_axes=params_axes, global_batch=global_batch,
             seq_len=seq_len, grad_accum=grad_accum, seed=seed, hetero=hetero))
+        # telemetry plane (repro.obs): an ObsConfig with anything enabled
+        # builds the host-side observer and hangs it off the backend's hook.
+        # None or the all-default config is INERT — no observer exists, no
+        # host hook runs, every engine reproduces the un-observed build
+        # bit-exactly (the FleetConfig / ShardConfig anchor pattern).
+        self.obs = obs
+        self.observer = None
+        if obs is not None and obs.enabled():
+            from repro.obs import Observer
+            self.observer = Observer(obs, engine=engine,
+                                     num_workers=self.num_workers)
+            attach = getattr(self._backend, "attach_observer", None)
+            if attach is not None:
+                attach(self.observer)
 
     # ------------------------------------------------------------------ core
     @property
@@ -243,7 +259,13 @@ class GossipTrainer:
 
         With ``publish_every=k``, every k-th step additionally publishes a
         consensus snapshot of the new state onto :attr:`snapshot_bus` and
-        reports its sequence number as ``metrics["published_seq"]``."""
+        reports its sequence number as ``metrics["published_seq"]``.
+
+        Metrics are normalized to the unified cross-engine schema
+        (:data:`repro.obs.schema.CORE_STEP_KEYS`) — additive only, engines'
+        own keys are never removed."""
+        from repro.obs import schema as obs_schema
+        step_idx = self._host_steps
         state, metrics = self._backend.step(state, batch)
         self._host_steps += 1
         bus = self.snapshot_bus
@@ -252,11 +274,29 @@ class GossipTrainer:
             snap = bus.publish_state(state, train_step=self._host_steps)
             if snap is not None:
                 metrics["published_seq"] = snap.seq
+                if self.observer is not None:
+                    self.observer.event("publish", self.observer.now(),
+                                        step_idx, seq=snap.seq)
             else:
                 # validation refused the snapshot (non-finite / bad manifest):
                 # serving keeps the last good one (repro.faults degradation)
                 metrics["publish_rejected"] = True
+                if self.observer is not None:
+                    self.observer.event("publish_rejected",
+                                        self.observer.now(), step_idx)
+        metrics = obs_schema.normalize_step_metrics(metrics, step=step_idx)
+        if self.observer is not None:
+            self.observer.on_step(step_idx, metrics, state)
         return state, metrics
+
+    def export_obs(self, trace_path: Optional[str] = None,
+                   metrics_path: Optional[str] = None) -> dict:
+        """Write the recorded telemetry: the Perfetto/Chrome trace JSON and
+        the metrics JSONL (paths default to the ObsConfig's). Returns
+        {kind: path} of what was written — {} when nothing records."""
+        if self.observer is None:
+            return {}
+        return self.observer.export(trace_path, metrics_path)
 
     # ------------------------------------------------------- parity / gossip
     def gossip_exchange(self, params_stack: PyTree, active, round_idx: int) -> PyTree:
@@ -393,6 +433,9 @@ class _SimBackend(_MatchingScheduleMixin):
         self._pb = None
         self._wire = None
 
+    def attach_observer(self, observer) -> None:
+        self.sim.obs = observer
+
     def _sched_mesh_cfg(self) -> MeshConfig:
         return self.mesh_cfg or MeshConfig(data=self.num_workers, model=1, pods=1,
                                            workers_per_pod=self.num_workers)
@@ -420,6 +463,10 @@ class _SimBackend(_MatchingScheduleMixin):
         metrics = dict(m)
         metrics["loss"] = m["loss_mean"]
         metrics["fired"] = m["comm_active"] > 0
+        # unified schema: the engine's round counter — the device-side
+        # cumulative fired-round count here (lazy, no host sync; the dist
+        # engine reports its schedule's round index instead, see schema.py)
+        metrics["comm_round"] = state.proto.comm_rounds
         metrics["comm_bytes"] = state.proto.comm_bytes
         return state, metrics
 
@@ -551,6 +598,10 @@ class _DistBackend(_MatchingScheduleMixin):
         # The facade drives ONE sequential training stream; the mirror is
         # re-anchored at init_state / load_checkpoint.
         self._host_step = 0
+        self._obs = None
+
+    def attach_observer(self, observer) -> None:
+        self._obs = observer
 
     def _sched_mesh_cfg(self) -> MeshConfig:
         return self.mesh_cfg
@@ -580,7 +631,10 @@ class _DistBackend(_MatchingScheduleMixin):
 
     def step(self, state, batch):
         impl = self.facade.impl
+        obs = self._obs
+        t_start = obs.now() if obs is not None else 0.0
         fire, active, rnd = self.sched.poll(self._host_step)
+        step_idx = self._host_step
         self._host_step += 1
         if impl.pairwise and fire:
             state, m = self.tg(state, batch, jnp.asarray(active), jnp.int32(rnd))
@@ -595,8 +649,18 @@ class _DistBackend(_MatchingScheduleMixin):
             self.comm_bytes += cost.bytes_per_event * float(np.mean(active))
         metrics = dict(m)
         metrics["fired"] = bool(fire)
+        # unified schema: the dist loss is the device-reduced fleet mean —
+        # per-worker losses never leave the mesh, so mean == max == loss
+        # (documented degeneracy, repro/obs/schema.py); comm_active comes
+        # from the host schedule's active mask
+        metrics["loss_mean"] = m["loss"]
+        metrics["loss_max"] = m["loss"]
+        metrics["comm_active"] = (int(np.sum(active))
+                                  if fire and active is not None else 0)
         metrics["comm_round"] = rnd
         metrics["comm_bytes"] = self.comm_bytes
+        if obs is not None:
+            obs.on_dist_step(self, t_start, step_idx, fire, active, rnd)
         return state, metrics
 
     def gossip_exchange(self, params_stack, active, round_idx):

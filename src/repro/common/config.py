@@ -425,6 +425,43 @@ class ShardConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Unified telemetry plane (repro.obs) — structured event tracing and a
+    step-metrics registry over every engine, behind the facade hook
+    ``GossipTrainer(obs=...)`` / ``launch.train --trace/--metrics``.
+
+    Observation is HOST-side only: the recorder re-derives exchange / fault /
+    flow / chunk draws from the same pure ``(seed, worker, step)`` hashes and
+    pre-step PRNG keys the engines consume, so a recording run's training
+    trajectory is bit-identical to a non-recording run — and the all-default
+    config is INERT: no observer is built, no host hook runs, every engine
+    reproduces the un-observed build bit-exactly (params, velocity, comm
+    accounting, PRNG key) — the FleetConfig / ShardConfig anchor pattern.
+    """
+    trace: bool = False              # record typed events (TraceRecorder)
+    metrics: bool = False            # record per-step metrics (MetricsSink)
+    trace_path: str = ""             # non-empty: export a Perfetto/Chrome
+    #                                  trace JSON here (implies trace=True)
+    metrics_path: str = ""           # non-empty: stream metrics JSONL here
+    #                                  (implies metrics=True)
+    sample_every: int = 1            # record every k-th facade step (trace
+    #                                  step/exchange events + metrics rows);
+    #                                  message-mode wire events always record
+    max_events: int = 1_000_000      # trace ring bound; overflow counts into
+    #                                  TraceRecorder.dropped instead of OOM
+
+    def trace_enabled(self) -> bool:
+        return self.trace or bool(self.trace_path)
+
+    def metrics_enabled(self) -> bool:
+        return self.metrics or bool(self.metrics_path)
+
+    def enabled(self) -> bool:
+        """True if anything records — the all-default config is inert."""
+        return self.trace_enabled() or self.metrics_enabled()
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     name: str = "nag"                # sgd | nag | adamw  (paper uses NAG, Alg. 5)
     learning_rate: float = 1e-3

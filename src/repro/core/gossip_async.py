@@ -188,7 +188,8 @@ class AsyncTrainer(SimTrainer):
             self._hostplane = HostPlane(self)
         self._pending: list = []
         self._per_event = 0.0
-        self._draw_fn = jax.jit(self._draws)
+        # _draw_fn (the pre-step gate/partner re-derivation) is inherited
+        # from SimTrainer — the clock program and the observer share it
 
     # ------------------------------------------------------------- lifecycle
     def init(self, params_stack: PyTree, seed: int = 0) -> FlatState:
@@ -257,8 +258,12 @@ class AsyncTrainer(SimTrainer):
         # PRE-step token balances (the step program consumes and updates them)
         tokens0 = (jnp.array(state.proto.tokens) if self.flow is not None
                    else None)
+        # pre-window clock snapshot for the observer's compute spans (the
+        # mirrors advance below); None keeps the unobserved path untouched
+        clocks0 = self.clocks.copy() if self.obs is not None else None
         if self._message_mode:
-            return self._message_step(state, x, y, t, mask, nxt, key0, step0)
+            return self._message_step(state, x, y, t, mask, nxt, key0, step0,
+                                      clocks0)
         if mask.all():
             # full-fleet window: the EXACT synchronous program (bit-parity)
             state, m = self._step_fn(state, x, y)
@@ -270,6 +275,9 @@ class AsyncTrainer(SimTrainer):
         state = state.replace(proto=proto)
         self.clocks = np.where(mask, nxt, self.clocks)
         self.steps_done = self.steps_done + mask
+        if self.obs is not None:
+            self.obs.on_async_window(self, t, mask, nxt, clocks0, key0,
+                                     step0, tokens0)
         m = dict(m, virtual_time=t,
                  window_size=int(mask.sum()),
                  stale_time=proto.stale_time,
@@ -282,6 +290,9 @@ class AsyncTrainer(SimTrainer):
         Clocks advance (host mirrors + the float32 device view); no step
         program is dispatched and no worker completes a step."""
         W = self.num_workers
+        if self.obs is not None:
+            self.obs.event("outage", float(self.clocks.min()),
+                           int(state.step), until=t_end)
         self.clocks = np.full((W,), t_end, np.float64)
         proto = state.proto._replace(
             clocks=jnp.asarray(self.clocks, jnp.float32))
@@ -293,7 +304,8 @@ class AsyncTrainer(SimTrainer):
         return state, m
 
     # ------------------------------------------------ message mode (delays)
-    def _message_step(self, state, x, y, t, mask, nxt, key0, step0):
+    def _message_step(self, state, x, y, t, mask, nxt, key0, step0,
+                      clocks0=None):
         """One event window in message mode: deliver every pending wire due
         at or before ``t`` (timing out / retrying stragglers), run the local
         step with comm deferred, then dispatch this window's new exchanges
@@ -308,6 +320,11 @@ class AsyncTrainer(SimTrainer):
         self.clocks = np.where(mask, nxt, self.clocks)
         self.steps_done = self.steps_done + mask
         state = self._dispatch(state, key0, step0, t, mask)
+        if self.obs is not None and clocks0 is not None:
+            # compute spans only — dispatch/apply/timeout wire events are
+            # emitted by the queue itself (host code, virtual timestamps)
+            self.obs.on_async_window(self, t, mask, nxt, clocks0, key0,
+                                     step0, None)
         proto = state.proto
         m = dict(m, virtual_time=t, window_size=int(mask.sum()),
                  pending_wires=len(self._pending),
@@ -316,16 +333,6 @@ class AsyncTrainer(SimTrainer):
                  exch_timeouts=proto.exch_timeouts,
                  exch_retries=proto.exch_retries)
         return state, m
-
-    def _draws(self, key0, step0):
-        """Gate/partner draws for the window that consumed ``key0`` — pure
-        functions of the pre-step key, recomputed host-side for the dispatch
-        queue (the deferred step program split but did not use them)."""
-        _, sel_key, gate_key = jax.random.split(key0, 3)
-        gate = protocols.comm_gate(self.protocol, gate_key, step0,
-                                   self.num_workers)
-        peers = self._impl.sample_peers(sel_key, self.num_workers)
-        return gate, peers
 
     def _dispatch(self, state, key0, step0, t, mask):
         """Enqueue this window's exchanges: active initiator i captures both
@@ -339,6 +346,7 @@ class AsyncTrainer(SimTrainer):
             return state
         peers = np.asarray(peers)
         fm = self.fault_model
+        obs = self.obs
         step_host = int(step0)
         coef = float(self._impl.alpha_at(step0))
         drops = corrupts = 0
@@ -350,10 +358,14 @@ class AsyncTrainer(SimTrainer):
             if fm is not None and fm.injects_drop and \
                     bool(fm.drop_mask(i, step_host)):
                 drops += 1
+                if obs is not None:
+                    obs.event("drop", t, step_host, worker=i)
                 continue
             if fm is not None and fm.injects_corrupt and \
                     bool(fm.corrupt_mask(i, step_host)):
                 corrupts += 1
+                if obs is not None:
+                    obs.event("corrupt", t, step_host, worker=i)
                 continue
             wire_i = {b: state.theta[b][i] for b in state.theta}
             wire_k = {b: state.theta[b][k] for b in state.theta}
@@ -365,6 +377,9 @@ class AsyncTrainer(SimTrainer):
                 arrival=t + d, dispatch=t, attempt=0, i=i, k=k,
                 wire_i=wire_i, wire_k=wire_k, step=step_host, coef=coef,
                 gap=int(abs(self.steps_done[i] - self.steps_done[k]))))
+            if obs is not None:
+                obs.event("dispatch", t, step_host, worker=i, peer=k,
+                          arrival=t + d)
         if drops or corrupts:
             proto = state.proto
             upd = {}
@@ -386,6 +401,7 @@ class AsyncTrainer(SimTrainer):
         if not self._pending:
             return state
         cfg = self.faults
+        obs = self.obs
         theta = dict(state.theta)
         pair = getattr(self._impl, "robust_pair_apply", None)
         applied = timeouts = retries = gaps = 0
@@ -399,15 +415,25 @@ class AsyncTrainer(SimTrainer):
                 applied += 1
                 ages += t - e["dispatch"]
                 gaps += e["gap"]
+                if obs is not None:
+                    obs.event("apply", t, e["step"], worker=e["i"],
+                              peer=e["k"], age=t - e["dispatch"],
+                              gap=e["gap"])
             elif (cfg.timeout > 0.0
                     and t > e["dispatch"] + cfg.timeout * (2.0 ** e["attempt"])):
                 timeouts += 1
+                if obs is not None:
+                    obs.event("timeout", t, e["step"], worker=e["i"],
+                              peer=e["k"], attempt=e["attempt"])
                 if e["attempt"] < cfg.max_retries:
                     retries += 1
                     a = e["attempt"] + 1
                     d = float(self.delay_model.wire_delay(e["i"], e["step"],
                                                           attempt=a))
                     keep.append(dict(e, attempt=a, dispatch=t, arrival=t + d))
+                    if obs is not None:
+                        obs.event("retry", t, e["step"], worker=e["i"],
+                                  peer=e["k"], attempt=a)
                 # else: abandoned — skip-and-continue
             else:
                 keep.append(e)

@@ -147,6 +147,14 @@ class SimTrainer:
                 raise ValueError(
                     "plane='host' streams whole host rows; it does not "
                     "compose with the sharded plane (repro.shard) yet")
+        # telemetry plane (repro.obs): attached by the facade AFTER build;
+        # None (the default) keeps step() the bare jitted dispatch — zero
+        # trace ops, zero host work, the ObsConfig inert anchor
+        self.obs = None
+        # gate/partner draws re-derived from the pre-step key — pure
+        # functions of it, shared by the async clock program and the
+        # host-side observer (both replay exactly what the step consumed)
+        self._draw_fn = jax.jit(self._draws)
         # donate the resident state so the flat buffers update in place
         # instead of doubling HBM residency every step
         self._step_fn = jax.jit(self._step, donate_argnums=(0,),
@@ -531,8 +539,31 @@ class SimTrainer:
                              comm=comm_new, key=key,
                              step=state.step + 1), metrics
 
+    def _draws(self, key0, step0):
+        """Gate/partner draws for the step that consumed ``key0`` — pure
+        functions of the pre-step key, recomputed host-side by the async
+        clock program and the observer (the step program split the same key
+        and consumed the same draws)."""
+        _, sel_key, gate_key = jax.random.split(key0, 3)
+        gate = protocols.comm_gate(self.protocol, gate_key, step0,
+                                   self.num_workers)
+        peers = self._impl.sample_peers(sel_key, self.num_workers)
+        return gate, peers
+
     def step(self, state: FlatState, x, y):
-        return self._step_fn(state, x, y)
+        if self.obs is None:
+            return self._step_fn(state, x, y)
+        # observation path: copy the pre-step key/step/tokens BEFORE the
+        # donated dispatch (the async engine's capture pattern), then let the
+        # observer re-derive this step's draws host-side — the jitted program
+        # and its inputs are byte-identical to the unobserved path
+        t_start = self.obs.now()
+        key0, step0 = jnp.array(state.key), jnp.array(state.step)
+        tokens0 = (jnp.array(state.proto.tokens) if self.flow is not None
+                   else None)
+        state, m = self._step_fn(state, x, y)
+        self.obs.on_sim_step(self, t_start, key0, step0, tokens0)
+        return state, m
 
     # -- evaluation helpers (pytree boundary: lazy views) --------------------
     def rank0_params(self, state: FlatState) -> PyTree:

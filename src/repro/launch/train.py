@@ -21,6 +21,12 @@ launchable with ``--method <name>``.
         --reduced --steps 50 --engine async --time-model slow_node \
         --slow-factor 4 --workers 4 --p 0.25
 
+    # same run with the telemetry plane armed (repro.obs): Perfetto timeline
+    # + metrics JSONL, then `python -m repro.obs.report run.jsonl`
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --reduced --steps 50 --engine async --workers 4 --p 0.25 \
+        --trace run.json --metrics run.jsonl
+
 On this CPU container it is exercised with reduced configs
 (examples/quickstart.py, tests); on a real cluster the same driver drives the
 production mesh.
@@ -38,8 +44,8 @@ import numpy as np
 from repro.api import GossipTrainer, available_engines, available_protocols
 from repro.comm import available_codecs
 from repro.common.config import (FaultConfig, FleetConfig, HeteroConfig,
-                                 MeshConfig, OptimizerConfig, ProtocolConfig,
-                                 ShardConfig)
+                                 MeshConfig, ObsConfig, OptimizerConfig,
+                                 ProtocolConfig, ShardConfig)
 from repro.faults import available_delay_models, available_fault_models
 from repro.fleet import available_flow_controls
 from repro.hetero import available_time_models
@@ -89,7 +95,8 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
         partition: int = 1, flow_control: str = "none",
         plane: str = "device", token_capacity: float = 20.0,
         token_rate: float = 1.0, token_threshold: float = 10.0,
-        shard: int = 1):
+        shard: int = 1, trace: str = "", metrics: str = "",
+        sample_every: int = 1):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     proto = ProtocolConfig(method=method, moving_rate=alpha,
                            comm_probability=p if not tau else 0.0,
@@ -119,6 +126,13 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
     # sharded plane (repro.shard): only construct a ShardConfig when the
     # plane is actually split — None keeps every engine trace bit-identical
     shard_cfg = ShardConfig(n_shards=shard) if shard != 1 else None
+    # telemetry plane (repro.obs): only construct an ObsConfig when an export
+    # path is requested — obs=None keeps every engine bit-identical (the
+    # inert-anchor contract shared with faults/fleet/shard above)
+    obs_cfg = None
+    if trace or metrics:
+        obs_cfg = ObsConfig(trace_path=trace, metrics_path=metrics,
+                            sample_every=sample_every)
 
     def init_fn(key):
         params, _ = tr.init_lm(key, cfg)
@@ -143,7 +157,7 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
             engine="dist", protocol=proto, optimizer=opt,
             mesh=mesh, mesh_cfg=mesh_cfg, model_cfg=cfg, init_fn=init_fn,
             params_axes=axes, global_batch=global_batch, seq_len=seq, seed=seed,
-            shard=shard_cfg)
+            shard=shard_cfg, obs=obs_cfg)
         num_workers = mesh_cfg.num_workers
         as_batch = lambda b: b
     else:
@@ -173,7 +187,7 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
             engine=engine, protocol=proto, optimizer=opt, loss_fn=loss_fn,
             num_workers=num_workers, init_fn=init_fn, seed=seed,
             hetero=hetero if engine == "async" else None, faults=faults,
-            fleet=fleet, shard=shard_cfg)
+            fleet=fleet, shard=shard_cfg, obs=obs_cfg)
         as_batch = lambda b: (b["tokens"], b["labels"])
     state = trainer.init_state(seed)
     batches = lm_batches(cfg, num_workers, global_batch // num_workers,
@@ -201,6 +215,16 @@ def run(arch: str, *, reduced: bool, steps: int, method: str, p: float, tau: int
                                     meta={"arch": arch, "step": i + 1})
     print(f"trained {steps} steps in {time.time()-t0:.1f}s; "
           f"final loss {history[-1]['loss']:.4f}")
+    exported = trainer.export_obs()
+    for kind, path in exported.items():
+        print(f"wrote {kind} -> {path}")
+    if "metrics" in exported:
+        hint = f"python -m repro.obs.report {exported['metrics']}"
+        if "trace" in exported:
+            hint += f" --trace {exported['trace']}"
+        print(f"summarize: {hint}")
+    elif "trace" in exported:
+        print(f"view: load {exported['trace']} at https://ui.perfetto.dev")
     return state, history
 
 
@@ -262,6 +286,16 @@ def main() -> None:
                          "(repro.shard): per-device plane memory and gossip "
                          "wire bytes scale with 1/N; engine='dist' realizes "
                          "the shards over the ('fsdp','model') mesh axes")
+    # telemetry plane (repro.obs): export paths arm the host-side observer;
+    # leaving both unset keeps the run bit-identical (inert anchor)
+    ap.add_argument("--trace", default="",
+                    help="write a Perfetto/Chrome-trace JSON timeline here "
+                         "(load at https://ui.perfetto.dev; repro.obs)")
+    ap.add_argument("--metrics", default="",
+                    help="stream per-step metrics JSONL here (summarize with "
+                         "python -m repro.obs.report)")
+    ap.add_argument("--sample-every", type=int, default=1,
+                    help="record trace events / metrics rows every k-th step")
     ap.add_argument("--token-capacity", type=float, default=20.0)
     ap.add_argument("--token-rate", type=float, default=1.0)
     ap.add_argument("--token-threshold", type=float, default=10.0,
@@ -289,7 +323,8 @@ def main() -> None:
         delay=a.delay, timeout=a.timeout,
         partition=a.partition, flow_control=a.flow_control, plane=a.plane,
         token_capacity=a.token_capacity, token_rate=a.token_rate,
-        token_threshold=a.token_threshold, shard=a.shard)
+        token_threshold=a.token_threshold, shard=a.shard,
+        trace=a.trace, metrics=a.metrics, sample_every=a.sample_every)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""repro.obs — the unified telemetry plane.
+
+One observability layer over every engine, the fault/fleet planes and the
+serve loop: typed event tracing (:class:`TraceRecorder` → Perfetto/Chrome
+timeline), a metrics registry (:class:`MetricsSink` → JSONL stream), and the
+ONE documented step-metrics schema (:mod:`repro.obs.schema`) all engines
+return through the facade.
+
+Quickstart::
+
+    from repro.api import GossipTrainer
+    from repro.common.config import ObsConfig
+
+    trainer = GossipTrainer(engine="async", ..., obs=ObsConfig(
+        trace_path="run.json", metrics_path="run.jsonl"))
+    state = trainer.init_state(0)
+    for step in range(200):
+        state, m = trainer.step(state, next(batches))
+    trainer.export_obs()                   # writes run.json + run.jsonl
+    # python -m repro.obs.report run.jsonl --trace run.json
+    # -> totals, wire-bytes-vs-loss frontier, staleness histogram
+    # load run.json at https://ui.perfetto.dev for the timeline
+
+The all-default ``ObsConfig()`` is INERT (the repo's anchor contract): no
+observer is constructed and every engine reproduces the un-observed build
+bit-exactly. Recording never perturbs training either — all events are
+host-side reconstructions of draws the engines already consume
+(:mod:`repro.obs.observer`).
+"""
+from repro.obs.metrics import MetricsSink
+from repro.obs.observer import Observer
+from repro.obs.schema import (ASYNC_MESSAGE_KEYS, ASYNC_STEP_KEYS,
+                              CORE_STEP_KEYS, EVENT_TYPES, SERVE_STEP_KEYS,
+                              normalize_step_metrics, validate_event,
+                              validate_trace)
+from repro.obs.trace import TraceRecorder
+
+__all__ = ["MetricsSink", "Observer", "TraceRecorder",
+           "CORE_STEP_KEYS", "ASYNC_STEP_KEYS", "ASYNC_MESSAGE_KEYS",
+           "SERVE_STEP_KEYS", "EVENT_TYPES",
+           "normalize_step_metrics", "validate_event", "validate_trace"]

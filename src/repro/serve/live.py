@@ -7,9 +7,10 @@ train-while-serve loop needs on the serving side:
   SnapshotBus` and, when a newer snapshot exists, unflattens it through the
   program's FlatSpec views and re-places it onto the serving shardings
   (``ServeProgram.place_params`` — cast + device_put, dispatched without
-  blocking the token loop). The host time of the swap call is recorded per
-  swap (:attr:`swap_pauses`) — the benchmark's swap-pause claim measures
-  exactly this.
+  blocking the token loop). The host time of each swap is recorded through
+  the server's :class:`repro.obs.MetricsSink` (``swap_pause_s``
+  observations) — the benchmark's swap-pause claim measures exactly this;
+  :attr:`swap_pauses` / :meth:`swap_stats` are thin views over the sink.
 - **provenance**: :attr:`seq` / :attr:`train_step` of the weights currently
   being served — staleness relative to the training loop is
   ``trainer_step - server.train_step``.
@@ -33,17 +34,31 @@ PyTree = Any
 class LiveServer:
     """Serving half of the train-while-serve loop (see module docstring)."""
 
-    def __init__(self, program, bus, params: Optional[PyTree] = None):
+    def __init__(self, program, bus, params: Optional[PyTree] = None,
+                 metrics=None):
+        from repro.obs import MetricsSink
         self.program = program
         self.bus = bus
         self.params: Optional[PyTree] = (
             None if params is None else program.place_params(params))
         self.seq: int = 0            # bus seq of the weights being served
         self.train_step: int = -1    # train-step provenance (-1: initial params)
-        self.swap_pauses: List[float] = []   # host seconds per completed swap
-        self.rejected_swaps: int = 0  # snapshots refused by re-validation
+        # serving telemetry rides the unified metrics plane (repro.obs):
+        # pass a shared MetricsSink to merge with a recording trainer's, or
+        # let the server own a private in-memory one
+        self.metrics = metrics if metrics is not None else MetricsSink()
         self._bad_seq: int = 0       # last refused seq (skip re-checking it)
         self._place = None           # (FlatSpec, jitted bufs -> placed params)
+
+    @property
+    def swap_pauses(self) -> List[float]:
+        """LIVE view of the sink's ``swap_pause_s`` observations (kept for
+        pre-obs callers; mutations — e.g. ``.clear()`` — hit the sink)."""
+        return self.metrics.samples("swap_pause_s")
+
+    @property
+    def rejected_swaps(self) -> int:
+        return int(self.metrics.counters.get("rejected_swaps", 0))
 
     # ------------------------------------------------------------------- swap
     def _place_fn(self, spec):
@@ -83,7 +98,7 @@ class LiveServer:
         from repro.serve.snapshot import snapshot_valid
         ok, why = snapshot_valid(snap.bufs, snap.spec)
         if not ok:
-            self.rejected_swaps += 1
+            self.metrics.counter_add("rejected_swaps", 1)
             self._bad_seq = snap.seq
             import warnings
             warnings.warn(
@@ -93,7 +108,9 @@ class LiveServer:
         place = self._place_fn(snap.spec)
         t0 = time.perf_counter()
         self.params = place(snap.bufs)   # dispatched, not awaited
-        self.swap_pauses.append(time.perf_counter() - t0)
+        self.metrics.observe("swap_pause_s", time.perf_counter() - t0)
+        self.metrics.counter_add("swaps", 1)
+        self.metrics.gauge_set("served_seq", snap.seq)
         self.seq = snap.seq
         self.train_step = snap.train_step
         return True
@@ -128,9 +145,11 @@ class LiveServer:
 
     # ------------------------------------------------------------- accounting
     def swap_stats(self) -> dict:
-        """Swap count + mean/max pause seconds (0s when no swap happened)."""
-        n = len(self.swap_pauses)
+        """Swap count + mean/max pause seconds (0s when no swap happened) —
+        a thin view over the MetricsSink (kept for pre-obs callers)."""
+        pauses = self.metrics.samples("swap_pause_s")
+        n = len(pauses)
         return {"swaps": n,
-                "swap_pause_mean_s": (sum(self.swap_pauses) / n) if n else 0.0,
-                "swap_pause_max_s": max(self.swap_pauses) if n else 0.0,
+                "swap_pause_mean_s": (sum(pauses) / n) if n else 0.0,
+                "swap_pause_max_s": max(pauses) if n else 0.0,
                 "rejected_swaps": self.rejected_swaps}

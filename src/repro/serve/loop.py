@@ -37,8 +37,19 @@ class TrainServeLoop:
         self.server = server
         self.batcher = batcher
         self.train_fn = train_fn
-        self.boundary_times: List[float] = []   # wall s per decode boundary
-        self.staleness: List[int] = []          # train steps, per boundary
+        # both loop quantities ride the server's MetricsSink (repro.obs):
+        # boundary intervals and snapshot staleness are histogram
+        # observations, so a shared sink merges serve telemetry with a
+        # recording trainer's stream; the attributes below stay as LIVE views
+        self.metrics = server.metrics
+
+    @property
+    def boundary_times(self) -> List[float]:
+        return self.metrics.samples("boundary_interval_s")
+
+    @property
+    def staleness(self) -> List[int]:
+        return self.metrics.samples("snapshot_staleness_steps")
 
     def run(self, boundaries: int) -> None:
         for _ in range(boundaries):
@@ -48,13 +59,15 @@ class TrainServeLoop:
             step_now = self.train_fn(t) if self.train_fn is not None else None
             self.server.maybe_swap()
             if step_now is not None and self.server.train_step >= 0:
-                self.staleness.append(step_now - self.server.train_step)
+                self.metrics.observe("snapshot_staleness_steps",
+                                     step_now - self.server.train_step)
             # time the DECODE boundary alone (train slice + swap excluded):
             # the swap-pause claim budgets against this interval, so folding
             # the training slice in would flatter it
             t0 = time.perf_counter()
             self.batcher.step(t)
-            self.boundary_times.append(time.perf_counter() - t0)
+            self.metrics.observe("boundary_interval_s",
+                                 time.perf_counter() - t0)
 
     def summary(self) -> dict:
         bt = np.array(self.boundary_times or [0.0], np.float64)
